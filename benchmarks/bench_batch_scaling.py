@@ -1,0 +1,87 @@
+"""Paper Thm 4 — batch application cost O(c log c + log n).
+
+Measures device wall time of ONE jitted ``apply_batch`` as a function of
+(a) batch size c at fixed heap size n, and (b) heap size n at fixed c.
+The theorem predicts near-linear growth in c (c log c) and ~flat growth in
+n (log n) — the log n term is the sift/insert path length.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched_pq import BatchedPriorityQueue, apply_batch
+
+from .common import save
+
+
+def _time_apply(pq, ne, ins, iters=20):
+    buf = np.full((pq.c_max,), np.inf, np.float32)
+    buf[:len(ins)] = ins
+    args = (pq.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(len(ins)))
+    # warmup + compile
+    state, _, _ = apply_batch(*args, c_max=pq.c_max)
+    state.a.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, vals, k = apply_batch(*args, c_max=pq.c_max)
+        state.a.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_scaling(n_fixed=1 << 16, c_list=(2, 4, 8, 16, 32, 64),
+                  c_fixed=16, n_list=(1 << 10, 1 << 13, 1 << 16, 1 << 19),
+                  seed=0):
+    rng = np.random.default_rng(seed)
+    results = {"vary_c": [], "vary_n": []}
+
+    for c in c_list:
+        vals = rng.uniform(0, 1e6, n_fixed).astype(np.float32)
+        pq = BatchedPriorityQueue(2 * n_fixed, c_max=c, values=vals)
+        ins = rng.uniform(0, 1e6, c // 2).astype(np.float32)
+        dt = _time_apply(pq, c - c // 2, ins)
+        results["vary_c"].append({"c": c, "n": n_fixed,
+                                  "us_per_batch": round(dt * 1e6, 1),
+                                  "us_per_op": round(dt * 1e6 / c, 2)})
+        print(f"[scaling] n={n_fixed} c={c:3d}: {dt*1e6:8.1f} us/batch "
+              f"({dt*1e6/c:6.2f} us/op)")
+
+    for n in n_list:
+        vals = rng.uniform(0, 1e6, n).astype(np.float32)
+        pq = BatchedPriorityQueue(2 * n, c_max=c_fixed, values=vals)
+        ins = rng.uniform(0, 1e6, c_fixed // 2).astype(np.float32)
+        dt = _time_apply(pq, c_fixed - c_fixed // 2, ins)
+        results["vary_n"].append({"c": c_fixed, "n": n,
+                                  "us_per_batch": round(dt * 1e6, 1)})
+        print(f"[scaling] c={c_fixed} n={n:7d}: {dt*1e6:8.1f} us/batch")
+
+    # Thm-4 shape checks: us/op should not grow faster than ~log c;
+    # us/batch should grow sub-linearly in n (log n)
+    c_times = [r["us_per_batch"] for r in results["vary_c"]]
+    n_times = [r["us_per_batch"] for r in results["vary_n"]]
+    results["c_growth"] = round(c_times[-1] / c_times[0], 2)
+    results["n_growth"] = round(n_times[-1] / n_times[0], 2)
+    print(f"[scaling] batch-time growth over {c_list[0]}→{c_list[-1]} ops: "
+          f"{results['c_growth']}x (linear would be {c_list[-1]//c_list[0]}x)")
+    print(f"[scaling] batch-time growth over {n_list[0]}→{n_list[-1]} heap: "
+          f"{results['n_growth']}x (512x data growth)")
+    save("bench_batch_scaling", results)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args(argv)
+    if a.quick:
+        bench_scaling(n_fixed=1 << 13, c_list=(2, 8, 32),
+                      n_list=(1 << 10, 1 << 13, 1 << 16))
+    else:
+        bench_scaling()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Paper Fig. 1 — concurrent dynamic-graph throughput.
+
+Workloads (paper §5.1): *Tree* (one random spanning tree, half its edges
+prepopulated) and *Forest* (10 random trees); each thread applies
+AreConnected with probability c% and Insert/Delete of a tree edge with
+(100-c)/2% each, c ∈ {50, 80, 100}.
+
+Implementations: PC (batched read combining — §3.3 TPU-native variant),
+Lock (global mutex), RW Lock, FC (flat combining).  The paper's claim:
+PC > {Lock, RW Lock, FC} and the gap grows with both thread count and
+read share, because the combined read batch costs ONE vectorized device
+call regardless of batch size.
+"""
+from __future__ import annotations
+
+import argparse
+import numpy as np
+
+from repro.core.dynamic_graph import DynamicGraph
+from repro.core.flat_combining import flat_combining
+from repro.core.locks import LockDS, RWLockDS
+from repro.core.read_opt import batched_read_optimized
+
+from .common import save, throughput
+
+
+def _random_tree(rng, n):
+    """Random spanning tree edges on [0, n)."""
+    perm = rng.permutation(n)
+    return [(int(perm[i]), int(perm[rng.integers(0, i)]))
+            for i in range(1, n)]
+
+
+def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
+                read_pcts=(50, 80, 100), threads=(1, 2, 4, 8),
+                ops=200, seed=0):
+    results = []
+    for wl in workloads:
+        rng = np.random.default_rng(seed)
+        if wl == "tree":
+            trees = [_random_tree(rng, n_vertices)]
+        else:
+            trees = [_random_tree(rng, n_vertices) for _ in range(10)]
+
+        def fresh_graph():
+            g = DynamicGraph(n_vertices)
+            r = np.random.default_rng(seed + 1)
+            for t in trees:
+                for (u, v) in t:
+                    if r.random() < 0.5:
+                        g.insert(u, v)
+            return g
+
+        for c in read_pcts:
+            for P in threads:
+                impls = {
+                    "PC": lambda g: batched_read_optimized(g).execute,
+                    "Lock": lambda g: LockDS(g).execute,
+                    "RW Lock": lambda g: RWLockDS(g, g.read_only).execute,
+                    "FC": lambda g: flat_combining(g).execute,
+                }
+                for name, make in impls.items():
+                    g = fresh_graph()
+                    ex = make(g)
+
+                    def body(tid, ex=ex):
+                        r = np.random.default_rng(1000 + tid)
+                        for _ in range(ops):
+                            p = r.random() * 100
+                            if p < c:
+                                u = int(r.integers(0, n_vertices))
+                                v = int(r.integers(0, n_vertices))
+                                ex("connected", (u, v))
+                            else:
+                                t = trees[int(r.integers(0, len(trees)))]
+                                e = t[int(r.integers(0, len(t)))]
+                                if p < c + (100 - c) / 2:
+                                    ex("insert", e)
+                                else:
+                                    ex("delete", e)
+
+                    tput = throughput(P, ops, body)
+                    results.append({"workload": wl, "read_pct": c,
+                                    "threads": P, "impl": name,
+                                    "ops_per_s": round(tput, 1)})
+                    print(f"[graph] {wl} c={c}% P={P} {name:8s}"
+                          f" {tput:9.0f} ops/s")
+    save("bench_graph", results)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=1000)
+    ap.add_argument("--ops", type=int, default=200)
+    ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--reads", type=int, nargs="+", default=[50, 80, 100])
+    a = ap.parse_args(argv)
+    bench_graph(n_vertices=a.vertices, ops=a.ops, threads=tuple(a.threads),
+                read_pcts=tuple(a.reads))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    json.dump(payload, open(path, "w"), indent=1)
+    return path
+
+
+def run_threads(n: int, body: Callable[[int], None]) -> float:
+    """Run ``body(tid)`` on n threads; returns wall seconds."""
+    ts = [threading.Thread(target=body, args=(i,)) for i in range(n)]
+    t0 = time.time()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return time.time() - t0
+
+
+def throughput(n_threads: int, ops_per_thread: int,
+               body: Callable[[int], None]) -> float:
+    """ops/second across the thread group."""
+    wall = run_threads(n_threads, body)
+    return n_threads * ops_per_thread / wall

@@ -1,0 +1,209 @@
+"""Analytic FLOP / HBM-byte model per (arch × shape) — the roofline's
+compute and memory terms.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts a ``while``-loop
+body ONCE, so any scan-over-layers program under-reports FLOPs by ~n_layers
+(verified: qwen2 train_4k counts 3.89e12/dev scanned vs 1.62e13/dev
+unrolled).  The dry-run artifact keeps the production scan (compact HLO);
+FLOPs and bytes are derived here from the architecture arithmetic, and the
+model is CALIBRATED against unrolled-compile cost_analysis for small cells
+(see EXPERIMENTS.md §Roofline — agreement within ~10%).
+
+Conventions:
+  * matmul FLOPs = 2·m·n·k; a train step = fwd (1×) + bwd (2×) + remat
+    re-fwd (1× when cfg.remat) over every weight matmul.
+  * attention scores/PV = 4·S_q·S_kv_effective·H·hd per layer (2 matmuls),
+    causal halves S_kv_effective; sliding window clamps it.
+  * MoE: only routed-active expert FLOPs count (top_k + shared), i.e. the
+    per-token active parameter set — capacity overflow drops are ignored
+    (≤ a few % at cf 1.25).
+  * MODEL_FLOPS = 6·N_active·D_tokens (2 fwd + 4 bwd per active param) —
+    the "useful FLOPs" yardstick; ratio vs the full model catches
+    remat/attention/router overheads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs import SHAPES, get
+from repro.models.config import ArchConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _layer_matmul_params(cfg: ArchConfig, lspec) -> Dict[str, float]:
+    """Per-layer matmul parameter count by component (active / total)."""
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out: Dict[str, float] = {"mixer": 0, "ffn_active": 0, "ffn_total": 0}
+    m = lspec.mixer
+    if m in ("full", "local"):
+        out["mixer"] = D * H * hd + 2 * D * K * hd + H * hd * D
+    elif m == "mla":
+        a = cfg.mla
+        q_dim = H * (a.nope_head_dim + a.rope_head_dim)
+        out["mixer"] = (D * q_dim                       # q proj
+                        + D * (a.kv_lora_rank + a.rope_head_dim)
+                        + a.kv_lora_rank * H * (a.nope_head_dim
+                                                + a.v_head_dim)
+                        + H * a.v_head_dim * D)
+    elif m == "rglru":
+        R = cfg.d_rnn
+        out["mixer"] = 2 * D * R + 2 * R * R + R * D + cfg.conv_width * R
+    elif m == "rwkv6":
+        out["mixer"] = 5 * D * D + 32 * D * 7            # rkvgo + loras
+    if lspec.cross_attn:
+        out["mixer"] += D * H * hd + 2 * D * K * hd + H * hd * D
+
+    f = lspec.ffn
+    F = cfg.d_ff
+    if f == "moe":
+        mm = cfg.moe
+        per_exp = 3 * D * mm.d_ff
+        shared = 3 * D * (mm.d_ff_shared or mm.d_ff) * mm.n_shared
+        router = D * mm.n_experts
+        out["ffn_total"] = mm.n_experts * per_exp + shared + router
+        out["ffn_active"] = mm.top_k * per_exp + shared + router
+    elif f == "rwkv_cm":
+        out["ffn_active"] = out["ffn_total"] = 2 * D * F + D * D
+    elif f == "glu":
+        out["ffn_active"] = out["ffn_total"] = 3 * D * F
+    else:
+        out["ffn_active"] = out["ffn_total"] = 2 * D * F
+    return out
+
+
+def _attention_flops_fwd(cfg: ArchConfig, B: int, Sq: int, Skv: int,
+                         decode: bool) -> float:
+    """Scores+PV matmul FLOPs, all layers, forward."""
+    H, hd = cfg.n_heads, cfg.head_dim
+    total = 0.0
+    for lspec in cfg.layer_specs:
+        m = lspec.mixer
+        if m in ("rglru", "rwkv6"):
+            # linear state update: 2 FMA per state cell per token
+            if m == "rwkv6":
+                Hh = cfg.d_model // cfg.rwkv_head_dim
+                total += 4 * B * Sq * Hh * cfg.rwkv_head_dim ** 2
+            else:
+                total += 6 * B * Sq * cfg.d_rnn
+            continue
+        if m == "mla":
+            a = cfg.mla
+            qk_dim = a.nope_head_dim + a.rope_head_dim
+            v_dim = a.v_head_dim
+        else:
+            qk_dim = v_dim = hd
+        if decode:
+            eff = Skv
+        elif lspec.window:
+            # each query sees ≤ window keys (causal local)
+            eff = min(Skv, lspec.window)
+        elif cfg.causal and not lspec.cross_attn:
+            eff = Skv / 2
+        else:
+            eff = Skv
+        if lspec.cross_attn:
+            eff = cfg.n_img_tokens
+        total += 2 * B * Sq * eff * H * (qk_dim + v_dim)
+    return total
+
+
+@dataclass
+class CellCost:
+    flops_total: float          # whole step, all chips
+    model_flops: float          # 6·N_active·D yardstick
+    hbm_bytes_per_dev: float    # analytic HBM traffic per device
+    n_active: float
+    n_total: float
+
+
+def n_params(cfg: ArchConfig) -> Dict[str, float]:
+    """(active, total) matmul + embedding parameter counts."""
+    active = total = 0.0
+    for lspec in cfg.layer_specs:
+        c = _layer_matmul_params(cfg, lspec)
+        active += c["mixer"] + c["ffn_active"]
+        total += c["mixer"] + c["ffn_total"]
+    if cfg.n_prefix:
+        D = cfg.d_model
+        c = _layer_matmul_params(cfg, cfg.period[0])
+        active += c["mixer"] + 3 * D * cfg.first_layer_ffn
+        total += c["mixer"] + 3 * D * cfg.first_layer_ffn
+    emb = cfg.vocab * cfg.d_model
+    return {"active": active, "total": total, "embed": emb}
+
+
+def cell_cost(arch_id: str, shape_name: str, n_chips: int = 256) -> CellCost:
+    cfg = get(arch_id)
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    p = n_params(cfg)
+
+    if sp.kind == "train":
+        tokens = B * S
+        # fwd(2) + bwd(4) + remat re-fwd(2 when on) per matmul param
+        mm_factor = (2 + 4 + (2 if cfg.remat else 0))
+        dense_flops = mm_factor * p["active"] * tokens
+        # unembed matmul (tied embed): fwd+bwd(+remat is outside scan: no)
+        head_flops = 6 * p["embed"] * tokens
+        attn = _attention_flops_fwd(cfg, B, S, S, decode=False)
+        attn_flops = attn * (3 + (1 if cfg.remat else 0))
+        flops = dense_flops + head_flops + attn_flops
+        model_flops = 6 * (p["active"] + p["embed"]) * tokens
+
+        # HBM per device: params+grads+opt streamed once each way + acts
+        np_dev = (p["total"] + p["embed"]) / n_chips
+        param_traffic = np_dev * (BF16 * 3 + F32 * 4 * 2)   # p,g,bwd + m,v rw
+        act = B * S * cfg.d_model * BF16 / n_chips
+        act_traffic = act * cfg.n_layers * (2 if cfg.remat else 4)
+        hbm = param_traffic + act_traffic
+    elif sp.kind == "prefill":
+        tokens = B * S
+        dense_flops = 2 * p["active"] * tokens
+        head_flops = 2 * p["embed"] * tokens
+        attn_flops = _attention_flops_fwd(cfg, B, S, S, decode=False)
+        flops = dense_flops + head_flops + attn_flops
+        model_flops = 2 * (p["active"] + p["embed"]) * tokens
+        np_dev = (p["total"] + p["embed"]) / n_chips
+        act = B * S * cfg.d_model * BF16 / n_chips
+        kv_write = _kv_cache_bytes(cfg, B, S) / n_chips
+        hbm = np_dev * BF16 + act * cfg.n_layers * 2 + kv_write
+    else:  # decode: one token against a cache of S
+        tokens = B * 1
+        dense_flops = 2 * p["active"] * tokens
+        head_flops = 2 * p["embed"] * tokens
+        attn_flops = _attention_flops_fwd(cfg, B, 1, S, decode=True)
+        flops = dense_flops + head_flops + attn_flops
+        model_flops = 2 * (p["active"] + p["embed"]) * tokens
+        np_dev = (p["total"] + p["embed"]) / n_chips
+        kv = _kv_cache_bytes(cfg, B, S) / n_chips
+        hbm = np_dev * BF16 + kv                  # weights + full cache read
+    return CellCost(flops_total=flops, model_flops=model_flops,
+                    hbm_bytes_per_dev=hbm,
+                    n_active=p["active"] + p["embed"],
+                    n_total=p["total"] + p["embed"])
+
+
+def _kv_cache_bytes(cfg: ArchConfig, B: int, S: int) -> float:
+    total = 0.0
+    for lspec in cfg.layer_specs:
+        m = lspec.mixer
+        if m in ("full", "mla"):
+            if m == "mla":
+                a = cfg.mla
+                per_tok = cfg.n_heads * (a.nope_head_dim + a.rope_head_dim
+                                         + a.v_head_dim)
+            else:
+                per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+            total += B * S * per_tok * BF16
+        elif m == "local":
+            win = min(S, lspec.window + 1)
+            total += B * win * 2 * cfg.n_kv_heads * cfg.head_dim * BF16
+        elif m == "rglru":
+            total += B * cfg.d_rnn * F32
+        elif m == "rwkv6":
+            Hh = cfg.d_model // cfg.rwkv_head_dim
+            total += B * Hh * cfg.rwkv_head_dim ** 2 * F32
+    return total

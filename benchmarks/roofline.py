@@ -1,0 +1,119 @@
+"""Roofline analysis: three terms per (arch × shape × mesh) cell.
+
+Sources (per EXPERIMENTS.md §Roofline):
+  * compute term  = FLOPs / (chips × 197e12)        [analytic flops.py —
+      cost_analysis undercounts scan bodies; calibrated vs unrolled HLO]
+  * memory term   = HBM bytes / dev / 819e9          [analytic flops.py]
+  * collective term = per-device link traffic / 50e9 [parsed from the
+      compiled HLO of the dry-run — exact for the artifact we ship]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Reads experiments/dryrun/*.json, writes experiments/roofline.json and a
+markdown table to stdout / experiments/roofline.md.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.flops import cell_cost
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def analyse_cell(rec: Dict) -> Dict:
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    chips = rec["n_devices"]
+    cost = cell_cost(arch, shape, n_chips=chips)
+
+    t_compute = cost.flops_total / (chips * PEAK_FLOPS)
+    t_memory = cost.hbm_bytes_per_dev / HBM_BW
+    t_coll = rec["collectives"]["traffic_bytes_per_device"] / LINK_BW
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful-FLOPs time over the bound term
+    t_model = cost.model_flops / (chips * PEAK_FLOPS)
+    frac = t_model / bound if bound > 0 else 0.0
+
+    return {
+        "cell": rec["cell"], "arch": arch, "shape": shape, "mesh": mesh,
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": cost.model_flops,
+        "hlo_flops_raw_per_dev": rec.get("flops", 0.0),
+        "analytic_flops_total": cost.flops_total,
+        "useful_ratio": cost.model_flops / max(cost.flops_total, 1.0),
+        "roofline_fraction": frac,
+        "mem_args_gib": rec["memory"]["argument_size_in_bytes"] / 2**30,
+        "mem_temp_gib": rec["memory"]["temp_size_in_bytes"] / 2**30,
+        "coll_count": rec["collectives"]["count"],
+        "coll_by_kind": rec["collectives"]["by_kind"],
+    }
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def build_table(records: List[Dict]) -> str:
+    rows = ["| cell | compute | memory | collective | dominant | useful | "
+            "roofline-frac | args GiB | temp GiB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        rows.append(
+            f"| {r['arch']}·{r['shape']}·{r['mesh']} "
+            f"| {_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} "
+            f"| {_fmt_s(r['t_collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['mem_args_gib']:.2f} | {r['mem_temp_gib']:.2f} |")
+    return "\n".join(rows)
+
+
+def main(dryrun_dir: str = DRYRUN_DIR, mesh_filter: str = "16x16",
+         out: str = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        if mesh_filter and rec["mesh"] != mesh_filter:
+            continue
+        recs.append(analyse_cell(rec))
+    table = build_table(recs)
+    print(table)
+    out = out or os.path.join(dryrun_dir, "..", "roofline.json")
+    json.dump(recs, open(out, "w"), indent=1)
+    with open(os.path.join(os.path.dirname(out), "roofline.md"), "w") as f:
+        f.write(table + "\n")
+    # headline stats
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in recs)
+    print(f"\n{len(recs)} cells; dominant terms: {dict(doms)}")
+    worst = sorted(recs, key=lambda r: r["roofline_fraction"])[:5]
+    print("worst roofline fractions:",
+          [(r["cell"], round(r["roofline_fraction"], 3)) for r in worst])
+    return recs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    args = ap.parse_args()
+    main(args.dir, args.mesh)

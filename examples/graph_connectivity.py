@@ -1,0 +1,28 @@
+"""Fig.-1-style comparison on one workload: dynamic graph, 80% reads.
+
+Runs the same (tree workload, c=80%, P threads) cell against all four
+implementations and prints the throughput ranking the paper claims.
+
+Run:  PYTHONPATH=src python examples/graph_connectivity.py --threads 4
+"""
+import argparse
+
+from benchmarks.bench_graph import bench_graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--vertices", type=int, default=500)
+    ap.add_argument("--ops", type=int, default=150)
+    a = ap.parse_args()
+    rows = bench_graph(n_vertices=a.vertices, workloads=("tree",),
+                       read_pcts=(80,), threads=(a.threads,), ops=a.ops)
+    rows.sort(key=lambda r: -r["ops_per_s"])
+    print("\nranking @ c=80%, P=%d:" % a.threads)
+    for r in rows:
+        print(f"  {r['impl']:8s} {r['ops_per_s']:9.0f} ops/s")
+
+
+if __name__ == "__main__":
+    main()

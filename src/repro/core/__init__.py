@@ -1,0 +1,26 @@
+"""Core — the paper's contribution: parallel combining + applications."""
+from .combining import ParallelCombiner, PublicationRecord, Request, Status
+from .flat_combining import flat_combining
+from .locks import LockDS, RWLockDS
+from .seq_pq import SequentialHeap
+from .skiplist_pq import SkipListPQ
+from .batched_pq import (
+    BatchedPriorityQueue,
+    HeapState,
+    apply_batch,
+    apply_batch_reference,
+    check_heap_property,
+    heap_init,
+)
+from .read_opt import batched_read_optimized, read_optimized_combining
+from .dynamic_graph import DynamicGraph
+
+__all__ = [
+    "ParallelCombiner", "PublicationRecord", "Request", "Status",
+    "flat_combining", "LockDS", "RWLockDS",
+    "SequentialHeap", "SkipListPQ",
+    "BatchedPriorityQueue", "HeapState", "apply_batch",
+    "apply_batch_reference", "check_heap_property", "heap_init",
+    "batched_read_optimized", "read_optimized_combining",
+    "DynamicGraph",
+]

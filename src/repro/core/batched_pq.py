@@ -1,0 +1,438 @@
+"""Batched binary-heap priority queue (paper §4) — JAX, level-synchronous.
+
+The paper applies a batch of ``|E|`` ExtractMin + ``|I|`` Insert requests to a
+1-indexed array heap in ``O(c log c + log n)`` parallel time:
+
+1. the combiner finds the ``|E|`` smallest nodes with a Dijkstra-like
+   frontier search over the heap (``O(c log c)``),
+2. ``min(|E|,|I|)`` extracted slots are refilled with insert values; the
+   rest pull the heap tail (sequential, as in Gonnet–Munro),
+3. the clients sift-down **in parallel** from the extracted nodes using
+   hand-over-hand ``locked`` flags,
+4. remaining inserts descend collectively from the root, each client
+   carrying an ``InsertSet`` that is split by target-leaf counts at LCA
+   nodes.
+
+TPU adaptation (DESIGN.md §2): hand-over-hand spin flags become a
+*level-synchronous wavefront* — every active sift cursor advances one tree
+level per step inside a ``lax.while_loop``, with cursors staggered by start
+depth (deepest first).  This is exactly the phased schedule the paper's own
+Thm-4 proof reasons about; the stagger guarantees an active cursor always
+stays ≥2 levels away from any cursor below it, so the vectorized scatters
+are conflict-free and the result equals the paper's sequential execution
+order SE (deepest-first).  The InsertSet linked-list splits become sorted
+fixed-width rows split by prefix (the paper's own "segment" variant); any
+count-partition preserves Thm 2, see the inline notes.
+
+Everything is shape-static (batch capacity ``c_max`` is a compile-time
+constant; the actual counts are traced scalars with masks) so the whole
+batch application jits to a single XLA program.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(jnp.inf)
+_TINY = float(np.finfo(np.float32).tiny)        # smallest normal f32
+
+
+def _flush_subnormals(x):
+    """XLA (CPU and TPU) runs flush-to-zero; comparisons inside the device
+    heap see subnormals as 0 while the host oracle doesn't.  Normalize keys
+    on entry so both worlds agree."""
+    return jnp.where(jnp.abs(x) < _TINY, jnp.zeros_like(x), x)
+
+
+class HeapState(NamedTuple):
+    """1-indexed array heap. ``a[0]`` is a scratch slot for masked scatters."""
+
+    a: jax.Array      # (capacity,) float32, +inf marks empty slots
+    size: jax.Array   # () int32
+
+
+def heap_init(capacity: int, values=None) -> HeapState:
+    a = jnp.full((capacity,), INF, jnp.float32)
+    size = jnp.int32(0)
+    if values is not None:
+        values = jnp.sort(_flush_subnormals(jnp.asarray(values, jnp.float32)))
+        (n,) = values.shape
+        if n + 1 > capacity:
+            raise ValueError("capacity too small")
+        # a sorted array satisfies the heap property (parent idx < child idx)
+        a = a.at[1 : n + 1].set(values)
+        size = jnp.int32(n)
+    return HeapState(a, size)
+
+
+def _depth(v: jax.Array) -> jax.Array:
+    """floor(log2(v)) for v >= 1, via count-leading-zeros."""
+    return 31 - jax.lax.clz(jnp.maximum(v, 1).astype(jnp.int32))
+
+
+def _gather(a: jax.Array, idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """a[idx] where valid, +inf elsewhere; idx clipped for safety."""
+    safe = jnp.clip(idx, 0, a.shape[0] - 1)
+    return jnp.where(valid, a[safe], INF)
+
+
+# ---------------------------------------------------------------------------
+# Phase 1 — combiner: Dijkstra-like frontier search for the k smallest nodes
+# ---------------------------------------------------------------------------
+def _k_smallest(a: jax.Array, size: jax.Array, n_extract: jax.Array,
+                c_max: int) -> Tuple[jax.Array, jax.Array]:
+    """Node ids + values of the ``min(n_extract, size)`` smallest heap nodes.
+
+    Returned in ascending value order; padded with (0, +inf).
+    The frontier holds candidate nodes whose parents were already taken —
+    the heap property makes the running frontier-min the global next-min.
+    """
+    F = 2 * c_max + 1
+    f_ids = jnp.zeros((F,), jnp.int32).at[0].set(1)
+    f_vals = jnp.full((F,), INF, jnp.float32).at[0].set(
+        jnp.where(size >= 1, a[1], INF)
+    )
+
+    def step(carry, i):
+        f_ids, f_vals, nfree = carry
+        j = jnp.argmin(f_vals)
+        v, val = f_ids[j], f_vals[j]
+        active = (i < n_extract) & jnp.isfinite(val)
+        l, r = 2 * v, 2 * v + 1
+        lval = _gather(a, l, active & (l <= size))
+        rval = _gather(a, r, active & (r <= size))
+        # replace the taken slot with the left child, append the right child
+        f_ids = f_ids.at[j].set(jnp.where(active, l, f_ids[j]))
+        f_vals = f_vals.at[j].set(jnp.where(active, lval, f_vals[j]))
+        slot = jnp.where(active, nfree, F - 1)
+        f_ids = f_ids.at[slot].set(jnp.where(active, r, f_ids[slot]))
+        f_vals = f_vals.at[slot].set(jnp.where(active, rval, f_vals[slot]))
+        nfree = nfree + active.astype(jnp.int32)
+        out = (jnp.where(active, v, 0), jnp.where(active, val, INF))
+        return (f_ids, f_vals, nfree), out
+
+    (_, _, _), (ids, vals) = jax.lax.scan(
+        step, (f_ids, f_vals, jnp.int32(1)), jnp.arange(c_max, dtype=jnp.int32)
+    )
+    return ids, vals
+
+
+# ---------------------------------------------------------------------------
+# Phase 2 — combiner: refill extracted slots (inserts first, then heap tail)
+# ---------------------------------------------------------------------------
+def _refill(a, size, out_ids, insert_vals, k_eff, L, c_max):
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+
+    # (a) the L smallest extracted nodes receive the L smallest insert values
+    idx = jnp.where(lane < L, out_ids, 0)
+    a = a.at[idx].set(jnp.where(lane < L, insert_vals, a[idx]))
+    a = a.at[0].set(INF)
+
+    # (b) remaining extracted nodes pull the heap tail — processed in
+    # DESCENDING node order so a pulled tail slot is never an unprocessed
+    # extracted node (tail position == current size >= any remaining id).
+    tail_ids = jnp.where((lane >= L) & (lane < k_eff), out_ids, -1)
+    tail_sorted = -jnp.sort(-tail_ids)  # descending, -1 padding last
+
+    def pull(carry, v):
+        a, size = carry
+        active = v > 0
+        last = _gather(a, size, active)
+        tgt = jnp.where(active & (v < size), v, 0)
+        a = a.at[tgt].set(jnp.where(tgt > 0, last, a[tgt]))
+        clr = jnp.where(active, size, 0)
+        a = a.at[clr].set(jnp.where(active, INF, a[clr]))
+        a = a.at[0].set(INF)
+        size = size - active.astype(jnp.int32)
+        return (a, size), None
+
+    (a, size), _ = jax.lax.scan(pull, (a, size), tail_sorted)
+    return a, size
+
+
+# ---------------------------------------------------------------------------
+# Phase 3 — clients: parallel sift-down wavefront (ExtractMin phase, §4)
+# ---------------------------------------------------------------------------
+def _sift_wavefront(a, size, starts, active0):
+    """Level-synchronous parallel sift-down from ``starts``.
+
+    Cursors staggered by depth (deepest start first — the paper's SE order);
+    while two cursors are both active the lower one stays ≥2 levels deeper,
+    so each step's two scatters touch pairwise-distinct nodes.
+    """
+    cap = a.shape[0]
+    depths = _depth(starts)
+    d_max = jnp.max(jnp.where(active0, depths, 0))
+    delay = d_max - depths
+
+    def cond(st):
+        return jnp.any(st[3])
+
+    def body(st):
+        step, a, pos, active = st
+        moving = active & (step >= delay)
+        v = jnp.where(moving, pos, 0)
+        l, r = 2 * v, 2 * v + 1
+        av = a[jnp.clip(v, 0, cap - 1)]
+        lv = _gather(a, l, moving & (l <= size))
+        rv = _gather(a, r, moving & (r <= size))
+        wv = jnp.minimum(lv, rv)
+        w = jnp.where(lv <= rv, l, r)
+        swap = moving & (wv < av)
+        active = active & ~(moving & ~swap)
+        sv = jnp.where(swap, v, 0)
+        a = a.at[sv].set(jnp.where(swap, wv, a[sv]))
+        sw = jnp.where(swap, w, 0)
+        a = a.at[sw].set(jnp.where(swap, av, a[sw]))
+        a = a.at[0].set(INF)
+        pos = jnp.where(swap, w, pos)
+        return (step + 1, a, pos, active)
+
+    _, a, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), a, starts, active0)
+    )
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Phase 4 — clients: collective insert along partitioned root→leaf paths
+# ---------------------------------------------------------------------------
+def _replace_head_sorted(S: jax.Array, x: jax.Array, do: jax.Array) -> jax.Array:
+    """Drop S[0], insert x, keep the row sorted (width-C, +inf padded)."""
+    C = S.shape[0]
+    lane = jnp.arange(C)
+    shifted = jnp.concatenate([S[1:], jnp.full((1,), INF, S.dtype)])
+    k = jnp.sum(shifted <= x)  # insertion point
+    src = jnp.where(lane < k, lane, jnp.maximum(lane - 1, 0))
+    merged = jnp.where(lane == k, x, shifted[src])
+    return jnp.where(do, merged, S)
+
+
+def _insert_chunk(a, size, chunk_vals, m_chunk, c_max, max_depth):
+    """Insert ``m_chunk`` sorted values at positions size+1 .. size+m_chunk.
+
+    Precondition: all target positions live on ONE tree level (the caller
+    splits batches at level boundaries), so the target-ancestor set at every
+    depth is a contiguous id range and subtree∩targets counts need no
+    level summation.
+    """
+    C = c_max
+    lane = jnp.arange(C, dtype=jnp.int32)
+    lo_c = size + 1
+    hi_c = size + m_chunk
+    d_c = _depth(lo_c)                      # depth of every target
+    nonempty = m_chunk > 0
+
+    def tcount(v, d):
+        """#targets in subtree(v) for v at depth d (single-level targets)."""
+        shift = jnp.maximum(d_c - d, 0)
+        vlo = v << shift
+        vhi = vlo + (jnp.int32(1) << shift) - 1
+        cnt = jnp.maximum(
+            0, jnp.minimum(hi_c, vhi) - jnp.maximum(lo_c, vlo) + 1
+        )
+        return jnp.where(v > 0, cnt, 0)
+
+    # depth-0 state: one active slot (the root) holding all chunk values
+    S0 = jnp.where((lane < m_chunk) & nonempty, chunk_vals, INF)
+    sets0 = jnp.full((C, C), INF, jnp.float32).at[0].set(S0)
+
+    def level(d, carry):
+        a, sets = carry
+        d = jnp.int32(d)
+        live = nonempty & (d <= d_c)
+        lo_d = lo_c >> jnp.maximum(d_c - d, 0)
+        hi_d = hi_c >> jnp.maximum(d_c - d, 0)
+        v = lo_d + lane                       # slot -> node id
+        slot_on = live & (v <= hi_d)
+        is_leaf = d == d_c
+
+        minS = sets[:, 0]
+        av = a[jnp.clip(jnp.where(slot_on, v, 0), 0, a.shape[0] - 1)]
+
+        # internal existing node: place min(S, a[v]), displace a[v] into S
+        do_swap = slot_on & ~is_leaf & (minS < av)
+        # leaf target: place min(S) (the set has exactly one value here)
+        place = jnp.where(do_swap | (slot_on & is_leaf), minS, av)
+        tgt = jnp.where(slot_on & (do_swap | is_leaf), v, 0)
+        a = a.at[tgt].set(jnp.where(tgt > 0, place, a[tgt]))
+        a = a.at[0].set(INF)
+        sets = jax.vmap(_replace_head_sorted)(sets, av, do_swap)
+
+        # split each set by target counts of the two children (prefix split
+        # of a sorted row — any count-partition preserves Thm 2 because the
+        # running min is placed at every node top-down)
+        Lc = tcount(2 * v, d + 1)
+        split_on = slot_on & ~is_leaf
+
+        def split_row(S, lcnt):
+            left = jnp.where(lane < lcnt, S, INF)
+            right_src = jnp.clip(lane + lcnt, 0, C - 1)
+            right = jnp.where(lane + lcnt < C, S[right_src], INF)
+            return left, right
+
+        left, right = jax.vmap(split_row)(sets, Lc)
+
+        lo_next = lo_c >> jnp.maximum(d_c - (d + 1), 0)
+        hi_next = hi_c >> jnp.maximum(d_c - (d + 1), 0)
+        # child slot ids are unique per node; out-of-active-range children
+        # (and inactive rows) go to a dedicated dump row C so they can never
+        # clobber a genuine row (width at depth d+1 is <= m_chunk <= C)
+        nxt = jnp.full((C + 1, C), INF, jnp.float32)
+        lraw = 2 * v - lo_next
+        rraw = 2 * v + 1 - lo_next
+        ok_l = split_on & (lraw >= 0) & (lraw <= hi_next - lo_next)
+        ok_r = split_on & (rraw >= 0) & (rraw <= hi_next - lo_next)
+        lslot = jnp.where(ok_l, lraw, C)
+        rslot = jnp.where(ok_r, rraw, C)
+        nxt = nxt.at[lslot].set(jnp.where(ok_l[:, None], left, nxt[lslot]))
+        nxt = nxt.at[rslot].set(jnp.where(ok_r[:, None], right, nxt[rslot]))
+        sets = jnp.where(live & ~is_leaf, nxt[:C], sets)
+        return (a, sets)
+
+    a, _ = jax.lax.fori_loop(0, max_depth + 1, level, (a, sets0))
+    size = size + jnp.where(nonempty, m_chunk, 0)
+    return a, size
+
+
+# ---------------------------------------------------------------------------
+# The full batch application (paper §4, COMBINER_CODE + CLIENT_CODE fused
+# into one SPMD program — the "clients" are the vector lanes)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("c_max", "use_pallas"))
+def apply_batch(state: HeapState, n_extract: jax.Array,
+                insert_vals: jax.Array, n_insert: jax.Array,
+                *, c_max: int,
+                use_pallas: bool = False) -> Tuple[HeapState, jax.Array, jax.Array]:
+    """Apply a combined batch.
+
+    Args:
+      state: heap state.
+      n_extract: () int32 — number of ExtractMin requests (≤ c_max).
+      insert_vals: (c_max,) float32 — insert arguments (first n_insert valid).
+      n_insert: () int32 — number of Insert requests (≤ c_max).
+
+    Returns:
+      (new_state, extracted (c_max,) ascending +inf-padded, k_eff) where
+      k_eff = min(n_extract, size) is the number of successful extracts.
+    """
+    a, size = state
+    cap = a.shape[0]
+    max_depth = int(np.ceil(np.log2(cap))) + 1
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+
+    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
+    n_insert = jnp.minimum(jnp.int32(n_insert), c_max)
+    insert_vals = _flush_subnormals(insert_vals.astype(jnp.float32))
+    insert_vals = jnp.sort(jnp.where(lane < n_insert, insert_vals, INF))
+
+    # phase 1: k smallest
+    out_ids, out_vals = _k_smallest(a, size, n_extract, c_max)
+    k_eff = jnp.minimum(n_extract, size)
+    L = jnp.minimum(k_eff, n_insert)
+
+    # phase 2: refill
+    a, size = _refill(a, size, out_ids, insert_vals, k_eff, L, c_max)
+
+    # phase 3: parallel sift wavefront from still-valid extracted nodes
+    starts = jnp.where(lane < k_eff, out_ids, 0)
+    active = (lane < k_eff) & (starts >= 1) & (starts <= size)
+    if use_pallas:
+        from repro.kernels.heap_sift import sift_wavefront as _sift_k
+        a = _sift_k(a, size, starts, active)
+    else:
+        a = _sift_wavefront(a, size, starts, active)
+
+    # phase 4: remaining inserts, chunked at level boundaries
+    m_left = n_insert - L
+    rem = _gather(insert_vals, lane + L, lane < m_left)  # sorted suffix
+
+    def chunk(_, carry):
+        a, size, off, left = carry
+        lo = size + 1
+        level_end = (jnp.int32(2) << _depth(lo)) - 1   # last id on lo's level
+        m = jnp.minimum(left, level_end - lo + 1)
+        vals = _gather(rem, off + lane, lane < m)
+        if use_pallas:
+            from repro.kernels.heap_insert import insert_chunk as _ins_k
+            a, size = _ins_k(a, size, vals, m)
+        else:
+            a, size = _insert_chunk(a, size, vals, m, c_max, max_depth)
+        return (a, size, off + m, left - m)
+
+    a, size, _, _ = jax.lax.fori_loop(
+        0, max_depth + 1, chunk, (a, size, jnp.int32(0), m_left)
+    )
+
+    return HeapState(a, size), out_vals, k_eff
+
+
+# ---------------------------------------------------------------------------
+# Reference oracle (paper batch semantics, sequential numpy)
+# ---------------------------------------------------------------------------
+def apply_batch_reference(values, n_extract, insert_vals):
+    """Set-semantics oracle: extracted = k smallest of the pre-batch heap,
+    new multiset = (old \\ extracted) ∪ inserts.  Returns (extracted_sorted,
+    new_multiset_sorted)."""
+    vals = sorted(values)
+    k = min(n_extract, len(vals))
+    extracted = vals[:k]
+    remaining = vals[k:] + list(insert_vals)
+    return extracted, sorted(remaining)
+
+
+def check_heap_property(a: np.ndarray, size: int) -> bool:
+    for v in range(2, size + 1):
+        if a[v // 2] > a[v]:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrapper
+# ---------------------------------------------------------------------------
+class BatchedPriorityQueue:
+    """Device-resident PQ with batch application (the §4 data structure)."""
+
+    def __init__(self, capacity: int, c_max: int, values=None,
+                 use_pallas: bool = False):
+        if c_max < 1:
+            raise ValueError("c_max must be >= 1")
+        self.c_max = int(c_max)
+        self.capacity = int(capacity)
+        self.use_pallas = bool(use_pallas)
+        self.state = heap_init(capacity, values)
+
+    def __len__(self) -> int:
+        return int(self.state.size)
+
+    def apply(self, extracts: int, inserts) -> list:
+        """Apply a combined batch; returns the extracted values (floats)."""
+        inserts = list(inserts)
+        out: list = []
+        # batches larger than c_max are applied in c_max slices (still one
+        # device program per slice)
+        while extracts > 0 or inserts:
+            ne = min(extracts, self.c_max)
+            ni = min(len(inserts), self.c_max)
+            buf = np.full((self.c_max,), np.inf, np.float32)
+            buf[:ni] = inserts[:ni]
+            self.state, vals, k_eff = apply_batch(
+                self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
+                c_max=self.c_max, use_pallas=self.use_pallas,
+            )
+            k = int(k_eff)
+            out.extend(np.asarray(vals)[:k].tolist())
+            out.extend([None] * (ne - k))      # empty-heap extracts
+            extracts -= ne
+            inserts = inserts[ni:]
+        return out
+
+    def values(self) -> list:
+        a = np.asarray(self.state.a)
+        n = int(self.state.size)
+        return sorted(a[1 : n + 1].tolist())

@@ -1,0 +1,189 @@
+"""Parallel combining engine — faithful to Listing 1 of the paper.
+
+The engine is parameterized (as in §3.1) by:
+
+* ``combiner_code(engine, requests)``  — COMBINER_CODE
+* ``client_code(engine, request)``     — CLIENT_CODE
+* the request ``Status`` set (PUSHED / STARTED / SIFT / FINISHED)
+
+Shared state mirrors the paper's ``FC`` record: a global lock, a combining
+pass counter ``count`` and the ``head`` of the *publication list* — a linked
+list of per-thread publication records.  A record that has not participated
+in recent combining passes (``count - last`` large) is evicted during the
+periodic ``cleanup`` (paper: every 1000th pass).
+
+Hardware adaptation (see DESIGN.md §2): CPython has no CAS primitive, so the
+``cas(FC.head, head, p)`` of Listing 1 is emulated with a dedicated mutex
+(``_head_cas``); the global lock's try-acquire is
+``threading.Lock.acquire(blocking=False)``.  Busy-wait loops yield the GIL
+via ``time.sleep(0)`` so the host tier stays live on a single core.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Any, Callable, List, Optional
+
+
+class Status(IntEnum):
+    """STATUS_SET of the paper (§3.1, §3.3, §4)."""
+
+    PUSHED = 0      # request is active, not yet picked up
+    STARTED = 1     # read-dominated transform: combiner released the read
+    SIFT = 2        # batched heap: client must run its sift/insert phase
+    FINISHED = 3    # request served; ``res`` is valid
+
+
+@dataclass
+class Request:
+    """A published request (method + input + status + response + aux)."""
+
+    method: Optional[str] = None
+    input: Any = None
+    status: Status = Status.FINISHED
+    res: Any = None
+    # auxiliary fields used by the batched-PQ application (§4)
+    start: int = 0          # id of the node the client starts its phase from
+    aux: Any = None
+
+
+class PublicationRecord:
+    __slots__ = ("next", "request", "last", "owner", "in_list")
+
+    def __init__(self, owner: int = -1):
+        self.next: Optional["PublicationRecord"] = None
+        self.request = Request()
+        self.last = 0            # id of the last combining pass that served us
+        self.owner = owner
+        self.in_list = False
+
+
+class ParallelCombiner:
+    """The parameterized parallel-combining engine (Listing 1)."""
+
+    def __init__(
+        self,
+        combiner_code: Callable[["ParallelCombiner", List[Request]], None],
+        client_code: Callable[["ParallelCombiner", Request], None],
+        cleanup_every: int = 1000,
+        age_limit: int = 2000,
+    ):
+        self.combiner_code = combiner_code
+        self.client_code = client_code
+        self.cleanup_every = cleanup_every
+        self.age_limit = age_limit
+
+        self.lock = threading.Lock()              # the global lock
+        self.count = 0                            # combining pass counter
+        self.head: Optional[PublicationRecord] = None
+        self._head_cas = threading.Lock()         # CAS emulation on ``head``
+        self._tls = threading.local()
+        # instrumentation
+        self.passes = 0
+        self.combined_sizes: List[int] = []
+
+    # -- publication list -------------------------------------------------
+    def _record(self) -> PublicationRecord:
+        rec = getattr(self._tls, "rec", None)
+        if rec is None:
+            rec = PublicationRecord(owner=threading.get_ident())
+            self._tls.rec = rec
+        return rec
+
+    def _cas_head(self, expect: Optional[PublicationRecord],
+                  new: PublicationRecord) -> bool:
+        with self._head_cas:
+            if self.head is expect:
+                self.head = new
+                return True
+            return False
+
+    def add_publication(self, p: PublicationRecord) -> None:
+        """Listing 1, ``addPublication`` (lines 49-56)."""
+        if p.in_list:
+            return
+        while True:
+            head = self.head
+            p.next = head
+            p.in_list = True
+            if self._cas_head(head, p):
+                return
+
+    def get_requests(self) -> List[Request]:
+        """Listing 1, ``getRequests`` (lines 58-65): collect PUSHED requests."""
+        node = self.head
+        out: List[Request] = []
+        while node is not None:
+            if node.request.status == Status.PUSHED:
+                out.append(node.request)
+                node.last = self.count
+            node = node.next
+        return out
+
+    def cleanup(self) -> None:
+        """Listing 1, ``cleanup`` (lines 67-77): age-based record eviction.
+
+        Only the combiner (lock holder) unlinks records; a removed record's
+        owner re-adds it via ``add_publication`` on its next spin iteration.
+        """
+        prev = self.head
+        if prev is None:
+            return
+        node = prev.next
+        while node is not None:
+            nxt = node.next
+            if (
+                self.count - node.last > self.age_limit
+                and node.request.status == Status.FINISHED
+            ):
+                prev.next = nxt
+                node.in_list = False
+            else:
+                prev = node
+            node = nxt
+
+    # -- the execute protocol ---------------------------------------------
+    def execute(self, method: str, input: Any = None) -> Any:
+        """Listing 1, ``execute`` (lines 20-47)."""
+        p = self._record()
+        r = p.request
+        r.method = method
+        r.input = input
+        r.res = None
+        r.start = 0
+        r.aux = None
+        # the status field is initialized *last* (paper step 1)
+        r.status = Status.PUSHED
+
+        self.add_publication(p)
+        while r.status != Status.FINISHED:
+            if self.lock.acquire(blocking=False):
+                try:
+                    # we are the combiner
+                    self.add_publication(p)
+                    self.count += 1
+                    requests = self.get_requests()
+                    self.passes += 1
+                    self.combined_sizes.append(len(requests))
+                    self.combiner_code(self, requests)
+                    if self.count % self.cleanup_every == 0:
+                        self.cleanup()
+                finally:
+                    self.lock.release()
+            else:
+                # we are a client
+                while r.status == Status.PUSHED and self.lock.locked():
+                    self.add_publication(p)
+                    time.sleep(0)  # GIL yield (spin-wait adaptation)
+                if r.status == Status.PUSHED:
+                    continue       # lock was released; retry as combiner
+                self.client_code(self, r)
+        return r.res
+
+    # helper for combiner/client codes that need to block on a status change
+    @staticmethod
+    def wait_while(request: Request, status: Status) -> None:
+        while request.status == status:
+            time.sleep(0)

@@ -1,0 +1,57 @@
+"""Parallel-combining priority queue (§4 wired into the §3.1 engine).
+
+The combiner drains the publication list, splits requests into E (extract)
+and I (insert) exactly as §4, and applies the combined batch as ONE device
+program (`BatchedPriorityQueue.apply`) — phases 1-4 of the paper run inside
+it, with device lanes playing the clients.  CLIENT_CODE is empty on the
+host: the lanes already did the sift/insert work.
+
+The paper's `|A| > size/4 → classic combining` rule was a performance
+heuristic for the 64-thread host; our batched implementation is correct for
+any batch/size ratio (fuzzed including batch > size), so the fallback is
+kept only as an optional policy knob.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .batched_pq import BatchedPriorityQueue
+from .combining import ParallelCombiner, Request, Status
+from .seq_pq import SequentialHeap
+
+
+def pc_priority_queue(pq: BatchedPriorityQueue, *,
+                      sequential_fallback: bool = False,
+                      **kw) -> ParallelCombiner:
+    def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
+        extracts = [r for r in requests if r.method == "extract_min"]
+        inserts = [r for r in requests if r.method == "insert"]
+        if sequential_fallback and len(requests) * 4 > max(1, len(pq)):
+            # classic (flat) combining path, one op at a time
+            for r in requests:
+                if r.method == "insert":
+                    pq.apply(0, [r.input])
+                else:
+                    out = pq.apply(1, [])
+                    r.res = out[0]
+                r.status = Status.FINISHED
+            return
+        res = pq.apply(len(extracts), [r.input for r in inserts])
+        for r, v in zip(extracts, res):
+            r.res = v
+            r.status = Status.FINISHED
+        for r in inserts:
+            r.res = None
+            r.status = Status.FINISHED
+
+    def client_code(engine: ParallelCombiner, r: Request) -> None:
+        return
+
+    return ParallelCombiner(combiner_code, client_code, **kw)
+
+
+def fc_priority_queue(**kw) -> ParallelCombiner:
+    """Flat-combining binary heap (the paper's FC Binary baseline)."""
+    from .flat_combining import flat_combining
+
+    return flat_combining(SequentialHeap(), **kw)

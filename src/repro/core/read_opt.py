@@ -1,0 +1,97 @@
+"""Read-dominated transform (paper §3.3): updates sequential, reads parallel.
+
+Two realizations:
+
+* ``read_optimized_combining`` — the Listing-2/3-faithful host tier: the
+  combiner applies updates sequentially, flips read requests to STARTED,
+  executes its own read, and waits; each *client thread* executes its own
+  read (CLIENT_CODE) and flips itself to FINISHED.
+
+* ``BatchedReadOptimized`` — the TPU-native tier (DESIGN.md §2): the
+  "clients" are vector lanes.  The combiner applies the update list
+  sequentially, then answers the whole read list with ONE vectorized device
+  call (``read_batch``).  This is the variant the dynamic-graph benchmark
+  uses: free cycles = XLA lanes instead of spinning threads.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Protocol, Sequence, Set
+
+from .combining import ParallelCombiner, Request, Status
+
+
+class ReadWriteDS(Protocol):
+    read_only: Set[str]
+
+    def apply(self, method: str, input: Any) -> Any:  # pragma: no cover
+        ...
+
+
+def read_optimized_combining(ds: ReadWriteDS, **kw) -> ParallelCombiner:
+    """Faithful §3.3 transform (Listings 2 and 3)."""
+
+    def is_update(method: str) -> bool:
+        return method not in ds.read_only
+
+    def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
+        updates = [r for r in requests if is_update(r.method)]
+        reads = [r for r in requests if not is_update(r.method)]
+        # updates: sequential (Listing 2, lines 11-13)
+        for r in updates:
+            r.res = ds.apply(r.method, r.input)
+            r.status = Status.FINISHED
+        # reads: release the clients (lines 15-16)
+        for r in reads:
+            r.status = Status.STARTED
+        # the combiner's own request may be a read (lines 18-20)
+        own = engine._record().request
+        if any(r is own for r in reads) and own.status == Status.STARTED:
+            own.res = ds.apply(own.method, own.input)
+            own.status = Status.FINISHED
+        # wait until every read is done (lines 22-23)
+        for r in reads:
+            ParallelCombiner.wait_while(r, Status.STARTED)
+
+    def client_code(engine: ParallelCombiner, r: Request) -> None:
+        if is_update(r.method):
+            return                      # already FINISHED by the combiner
+        r.res = ds.apply(r.method, r.input)
+        r.status = Status.FINISHED
+
+    return ParallelCombiner(combiner_code, client_code, **kw)
+
+
+class BatchedReadDS(Protocol):
+    read_only: Set[str]
+
+    def apply(self, method: str, input: Any) -> Any:  # pragma: no cover
+        ...
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:  # pragma: no cover
+        ...
+
+
+def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
+    """TPU-native §3.3: the read batch is one vectorized device call."""
+
+    def is_update(method: str) -> bool:
+        return method not in ds.read_only
+
+    def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
+        updates = [r for r in requests if is_update(r.method)]
+        reads = [r for r in requests if not is_update(r.method)]
+        for r in updates:
+            r.res = ds.apply(r.method, r.input)
+            r.status = Status.FINISHED
+        if reads:
+            results = ds.read_batch([r.method for r in reads],
+                                    [r.input for r in reads])
+            for r, res in zip(reads, results):
+                r.res = res
+                r.status = Status.FINISHED
+
+    def client_code(engine: ParallelCombiner, r: Request) -> None:
+        return  # lanes did the work; nothing left for the thread
+
+    return ParallelCombiner(combiner_code, client_code, **kw)

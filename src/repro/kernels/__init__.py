@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each subpackage ships three artifacts:
+
+* ``kernel.py`` — the ``pl.pallas_call`` + ``BlockSpec`` TPU kernel (the
+  *target* artifact; tiled for VMEM/MXU),
+* ``ops.py``    — the jit'd public wrapper (layout handling, padding,
+  ``interpret=True`` fallback on non-TPU backends),
+* ``ref.py``    — the pure-``jnp`` oracle the tests ``assert_allclose``
+  against.
+
+Kernels:
+  flash_attention — blockwise online-softmax attention (GQA, causal,
+                    sliding window, logit softcap).  Prefill/train hot spot.
+  linear_scan     — chunked gated linear recurrences: RWKV-6 (matrix state,
+                    data-dependent per-channel decay) and RG-LRU (diagonal).
+  heap_sift       — paper §4 ExtractMin phase: the parallel sift-down
+                    wavefront over a VMEM-resident array heap.
+  heap_insert     — paper §4 Insert phase: level-synchronous collective
+                    insert with InsertSet split rows.
+"""

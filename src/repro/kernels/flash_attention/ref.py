@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (Sq, Skv) score matrix in f32 — O(S^2) memory, exact
+softmax.  The kernel must ``assert_allclose`` against this for every
+(shape, dtype, flag) combination in the sweep.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def attention_reference(
+    q: jax.Array,              # (B, Sq, H, hd)
+    k: jax.Array,              # (B, Skv, K, hd)
+    v: jax.Array,              # (B, Skv, K, hd_v)
+    *,
+    causal: bool = True,
+    window: int = 0,           # 0 = unlimited; else k_pos > q_pos - window
+    scale: Optional[float] = None,
+    cap: float = 0.0,          # logit softcap (gemma2-style); 0 = off
+    q_offset: int = 0,         # absolute position of q[0] (prefill continuation)
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    hd_v = v.shape[-1]
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qf, k.astype(jnp.float32)) * scale
+    if cap:
+        s = jnp.float32(cap) * jnp.tanh(s / jnp.float32(cap))
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckh->bkgqh", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd_v).astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import insert_chunk  # noqa: F401

@@ -1,0 +1,175 @@
+"""Paper §4 Insert phase as a Pallas TPU kernel (one level-chunk).
+
+The collective insert places ``m`` sorted values at leaf targets
+``size+1 .. size+m`` (all on one tree level — the caller splits batches at
+level boundaries).  Clients descend level-by-level from the root; each
+carries an ``InsertSet`` that is split by the number of target leaves in
+each child's subtree.  The shared-memory paper version hands linked-list
+splits between threads; the TPU adaptation keeps ALL the per-level client
+state as one dense ``(C, C)`` f32 matrix in VMEM (row = client slot at the
+current level, entries = that client's sorted InsertSet, +inf padded) and
+replaces the pointer hand-off with three *vectorizable* primitives:
+
+* row "replace-head keeping sorted" — predicated vector merge,
+* per-row prefix split by target counts — mask + comparison-indexed shift
+  (the ``sel`` tensor is (C,C,C) f32: C ≤ 64 keeps it ≤ 1 MiB in VMEM),
+* parent-row gather for the next level — a one-hot (C,C)×(C,C) matmul
+  (MXU work, no dynamic gather needed).
+
+Heap array access per level is one *contiguous* dynamic slice
+``a[lo_d : lo_d + C]`` (the target-ancestor set at one depth is an id
+interval) — VMEM-friendly streaming, no scatter.
+
+Descent is top-down over ``max_depth`` levels (a static bound derived from
+capacity), so the whole phase is ONE kernel launch regardless of batch
+shape — the pure-XLA fallback in ``core/batched_pq.py`` is the semantics
+twin and the element-wise oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = jnp.inf
+# In-kernel InsertSet padding: a FINITE sentinel.  The row-gather is a
+# one-hot matmul and the split a selector-sum; with +inf padding the
+# predicated zeros produce 0*inf = NaN.  Heap values must be < BIG (the
+# wrapper rejects larger); the heap array itself still uses +inf for empty.
+BIG = 1e30
+
+
+def _replace_head_sorted_rows(sets, x, do):
+    """Per-row: drop row[0], insert x, keep sorted.  sets (C,C), x,do (C,)."""
+    C = sets.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    shifted = jnp.concatenate(
+        [sets[:, 1:], jnp.full((C, 1), BIG, sets.dtype)], axis=1)
+    k = jnp.sum(shifted <= x[:, None], axis=1)          # insertion point
+    shifted_r1 = jnp.concatenate(
+        [jnp.full((C, 1), BIG, sets.dtype), shifted[:, :-1]], axis=1)
+    merged = jnp.where(lane == k[:, None], x[:, None],
+                       jnp.where(lane < k[:, None], shifted, shifted_r1))
+    return jnp.where(do[:, None], merged, sets)
+
+
+def _shift_rows_left(sets, amt):
+    """right[j, i] = sets[j, i + amt[j]] (INF beyond) — no dynamic gather:
+    selector tensor sel[j,k,i] = (k == i + amt[j]), contracted on k."""
+    C = sets.shape[1]
+    kk = jax.lax.broadcasted_iota(jnp.int32, (C, C, C), 1)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C, C), 2)
+    sel = kk == ii + amt[:, None, None]
+    # einsum 'jk,jki->ji' as predicated select + reduce (VPU-friendly)
+    out = jnp.sum(jnp.where(sel, sets[:, :, None], 0.0), axis=1)
+    oob = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1) \
+        + amt[:, None] >= C
+    return jnp.where(oob, BIG, out)
+
+
+def _insert_kernel(size_ref, m_ref, vals_ref, a_ref, out_ref,
+                   *, c_max: int, cap: int, max_depth: int):
+    out_ref[...] = a_ref[...]
+    C = c_max
+    size = size_ref[0]
+    m = m_ref[0]
+    lane = jax.lax.iota(jnp.int32, C)
+
+    lo_c = size + 1
+    hi_c = size + m
+    d_c = 31 - jax.lax.clz(jnp.maximum(lo_c, 1))
+    nonempty = m > 0
+
+    def tcount(v, d):
+        """#targets in subtree(v), v at depth d (targets on one level d_c)."""
+        shift = jnp.maximum(d_c - d, 0)
+        vlo = v << shift
+        vhi = vlo + (jnp.int32(1) << shift) - 1
+        cnt = jnp.maximum(
+            0, jnp.minimum(hi_c, vhi) - jnp.maximum(lo_c, vlo) + 1)
+        return jnp.where(v > 0, cnt, 0)
+
+    vals = vals_ref[...]
+    S0 = jnp.where((lane < m) & nonempty, vals, BIG)
+    sets0 = jnp.full((C, C), BIG, jnp.float32)
+    sets0 = jnp.where(
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) == 0, S0[None, :],
+        sets0)
+
+    def level(d, sets):
+        d = jnp.int32(d)
+        live = nonempty & (d <= d_c)
+        lo_d = lo_c >> jnp.maximum(d_c - d, 0)
+        hi_d = hi_c >> jnp.maximum(d_c - d, 0)
+        v = lo_d + lane
+        slot_on = live & (v <= hi_d)
+        is_leaf = d == d_c
+
+        lo_safe = jnp.clip(lo_d, 0, cap - C)
+        block = pl.load(out_ref, (pl.dslice(lo_safe, C),))
+        av = block                                      # a[v] per slot
+        minS = sets[:, 0]
+
+        do_swap = slot_on & ~is_leaf & (minS < av)
+        place = jnp.where(do_swap | (slot_on & is_leaf), minS, av)
+        new_block = jnp.where(live, place, block)
+        pl.store(out_ref, (pl.dslice(lo_safe, C),),
+                 jnp.where(live, new_block, block))
+
+        sets = _replace_head_sorted_rows(sets, av, do_swap)
+
+        # children for the next level: child slot j ↔ node u = lo_next + j
+        lo_next = lo_c >> jnp.maximum(d_c - (d + 1), 0)
+        hi_next = hi_c >> jnp.maximum(d_c - (d + 1), 0)
+        u = lo_next + lane
+        Lc = tcount(2 * v, d + 1)                       # per parent slot
+        left = jnp.where(lane[None, :] < Lc[:, None], sets, BIG)
+        right = _shift_rows_left(sets, Lc)
+
+        parent_slot = (u >> 1) - lo_d                   # (C,)
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+                  == parent_slot[:, None]).astype(jnp.float32)
+        # one-hot row gather (matmul — no dynamic indexing)
+        gl = jax.lax.dot_general(onehot, left, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        gr = jax.lax.dot_general(onehot, right, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        child = jnp.where((u & 1)[:, None] == 1, gr, gl)
+        ok = live & ~is_leaf & (u <= hi_next) & (parent_slot >= 0) \
+            & (parent_slot < C)
+        child = jnp.where(ok[:, None], child, BIG)
+        return jnp.where(live & ~is_leaf, child, sets)
+
+    jax.lax.fori_loop(0, max_depth + 1, level, sets0)
+
+
+def insert_chunk_vmem(a: jax.Array, size: jax.Array, chunk_vals: jax.Array,
+                      m_chunk: jax.Array, *, max_depth: int,
+                      interpret: bool = False) -> jax.Array:
+    """a: (cap,) f32; chunk_vals: (C,) sorted asc, +inf padded; m_chunk ≤ C.
+
+    Requires cap ≥ size + C (contiguous level loads) — the ops wrapper pads.
+    """
+    (cap,) = a.shape
+    (C,) = chunk_vals.shape
+    assert C <= 64, "InsertSet matrix is (C,C,C) in the split op; keep C ≤ 64"
+    kernel = functools.partial(_insert_kernel, c_max=C, cap=cap,
+                               max_depth=max_depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (1,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # m (1,)
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # chunk_vals
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # heap
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((cap,), a.dtype),
+        interpret=interpret,
+    )(jnp.reshape(size.astype(jnp.int32), (1,)),
+      jnp.reshape(m_chunk.astype(jnp.int32), (1,)),
+      chunk_vals.astype(jnp.float32), a)

@@ -1,0 +1,37 @@
+"""Public wrapper for the collective-insert kernel."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import insert_chunk_vmem
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def insert_chunk(a: jax.Array, size: jax.Array, chunk_vals: jax.Array,
+                 m_chunk: jax.Array, *,
+                 interpret: Optional[bool] = None):
+    """Collective insert of one level-chunk (paper §4 Insert phase).
+
+    a: (cap,) f32 heap (1-indexed, a[0]=+inf); chunk_vals: (C,) sorted asc,
+    +inf-padded; m_chunk: () int32 ≤ C; all targets size+1..size+m on one
+    level.  Returns (new_a, new_size).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    (cap,) = a.shape
+    (C,) = chunk_vals.shape
+    pad = C                                   # contiguous level loads headroom
+    a_p = jnp.concatenate([a, jnp.full((pad,), jnp.inf, a.dtype)])
+    max_depth = int(math.ceil(math.log2(cap + pad))) + 1
+    out = insert_chunk_vmem(a_p, size, chunk_vals, m_chunk,
+                            max_depth=max_depth, interpret=interpret)
+    return out[:cap], size + m_chunk

@@ -1,0 +1,52 @@
+"""Oracles for the collective-insert kernel.
+
+Two tiers (the parallel insert is NOT element-wise equal to sequential
+insertion — siblings may be permuted; the paper's Thm 2 guarantees only the
+multiset and the heap property):
+
+1. ``insert_chunk_reference`` — the pure-jnp level-synchronous algorithm
+   (``repro.core.batched_pq._insert_chunk``): the kernel must match this
+   **element-wise** (same algorithm, same placement decisions).
+2. ``insert_chunk_sequential`` — classic one-by-one Gonnet–Munro path
+   inserts: used to check the *semantics* (multiset equality + heap
+   property), which is what Thm 2 promises.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched_pq import _insert_chunk, check_heap_property  # noqa: F401
+
+
+def insert_chunk_reference(a, size, chunk_vals, m_chunk, *, c_max: int,
+                           max_depth: int):
+    """Element-wise oracle: the pure-jnp level-synchronous insert."""
+    return _insert_chunk(jnp.asarray(a, jnp.float32), jnp.int32(size),
+                         jnp.asarray(chunk_vals, jnp.float32),
+                         jnp.int32(m_chunk), c_max, max_depth)
+
+
+def insert_one_sequential(a: np.ndarray, size: int, x: float) -> int:
+    """Gonnet–Munro path insert of x; returns the new size."""
+    size += 1
+    path = []
+    v = size
+    while v >= 1:
+        path.append(v)
+        v //= 2
+    path.reverse()
+    val = x
+    for v in path[:-1]:
+        if val < a[v]:
+            a[v], val = val, a[v]
+    a[size] = val
+    return size
+
+
+def insert_chunk_sequential(a: np.ndarray, size: int, vals) -> tuple:
+    """Semantic oracle: insert sorted `vals` one by one."""
+    a = a.copy()
+    for x in vals:
+        size = insert_one_sequential(a, size, float(x))
+    return a, size

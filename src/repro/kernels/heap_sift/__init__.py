@@ -1,0 +1,1 @@
+from .ops import sift_wavefront  # noqa: F401

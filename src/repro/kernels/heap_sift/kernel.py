@@ -1,0 +1,121 @@
+"""Paper §4 ExtractMin phase as a Pallas TPU kernel.
+
+The batched PQ's hot loop is the *parallel sift-down wavefront*: ``c``
+cursors (one per extracted node) walk disjoint root-to-leaf paths of the
+array heap, swapping a parent with its smaller child.  On the shared-memory
+host of the paper this uses hand-over-hand per-node spin locks; the TPU
+adaptation (DESIGN.md §2) is the *level-synchronous* schedule the paper's
+own Thm-4 proof reasons about: at global step ``t`` exactly the cursors with
+``t >= delay_i`` advance one level, where ``delay_i = d_max - depth(start_i)``
+staggers the cursors so two active cursors are always ≥ 2 levels apart —
+the per-step loads/stores are then provably conflict-free and the result
+equals the paper's sequential execution SE (deepest-first).
+
+Kernel layout:
+
+* the heap prefix lives wholly in VMEM (one block; f32 capacity ≤ ~2M is
+  8 MiB — within the 16 MiB VMEM of a v5e core).  The wrapper slices the
+  touched prefix out of the HBM-resident heap, so VMEM holds only
+  ``min(cap, needed)`` entries.
+* ``size`` / ``starts`` / ``active`` are scalars in SMEM.
+* cursor state (pos, active) is a register-resident ``(c,)`` vector carried
+  through the ``lax.while_loop``; each step does ≤ 3 scalar VMEM loads and
+  2 scalar VMEM stores per cursor (scalar-unit work — the paper's phase is
+  latency- not throughput-bound, and fusing the whole wavefront in one
+  kernel removes the per-level host round-trip of the pure-XLA version).
+* conditional stores write to slot 0 when inactive: the heap is 1-indexed
+  and ``a[0]`` is the designated +inf scratch slot, so "store INF to 0" is
+  the identity — branch-free predication without ``lax.cond``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = jnp.inf
+
+
+def _depth(v):
+    return 31 - jax.lax.clz(jnp.maximum(v, 1).astype(jnp.int32))
+
+
+def _sift_kernel(size_ref, starts_ref, active_ref, a_ref, out_ref,
+                 *, c: int, cap: int):
+    # copy the heap block into the output buffer, then mutate in place
+    out_ref[...] = a_ref[...]
+    size = size_ref[0]
+
+    starts = starts_ref[...]
+    active0 = active_ref[...] != 0
+
+    depths = _depth(starts)
+    d_max = jnp.max(jnp.where(active0, depths, 0))
+    delay = d_max - depths
+
+    def load1(idx):
+        return pl.load(out_ref, (pl.dslice(idx, 1),))[0]
+
+    def store1(idx, val):
+        pl.store(out_ref, (pl.dslice(idx, 1),),
+                 jnp.full((1,), val, out_ref.dtype))
+
+    def cursor(i, carry):
+        step, pos, active = carry
+        v = pos[i]
+        moving = active[i] & (step >= delay[i])
+        vc = jnp.where(moving, v, 0)
+        l, r = 2 * vc, 2 * vc + 1
+        av = load1(vc)
+        lv = jnp.where(moving & (l <= size) & (l < cap),
+                       load1(jnp.minimum(l, cap - 1)), INF)
+        rv = jnp.where(moving & (r <= size) & (r < cap),
+                       load1(jnp.minimum(r, cap - 1)), INF)
+        wv = jnp.minimum(lv, rv)
+        w = jnp.where(lv <= rv, l, r)
+        swap = moving & (wv < av)
+        # predicated swap through the a[0] = +inf scratch slot
+        store1(jnp.where(swap, vc, 0), jnp.where(swap, wv, INF))
+        store1(jnp.where(swap, w, 0), jnp.where(swap, av, INF))
+        pos = jnp.where(jnp.arange(c) == i, jnp.where(swap, w, v), pos)
+        stop = moving & ~swap
+        active = active & ~(jnp.arange(c) == i) | (
+            (jnp.arange(c) == i) & active & ~stop)
+        return step, pos, active
+
+    def body(carry):
+        step, pos, active = carry
+        _, pos, active = jax.lax.fori_loop(0, c, cursor, (step, pos, active))
+        return step + 1, pos, active
+
+    def cond(carry):
+        return jnp.any(carry[2])
+
+    jax.lax.while_loop(cond, body, (jnp.int32(0), starts, active0))
+
+
+def sift_wavefront_vmem(a: jax.Array, size: jax.Array, starts: jax.Array,
+                        active: jax.Array, *, interpret: bool = False):
+    """a: (cap,) f32 (1-indexed heap, a[0]=+inf); starts/active: (c,) int32."""
+    (cap,) = a.shape
+    (c,) = starts.shape
+    kernel = functools.partial(_sift_kernel, c=c, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (1,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # starts (c,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # active (c,)
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # heap
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((cap,), a.dtype),
+        compiler_params=pltpu.CompilerParams(
+            has_side_effects=False),
+        interpret=interpret,
+    )(jnp.reshape(size.astype(jnp.int32), (1,)),
+      starts.astype(jnp.int32), active.astype(jnp.int32), a)

@@ -1,0 +1,29 @@
+"""Public wrapper for the sift-wavefront kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sift_wavefront_vmem
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sift_wavefront(a: jax.Array, size: jax.Array, starts: jax.Array,
+                   active: jax.Array, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Parallel sift-down from ``starts`` (paper §4 ExtractMin phase).
+
+    a: (cap,) f32 — 1-indexed heap, ``a[0] == +inf`` scratch slot.
+    size: () int32; starts: (c,) int32 node ids; active: (c,) bool.
+    Returns the updated heap array.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return sift_wavefront_vmem(a, size, starts, active, interpret=interpret)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the linear-recurrence kernels (exact sequential scan)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_reference(
+    r: jax.Array,       # (B, S, H, hd)
+    k: jax.Array,       # (B, S, H, hd)
+    v: jax.Array,       # (B, S, H, hd)
+    w: jax.Array,       # (B, S, H, hd) — per-channel decay in (0, 1]
+    u: jax.Array,       # (H, hd)       — current-token bonus
+    state0: jax.Array,  # (B, H, hd, hd) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact step-by-step RWKV-6 recurrence (matches models/recurrent.py).
+
+    y_t = r_t · (S_{t-1} + u∘(k_t⊗v_t));  S_t = w_t∘S_{t-1} + k_t⊗v_t.
+    Returns (y (B,S,H,hd) f32, final_state (B,H,hd,hd) f32).
+    """
+    rs, ks, vs, ws = (t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                      for t in (r, k, v, w))
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32),
+                             (rs, ks, vs, ws))
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def rglru_reference(
+    a: jax.Array,       # (B, S, R) f32 — per-channel decay in (0, 1]
+    b: jax.Array,       # (B, S, R) f32 — input term
+    h0: jax.Array,      # (B, R) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + b_t.  Returns (h (B,S,R), h_final (B,R))."""
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    at = a.transpose(1, 0, 2).astype(jnp.float32)
+    bt = b.transpose(1, 0, 2).astype(jnp.float32)
+    h, hs = jax.lax.scan(step, h0.astype(jnp.float32), (at, bt))
+    return hs.transpose(1, 0, 2), h

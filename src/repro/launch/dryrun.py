@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init) — this file is the only place that forces 512
+# host devices; tests and benches see the real single device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params/optimizer/cache/batch
+     (never allocating),
+  3. jits the step with explicit in/out shardings, ``.lower()``s and
+     ``.compile()``s it,
+  4. records memory_analysis / cost_analysis / the collective-op inventory
+     parsed from the optimized HLO into ``experiments/dryrun/<cell>.json``.
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system — the run aborts loudly.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_0_5b --shape train_4k
+  python -m repro.launch.dryrun --all                 # every runnable cell
+  python -m repro.launch.dryrun --all --mesh both     # 1-pod + 2-pod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.optim import adamw_init
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\][^)]*\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str):
+    """Inventory of collective ops: (kind, dtype, elems, bytes, group_size,
+    loop scopes).
+
+    Operand size is taken from the op's *output* shape; group size comes
+    from replica_groups.  ``scopes`` lists the named loop scopes visible in
+    the op's metadata (layers_scan / attn_scan / loss_scan / rwkv_scan) —
+    HLO shows a while-loop body ONCE but it executes trip-count times, so
+    the traffic accounting multiplies by the per-cell trip counts.
+    """
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        name, dtype, dims, kind, phase = m.groups()
+        if phase == "-done":        # the -start op already counted
+            continue
+        elems = int(np.prod([int(d) for d in dims.split(",") if d])) \
+            if dims else 1
+        nbytes = elems * _DTYPE_BYTES.get(dtype, 4)
+        g = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+        group = len(g.group(1).split(",")) if g else 0
+        gg = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if gg:
+            group = int(gg.group(2))
+        mn = re.search(r'op_name="([^"]*)"', line)
+        op_name = mn.group(1) if mn else ""
+        scopes = [s for s in ("layers_scan", "attn_scan", "loss_scan",
+                              "rwkv_scan") if s in op_name]
+        # a while/body with no named scope (e.g. PQ loops) counts once
+        out.append({"kind": kind, "dtype": dtype, "elems": elems,
+                    "bytes": nbytes, "group": group, "scopes": scopes})
+    return out
+
+
+def trip_counts(cfg, spec) -> dict:
+    """Estimated executions of each named loop scope for this cell."""
+    import math as _math
+    S = spec.seq_len if spec.kind != "decode" else 1
+    qc, kc = min(cfg.q_chunk, S), min(cfg.kv_chunk, S)
+    nq = max(1, -(-S // qc))
+    nk = max(1, -(-S // kc))
+    if cfg.causal:
+        # causal pair count ≈ half the grid plus the block diagonal
+        pairs = sum(min(nk, (i * qc + qc - 1) // kc + 1) for i in range(nq))
+    else:
+        pairs = nq * nk
+    return {
+        "layers_scan": max(cfg.n_full_periods, 1),
+        "attn_scan": max(pairs, 1),
+        "loss_scan": max(-(-S // cfg.loss_chunk) if cfg.loss_chunk else 1, 1),
+        "rwkv_scan": S,
+    }
+
+
+def apply_trips(colls, trips) -> None:
+    """Attach the executed-count multiplier to every op (in place)."""
+    for c in colls:
+        mult = 1
+        for s in c["scopes"]:
+            mult *= trips.get(s, 1)
+        c["mult"] = mult
+
+
+def collective_traffic_bytes(colls):
+    """Σ per-device link traffic (ring algorithm accounting):
+    AR: 2·S·(g-1)/g; AG (S=full output): S·(g-1)/g; RS (S=input): S·(g-1)/g;
+    A2A: S·(g-1)/g; permute: S.  Each op × its loop trip count."""
+    total = 0.0
+    for c in colls:
+        g = max(c["group"], 2)
+        s = c["bytes"] * c.get("mult", 1)
+        if c["kind"] == "all-reduce":
+            total += 2 * s * (g - 1) / g
+        elif c["kind"] == "all-gather":
+            total += s * (g - 1) / g
+        elif c["kind"] == "reduce-scatter":
+            total += s * (g - 1)            # bytes field is the shard (output)
+        elif c["kind"] == "all-to-all":
+            total += s * (g - 1) / g
+        else:                               # collective-permute
+            total += s
+    return total
+
+
+def build_lowerable(arch_id: str, shape_name: str, mesh, overrides=None):
+    """Returns (jitted_fn, example_args) for the cell — all ShapeDtypeStructs.
+
+    ``overrides``: ArchConfig field dict (the §Perf hillclimb lever hook).
+    """
+    cfg = configs.get(arch_id)
+    spec = configs.SHAPES[shape_name]
+    dp, tensor, pod = mesh_axes(mesh)
+
+    if spec.kind != "train":
+        # serve shapes keep TP for attention archs: pure_dp replicates
+        # weights over the model axis (gemma2 decode: 19.5 GiB args) and
+        # blows the 32k-prefill attention temp.  Attention-FREE archs
+        # (rwkv6) keep pure_dp — their token-scan state ops otherwise emit
+        # per-token collectives (13 350 s of ARs at 32k, §Roofline).
+        attn_free = all(s.mixer in ("rwkv6",) for s in cfg.period)
+        cfg = cfg.with_(decode_cache_len=spec.seq_len, remat=False,
+                        pure_dp=cfg.pure_dp and attn_free)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    ins = sh.input_specs(cfg, spec, mesh)
+    p_shapes = sh.param_shapes(cfg)
+    p_specs = sh.param_specs(cfg, mesh, "train" if spec.kind == "train"
+                             else "serve")
+    b_specs = sh.batch_specs(cfg, spec, mesh)
+
+    if spec.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        opt_specs = type(opt_shapes)(
+            jax.sharding.PartitionSpec(),
+            jax.tree.map(lambda s: s, p_specs),
+            jax.tree.map(lambda s: s, p_specs))
+        step = make_train_step(cfg, mesh)
+        jf = jax.jit(
+            step,
+            in_shardings=(sh.to_named(p_specs, mesh),
+                          sh.to_named(opt_specs, mesh),
+                          sh.to_named(b_specs, mesh)),
+            donate_argnums=(0, 1))
+        return jf, (p_shapes, opt_shapes, ins["batch"]), cfg
+
+    if spec.kind == "prefill":
+        if cfg.encoder_only:
+            step = make_prefill_step(cfg, mesh)
+            jf = jax.jit(step, in_shardings=(sh.to_named(p_specs, mesh),
+                                             sh.to_named(b_specs, mesh)))
+            return jf, (p_shapes, ins["batch"]), cfg
+        c_shapes = ins["cache"]
+        c_specs = sh.cache_specs(cfg, mesh, c_shapes)
+        step = make_prefill_step(cfg, mesh)
+        jf = jax.jit(step,
+                     in_shardings=(sh.to_named(p_specs, mesh),
+                                   sh.to_named(b_specs, mesh),
+                                   sh.to_named(c_specs, mesh)),
+                     donate_argnums=(2,))
+        return jf, (p_shapes, ins["batch"], c_shapes), cfg
+
+    # decode
+    c_shapes = ins["cache"]
+    c_specs = sh.cache_specs(cfg, mesh, c_shapes)
+    step = make_decode_step(cfg, mesh)
+    jf = jax.jit(step,
+                 in_shardings=(sh.to_named(p_specs, mesh),
+                               sh.to_named(c_specs, mesh),
+                               jax.sharding.NamedSharding(
+                                   mesh, jax.sharding.PartitionSpec()),
+                               sh.to_named(b_specs, mesh)),
+                 donate_argnums=(1,))
+    return jf, (p_shapes, c_shapes, ins["cache_len"], ins["batch"]), cfg
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str = OUT_DIR, save_hlo: bool = False,
+             overrides=None, tag: str = ""):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch_id}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell + ".json")
+
+    ok, why = configs.runnable(arch_id, shape_name)
+    if not ok:
+        rec = {"cell": cell, "status": "skipped", "reason": why}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[dryrun] {cell}: SKIP ({why})")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jf, args, cfg = build_lowerable(arch_id, shape_name, mesh, overrides)
+    lowered = jf.lower(*args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    apply_trips(colls, trip_counts(cfg, configs.SHAPES[shape_name]))
+
+    rec = {
+        "cell": cell, "status": "ok",
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")},
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float)) and k in
+                 ("flops", "bytes accessed", "transcendentals",
+                  "bytes accessed0{}", "bytes accessed1{}",
+                  "bytes accessedout{}", "utilization operand 0 {}")},
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": {
+            "count": len(colls),
+            "by_kind": {},
+            "traffic_bytes_per_device": collective_traffic_bytes(colls),
+        },
+    }
+    for c in colls:
+        k = c["kind"]
+        e = rec["collectives"]["by_kind"].setdefault(
+            k, {"count": 0, "bytes": 0})
+        e["count"] += c.get("mult", 1)
+        e["bytes"] += c["bytes"] * c.get("mult", 1)
+    rec["collective_ops"] = colls
+
+    if save_hlo:
+        with open(os.path.join(out_dir, cell + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+
+    json.dump(rec, open(path, "w"), indent=1)
+    per_dev_gb = rec["memory"]["argument_size_in_bytes"] / 2**30
+    print(f"[dryrun] {cell}: OK lower={t_lower:.0f}s compile={t_compile:.0f}s"
+          f" args/dev={per_dev_gb:.2f}GiB flops={rec['flops']:.3g}"
+          f" colls={len(colls)}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["1pod", "2pod", "both"],
+                    default="1pod")
+    ap.add_argument("--out", type=str, default=OUT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells whose .json already says ok/skipped")
+    args = ap.parse_args()
+
+    meshes = {"1pod": [False], "2pod": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a, s, ok, why in configs.cells():
+            for mp in meshes:
+                cells.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out, f"{a}__{s}__{mesh_name}.json")
+        if args.skip_done and os.path.exists(path):
+            try:
+                st = json.load(open(path)).get("status")
+                if st in ("ok", "skipped"):
+                    print(f"[dryrun] {a}__{s}__{mesh_name}: cached {st}")
+                    continue
+            except Exception:
+                pass
+        try:
+            run_cell(a, s, mp, out_dir=args.out, save_hlo=args.save_hlo)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((a, s, mp, repr(e)))
+            json.dump({"cell": f"{a}__{s}__{mesh_name}",
+                       "status": "fail", "error": repr(e)},
+                      open(path, "w"), indent=1)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        raise SystemExit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import, and smoke tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_world(n_devices: int, *, model_parallel: int = 1,
+                        pods: int = 1):
+    """Elastic-scaling helper: derive a mesh from the CURRENT world size.
+
+    Used by the train loop on restart after a topology change — the
+    checkpoint stores arrays by logical name, so any (pods, data, model)
+    factorization of the new world size restores cleanly.
+    """
+    if n_devices % (model_parallel * pods):
+        raise ValueError(
+            f"{n_devices} devices not divisible by model={model_parallel} "
+            f"× pods={pods}")
+    data = n_devices // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str, Optional[str]]:
+    """(dp_axes, tensor_axis, pod_axis-or-None) for a production mesh."""
+    names = mesh.axis_names
+    pod = "pod" if "pod" in names else None
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return dp, "model", pod

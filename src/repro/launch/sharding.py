@@ -1,0 +1,258 @@
+"""Sharding plans + ShapeDtypeStruct input specs for every (arch × shape).
+
+Training: params FSDP-on-``data`` × TP-on-``model`` (2D); ``pod`` is pure DP
+(gradient all-reduce across pods).  Serving: params TP-on-``model``,
+replicated over ``data`` (latency); batch sharded on (pod, data).
+
+Cache sharding picks the first *divisible* option per leaf:
+  4D (B, X, Y, Z): heads/feature axis Y on model if divisible, else the
+  seq/head axis X, else batch-only.  (kv_heads like 8 don't divide a
+  16-wide model axis — those caches shard their seq dim instead; see
+  DESIGN.md §6.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec
+from repro.models import transformer
+from repro.models.config import ArchConfig
+from repro.models.layers import resolve_specs
+from repro.models.transformer import ShardCtx
+
+from .mesh import mesh_axes
+
+
+# ---------------------------------------------------------------------------
+def _axes_for(cfg: ArchConfig, mesh: Mesh):
+    """(dp_axes, tensor_axis) honoring the pure_dp lever: with pure_dp the
+    model axis joins data parallelism and no tensor axis remains."""
+    dp, tensor, _ = mesh_axes(mesh)
+    if cfg.pure_dp:
+        return dp + (tensor,), None
+    return dp, tensor
+
+
+def shard_ctx(cfg: ArchConfig, mesh: Mesh) -> ShardCtx:
+    dp, tensor = _axes_for(cfg, mesh)
+    return ShardCtx(mesh=mesh, dp=dp, tensor=tensor,
+                    seq_shard=cfg.seq_shard and tensor is not None)
+
+
+def abstract_init(cfg: ArchConfig):
+    """(param ShapeDtypeStructs, raw spec tree) without allocating anything.
+
+    The spec tree is a Python-constant structure, so it is captured as a
+    tracing side effect (eval_shape cannot *return* PartitionSpecs).
+    """
+    box = {}
+
+    def f(k):
+        p, s = transformer.model_init(k, cfg)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def sanitize_specs(shapes, specs, mesh: Mesh):
+    """Drop mesh-axis assignments whose dimension isn't divisible.
+
+    (e.g. hubert's 504-way vocab can't split over a 16-wide model axis;
+    GSPMD *can* pad, but padded shards waste memory+FLOPs silently — we
+    prefer explicit replication, which the roofline then sees honestly.)
+    """
+    def fix(shape, spec):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for d, ax in enumerate(tuple(spec) + (None,) * (len(shape.shape)
+                                                        - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(ax if shape.shape[d] % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, mode: str):
+    """Resolved PartitionSpec tree for the params (mode: train|serve).
+
+    ``serve_fsdp`` (§Perf lever): serve mode normally replicates over
+    ``data`` for latency; models whose TP shard exceeds HBM (llama4-scout:
+    13.3 GiB/chip at TP-16) shard weights over data too and pay a small
+    per-layer collective instead."""
+    _, tensor = _axes_for(cfg, mesh)
+    fsdp = "data" if (mode == "train" or cfg.serve_fsdp) else None
+    shapes, raw = abstract_init(cfg)
+    resolved = resolve_specs(raw, tensor=tensor, fsdp=fsdp)
+    # (§Perf I5, REFUTED: re-sharding the pure_dp embedding vocab over data
+    # raised traffic 3.57→3.85 GB — the masked-lookup partial-sums cost more
+    # than the table gathers.  Keeping the D-sharded layout.)
+    if cfg.moe_ep_serve and mode == "serve":
+        # §Perf F2: expert-parallel serving — experts over data, the FFN
+        # dim over model.  Weights are fully sharded (no per-step gathers);
+        # the tokens pay a small all-to-all instead.
+        def _ep(tree):
+            if isinstance(tree, dict):
+                for k, v in tree.items():
+                    if k in ("w_up", "w_gate") and isinstance(v, P):
+                        tree[k] = P("data", None, "model")
+                    elif k == "w_down" and isinstance(v, P):
+                        tree[k] = P("data", "model", None)
+                    else:
+                        _ep(v)
+            elif isinstance(tree, (list, tuple)):
+                for v in tree:
+                    _ep(v)
+        # stacked leaves carry a leading layer axis
+        def _ep_stacked(tree):
+            if isinstance(tree, dict):
+                for k, v in tree.items():
+                    if k in ("w_up", "w_gate") and isinstance(v, P):
+                        tree[k] = P(None, "data", None, "model")
+                    elif k == "w_down" and isinstance(v, P):
+                        tree[k] = P(None, "data", "model", None)
+                    else:
+                        _ep_stacked(v)
+            elif isinstance(tree, (list, tuple)):
+                for v in tree:
+                    _ep_stacked(v)
+        _ep_stacked(resolved.get("stack", ()))
+        for sub in ("rem", "prefix"):
+            if sub in resolved:
+                _ep(resolved[sub])
+    return sanitize_specs(shapes, resolved, mesh)
+
+
+def param_shapes(cfg: ArchConfig):
+    return abstract_init(cfg)[0]
+
+
+def _dp_for(dim: int, dp, mesh: Mesh):
+    """Longest dp-axis prefix that divides ``dim`` (falls back toward
+    ("data",), then replication) — e.g. pure_dp batch 32 on a 16×16 mesh
+    shards over data only."""
+    axes = list(dp)
+    while axes:
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size == 0:
+            return tuple(axes)
+        axes.pop()
+    return None
+
+
+def _pick_cache_spec(dp, dp_size: int, tensor: str, tp: int, mesh=None):
+    def one(x):
+        if x.ndim >= 5:                       # stacked (L, B, S, K, hd)
+            inner = one(jax.ShapeDtypeStruct(x.shape[1:], x.dtype))
+            return P(None, *inner)
+        b = _dp_for(x.shape[0], dp, mesh) if mesh is not None else (
+            dp if x.shape[0] % dp_size == 0 else None)
+        if x.ndim == 4:                       # (B, X, Y, Z)
+            if x.shape[2] % tp == 0:
+                return P(b, None, tensor, None)
+            if x.shape[1] % tp == 0:
+                return P(b, tensor, None, None)
+            return P(b, None, None, None)
+        if x.ndim == 3:                       # (B, W, R) conv state etc.
+            if x.shape[2] % tp == 0:
+                return P(b, None, tensor)
+            return P(b, None, None)
+        if x.ndim == 2:                       # (B, R)
+            if x.shape[1] % tp == 0:
+                return P(b, tensor)
+            return P(b, None)
+        return P(b)
+    return one
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shapes):
+    dp, tensor = _axes_for(cfg, mesh)
+    tp = mesh.shape[tensor] if tensor else 1
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    return jax.tree.map(_pick_cache_spec(dp, dp_size, tensor, tp, mesh),
+                        cache_shapes)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh]
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For ``train``: the token batch.  For ``prefill``: prompt batch + empty
+    cache.  For ``decode``: one-token batch + full cache + cache_len.
+    No device allocation happens here.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(B, S), "labels": tok(B, S),
+                 "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        if cfg.n_img_tokens:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, D), jnp.bfloat16)
+        if cfg.audio_frontend:
+            batch.pop("tokens")
+            batch["frames"] = jax.ShapeDtypeStruct((B, S, D), jnp.bfloat16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        if cfg.encoder_only:
+            # encoder "prefill" = one full forward encode of the batch
+            return {"batch": {"frames":
+                              jax.ShapeDtypeStruct((B, S, D), jnp.bfloat16)}}
+        batch = {"tokens": tok(B, S)}
+        if cfg.n_img_tokens:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, D), jnp.bfloat16)
+        cache = cache_shapes(cfg.with_(decode_cache_len=S), B, S)
+        return {"batch": batch, "cache": cache}
+
+    # decode: one new token against a cache of seq_len
+    cache = cache_shapes(cfg.with_(decode_cache_len=S), B, S)
+    return {"batch": {"tokens": tok(B, 1)},
+            "cache": cache,
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    """PartitionSpec tree matching input_specs(...)['batch']."""
+    dp, _ = _axes_for(cfg, mesh)
+
+    def one(x):
+        b = _dp_for(x.shape[0], dp, mesh) if x.shape else None
+        if x.ndim >= 2:
+            return P(b, *([None] * (x.ndim - 1)))
+        return P()
+
+    specs = input_specs(cfg, shape, mesh)
+    return jax.tree.map(one, specs["batch"])
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+from .config import ArchConfig, LayerSpec, MLAConfig, MoEConfig, reduced
+from .transformer import (ShardCtx, cache_specs, count_params, init_cache,
+                          model_apply, model_init)
+from .lm import lm_loss, loss_fn, make_decode_step, make_prefill
+
+__all__ = [
+    "ArchConfig", "LayerSpec", "MLAConfig", "MoEConfig", "reduced",
+    "ShardCtx", "cache_specs", "count_params", "init_cache",
+    "model_apply", "model_init",
+    "lm_loss", "loss_fn", "make_decode_step", "make_prefill",
+]

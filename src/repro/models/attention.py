@@ -1,0 +1,305 @@
+"""Attention family: GQA full/local/cross, chunked online-softmax.
+
+The training/prefill path is a *block-wise* (flash-style) attention driven
+by a STATIC list of (q-chunk, kv-chunk) pairs — causal/local pruning is
+done at trace time, so no FLOPs are spent on fully-masked blocks and the
+whole sweep lowers to one `lax.scan` (differentiable, compact HLO — this
+matters: the dry-run compiles 48-layer models on a 512-device host mesh).
+
+Decode (Sq == 1) uses direct attention against the cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig, LayerSpec
+from .layers import FSDP, TENSOR, dense, dense_init, rope, softcap, spec
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def attn_init(key, cfg: ArchConfig, lspec: LayerSpec):
+    H, K, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["q"], s["q"] = dense_init(ks[0], D, H * hd, bias=cfg.qkv_bias)
+    p["k"], s["k"] = dense_init(ks[1], D, K * hd, bias=cfg.qkv_bias)
+    p["v"], s["v"] = dense_init(ks[2], D, K * hd, bias=cfg.qkv_bias)
+    p["o"], s["o"] = dense_init(ks[3], H * hd, D, in_axis=TENSOR, out_axis=FSDP)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+def _block_pairs(nq: int, nkv: int, q_chunk: int, kv_chunk: int,
+                 causal: bool, window: int):
+    """Static (i, j) block list with causal/local pruning."""
+    pairs = []
+    for i in range(nq):
+        q_lo, q_hi = i * q_chunk, (i + 1) * q_chunk - 1
+        for j in range(nkv):
+            k_lo, k_hi = j * kv_chunk, (j + 1) * kv_chunk - 1
+            if causal and k_lo > q_hi:
+                continue                       # fully above the diagonal
+            if window and k_hi < q_lo - window + 1:
+                continue                       # fully outside the window
+            pairs.append((i, j))
+    first = {}
+    last = {}
+    for idx, (i, j) in enumerate(pairs):
+        if i not in first:
+            first[i] = idx
+        last[i] = idx
+    is_first = np.zeros(len(pairs), bool)
+    is_last = np.zeros(len(pairs), bool)
+    for i, idx in first.items():
+        is_first[idx] = True
+    for i, idx in last.items():
+        is_last[idx] = True
+    arr = np.asarray(pairs, np.int32)
+    return arr[:, 0], arr[:, 1], is_first, is_last
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: int = 0, scale: float,
+                        cap: float = 0.0, q_chunk: int, kv_chunk: int,
+                        kv_len: Optional[jax.Array] = None,
+                        attn_remat: bool = False) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,K,hd). Returns (B,Sq,H,hd).
+
+    ``kv_len``: optional dynamic valid length of k/v (prefill into padded
+    cache); positions >= kv_len are masked.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    hd_v = v.shape[-1]                  # MLA: v head dim may differ from k
+    G = H // K
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = (Sq + pad_q) // q_chunk, (Skv + pad_kv) // kv_chunk
+    qi_idx, kj_idx, is_first, is_last = _block_pairs(
+        nq, nkv, q_chunk, kv_chunk, causal, window)
+
+    q = q.reshape(B, nq * q_chunk, K, G, hd)
+    valid_kv = jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        i, j, fst = xs
+        init_m = jnp.full_like(m, NEG_INF)
+        m = jnp.where(fst, init_m, m)
+        l = jnp.where(fst, jnp.zeros_like(l), l)
+        acc = jnp.where(fst, jnp.zeros_like(acc), acc)
+
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap)
+        q_pos = i * q_chunk + jnp.arange(q_chunk)
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        mask = k_pos[None, :] < valid_kv
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        # o is EMITTED (ys), not carried: a carried (nq × block) accumulator
+        # becomes a per-step saved residual under remat and a resident temp
+        # without it; ys keeps the peak at one block per step and the
+        # finished rows are selected statically after the scan.
+        return (m_new, l, acc), o.astype(q.dtype)
+
+    m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, q_chunk, hd_v), jnp.float32)
+    xs = (jnp.asarray(qi_idx), jnp.asarray(kj_idx), jnp.asarray(is_first))
+    if attn_remat:
+        # §Perf lever: recompute each block's (bq, bk) score matrix in the
+        # backward pass instead of stashing it as a scan residual — the
+        # flash-attention trade (kills the dominant train temp-memory term)
+        step = jax.checkpoint(step)
+    with jax.named_scope("attn_scan"):
+        _, os_ = jax.lax.scan(step, (m0, l0, acc0), xs)
+    rows = np.where(is_last)[0]           # static trace-time selection
+    out = os_[rows]                       # (nq, B, K, G, Cq, hd_v)
+    # (nq,B,K,G,Cq,hd_v) -> (B, nq*Cq, H, hd_v)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, hd_v)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal, window=0, scale, cap=0.0,
+                    kv_len=None):
+    """Reference O(S^2)-memory attention (oracle for tests)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    hd_v = v.shape[-1]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckh->bkgqh", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, n_valid, *, scale, cap=0.0):
+    """One-token attention against a (B,Smax,K,hd) cache. q: (B,1,H,hd).
+
+    ``n_valid``: number of written cache slots.  Local-attention layers use
+    a ring cache of size window+1, so every written slot is in-window and
+    no extra window mask is needed.
+    """
+    B, _, H, hd = q.shape
+    _, Smax, K, _ = k_cache.shape
+    G = H // K
+    qr = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    mask = jnp.arange(Smax) < n_valid
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+def attn_apply(p, cfg: ArchConfig, lspec: LayerSpec, x: jax.Array, *,
+               positions: jax.Array,
+               ctx: Optional[jax.Array] = None,
+               cache: Optional[Dict[str, Any]] = None,
+               cache_len: Optional[jax.Array] = None,
+               mode: str = "train", shd=None,
+               **_) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self/cross attention. Returns (y, updated_cache)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = cfg.attn_scale or hd ** -0.5
+    causal = cfg.causal and not lspec.cross_attn
+    window = lspec.window if lspec.mixer == "local" else 0
+
+    q = dense(p["q"], x).reshape(B, S, H, hd)
+    if lspec.cross_attn and mode == "decode":
+        # image K/V were cached at prefill; no projection in decode
+        k = v = None
+    else:
+        kv_src = ctx if lspec.cross_attn else x
+        Skv = kv_src.shape[1]
+        k = dense(p["k"], kv_src).reshape(B, Skv, K, hd)
+        v = dense(p["v"], kv_src).reshape(B, Skv, K, hd)
+
+    if not lspec.cross_attn:
+        q = rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if mode != "decode" else positions
+        k = rope(k, kv_pos, cfg.rope_theta)
+    if shd is not None and mode in ("train", "prefill"):
+        q = shd.heads(q)
+        if k is not None:
+            k, v = shd.heads(k), shd.heads(v)
+
+    new_cache = None
+    if mode == "train":
+        if lspec.cross_attn:
+            o = naive_attention(q, k, v, causal=False, scale=scale,
+                                cap=cfg.attn_softcap)
+        elif cfg.attention_impl == "naive":
+            o = naive_attention(q, k, v, causal=causal, window=window,
+                                scale=scale, cap=cfg.attn_softcap)
+        elif cfg.attention_impl == "pallas":
+            from repro.kernels.flash_attention import flash_attention
+            o = flash_attention(q, k, v, causal=causal, window=window,
+                                scale=scale, cap=cfg.attn_softcap,
+                                block_q=min(cfg.q_chunk, 128),
+                                block_k=min(cfg.kv_chunk, 128))
+        else:
+            o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                    scale=scale, cap=cfg.attn_softcap,
+                                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                    attn_remat=cfg.attn_remat)
+    elif mode == "prefill":
+        if lspec.cross_attn:
+            # cache the image K/V once; attend directly (n_img is small)
+            new_cache = {"k": k, "v": v}
+            o = naive_attention(q, k, v, causal=False, scale=scale,
+                                cap=cfg.attn_softcap)
+        else:
+            Smax = cache["k"].shape[1]
+            if S >= Smax:
+                # ring cache (local layers): keep the last Smax tokens at
+                # slots t % Smax (token t lands at slot t mod Smax)
+                ck = jnp.roll(k[:, S - Smax:], S % Smax, axis=1)
+                cv = jnp.roll(v[:, S - Smax:], S % Smax, axis=1)
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                    scale=scale, cap=cfg.attn_softcap,
+                                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:  # decode: S == 1
+        if lspec.cross_attn:
+            o = decode_attention(q, cache["k"], cache["v"],
+                                 jnp.int32(cache["k"].shape[1]),
+                                 scale=scale, cap=cfg.attn_softcap)
+            new_cache = cache
+        else:
+            Smax = cache["k"].shape[1]
+            slot = jnp.mod(cache_len, Smax)      # ring for local layers
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            o = decode_attention(q, ck, cv,
+                                 jnp.minimum(cache_len + 1, Smax),
+                                 scale=scale, cap=cfg.attn_softcap)
+
+    y = dense(p["o"], o.reshape(B, S, H * hd))
+    return y, new_cache
+
+
+def attn_cache_init(cfg: ArchConfig, lspec: LayerSpec, batch: int,
+                    max_len: int, dtype=jnp.bfloat16):
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    if lspec.cross_attn:
+        n = cfg.n_img_tokens
+        return {"k": jnp.zeros((batch, n, K, hd), dtype),
+                "v": jnp.zeros((batch, n, K, hd), dtype)}
+    if lspec.mixer == "local" and lspec.window:
+        max_len = min(max_len, lspec.window + 1)
+    return {"k": jnp.zeros((batch, max_len, K, hd), dtype),
+            "v": jnp.zeros((batch, max_len, K, hd), dtype)}

@@ -1,0 +1,116 @@
+"""Primitive layers: param init + pure apply, with parallel sharding specs.
+
+Every ``*_init`` returns ``(params, specs)`` — two trees of identical
+structure, the second holding ``jax.sharding.PartitionSpec`` leaves.  Spec
+roles are logical: "tensor" -> the TP mesh axis, "fsdp" -> the FSDP axis;
+they are resolved to concrete mesh axis names by ``resolve_specs`` at
+launch time (so the same model code serves 1-device smoke tests, the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# logical axis placeholders, resolved at launch
+TENSOR = "__tensor__"
+FSDP = "__fsdp__"
+
+
+def spec(*axes) -> P:
+    return P(*axes)
+
+
+def resolve_specs(tree, *, tensor: Optional[str] = "model",
+                  fsdp: Optional[str] = None):
+    """Replace logical axis names with mesh axis names (or drop them)."""
+
+    def fix(s):
+        if not isinstance(s, P):
+            return s
+        out = []
+        for ax in s:
+            if ax == TENSOR:
+                out.append(tensor)
+            elif ax == FSDP:
+                out.append(fsdp)
+            else:
+                out.append(ax)
+        return P(*out)
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               in_axis=FSDP, out_axis=TENSOR, scale: float = 0.0,
+               dtype=jnp.bfloat16) -> Tuple[Params, Params]:
+    scale = scale or d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p: Params = {"w": w}
+    s: Params = {"w": spec(in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = spec(out_axis)
+    return p, s
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int) -> Tuple[Params, Params]:
+    return {"g": jnp.ones((d,), jnp.float32)}, {"g": spec(None)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["g"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Tuple[Params, Params]:
+    e = (jax.random.normal(key, (vocab, d), jnp.float32) * d ** -0.5).astype(dtype)
+    return {"e": e}, {"e": spec(TENSOR, FSDP)}   # vocab-sharded
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["e"], ids, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits over the (tensor-sharded) vocab axis."""
+    return x @ p["e"].T
+
+
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding over the last dim. x: (..., S, H, hd), positions (S,)
+    or (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]

@@ -1,0 +1,105 @@
+"""LM heads: loss, train_step / prefill / decode builders."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .transformer import ShardCtx, model_apply
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; logits (B,S,V) f32, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _fused_chunk_xent(params, cfg: ArchConfig, x_c, y_c, m_c):
+    """Cross-entropy over one seq chunk WITHOUT materializing full logits
+    outside the chunk.  Checkpointed: the backward pass recomputes the
+    chunk logits instead of keeping (B, chunk, V) f32 cotangent residents
+    (§Perf lever `loss_chunk` — kills both the logits temp spike and the
+    f32 hidden-state all-gathers of the monolithic loss)."""
+    from .layers import dense, softcap, unembed
+    if "head" in params:
+        logits = dense(params["head"], x_c)
+    else:
+        logits = unembed(params["embed"], x_c)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - ll) * m_c), jnp.sum(m_c)
+
+
+def lm_loss_chunked(params, cfg: ArchConfig, x: jax.Array, labels, mask,
+                    chunk: int) -> jax.Array:
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (S + pad) // chunk
+    xs = (x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, chunk).transpose(1, 0, 2),
+          mask.reshape(B, n, chunk).transpose(1, 0, 2))
+
+    body = jax.checkpoint(
+        lambda carry, t: ((carry[0] + _fused_chunk_xent(
+            params, cfg, t[0], t[1], t[2])[0],
+            carry[1] + jnp.sum(t[2])), None))
+    with jax.named_scope("loss_scan"):
+        (nll, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            shd: Optional[ShardCtx] = None) -> jax.Array:
+    if cfg.loss_chunk:
+        x, _ = model_apply(params, cfg, batch, mode="train_hidden", shd=shd)
+        return lm_loss_chunked(params, cfg, x, batch["labels"],
+                               batch.get("mask"), cfg.loss_chunk)
+    logits, _ = model_apply(params, cfg, batch, mode="train", shd=shd)
+    return lm_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def make_prefill(cfg: ArchConfig, shd: Optional[ShardCtx] = None):
+    """prefill(params, batch, cache) -> (next_token_logits, cache)."""
+
+    def prefill(params, batch, cache):
+        logits, new_cache = model_apply(params, cfg, batch, mode="prefill",
+                                        shd=shd, cache=cache,
+                                        cache_len=jnp.int32(0))
+        return logits[:, -1], new_cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, shd: Optional[ShardCtx] = None,
+                     greedy: bool = True):
+    """decode(params, cache, cache_len, last_tokens) ->
+    (next_tokens, logits, cache)."""
+
+    def decode(params, cache, cache_len, last_tokens, extra=None):
+        batch = {"tokens": last_tokens}
+        if extra:
+            batch.update(extra)
+        logits, new_cache = model_apply(params, cfg, batch, mode="decode",
+                                        shd=shd, cache=cache,
+                                        cache_len=cache_len)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, logits[:, -1], new_cache
+
+    return decode

@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V2 [arXiv:2405.04434]).
+
+KV is compressed to a rank-``kv_lora_rank`` latent ``c_kv`` plus a shared
+RoPE key of ``rope_head_dim``; only (c_kv, k_rope) are cached — the paper's
+headline KV-cache reduction.  Two decode paths:
+
+* ``absorb=False`` (baseline): expand k_nope/v from the cached latent every
+  step (faithful to the naive formulation; memory-bandwidth heavy).
+* ``absorb=True`` (hillclimb): fold W_uk into the query and W_uv into the
+  output so attention runs directly in the latent space — per-step FLOPs
+  drop from O(S·R·H·(d_n+d_v)) to O(S·R·H) [recorded in EXPERIMENTS §Perf].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, LayerSpec
+from .layers import (FSDP, TENSOR, dense, dense_init, rmsnorm, rmsnorm_init,
+                     rope, spec)
+from .attention import NEG_INF, blockwise_attention
+
+
+def mla_init(key, cfg: ArchConfig, lspec: LayerSpec):
+    m = cfg.mla
+    H, D = cfg.n_heads, cfg.d_model
+    dq = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["q"], s["q"] = dense_init(ks[0], D, H * dq)
+    p["dkv"], s["dkv"] = dense_init(ks[1], D, m.kv_lora_rank + m.rope_head_dim,
+                                    out_axis=None)
+    p["kv_norm"], s["kv_norm"] = rmsnorm_init(m.kv_lora_rank)
+    p["uk"], s["uk"] = dense_init(ks[2], m.kv_lora_rank, H * m.nope_head_dim,
+                                  in_axis=None)
+    p["uv"], s["uv"] = dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim,
+                                  in_axis=None)
+    p["o"], s["o"] = dense_init(ks[4], H * m.v_head_dim, D,
+                                in_axis=TENSOR, out_axis=FSDP)
+    return p, s
+
+
+def _expand_kv(p, cfg, c_kv, k_rope):
+    """(B,S,R),(B,S,dr) -> k,v with shapes (B,S,H,dn+dr), (B,S,H,dv)."""
+    m = cfg.mla
+    B, S, _ = c_kv.shape
+    H = cfg.n_heads
+    k_nope = dense(p["uk"], c_kv).reshape(B, S, H, m.nope_head_dim)
+    v = dense(p["uv"], c_kv).reshape(B, S, H, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (B, S, H, m.rope_head_dim))], axis=-1)
+    return k, v
+
+
+def mla_apply(p, cfg: ArchConfig, lspec: LayerSpec, x: jax.Array, *,
+              positions, cache=None, cache_len=None, mode="train",
+              absorb: bool = False, shd=None,
+              **_) -> Tuple[jax.Array, Optional[Dict]]:
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    q = dense(p["q"], x).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckr = dense(p["dkv"], x)
+    c_kv = rmsnorm(p["kv_norm"], ckr[..., :m.kv_lora_rank])
+    k_rope = rope(ckr[..., None, m.kv_lora_rank:], positions,
+                  cfg.rope_theta)[:, :, 0]        # (B,S,dr)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        if mode == "prefill":
+            Smax = cache["c"].shape[1]
+            new_cache = {
+                "c": jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv, 0, 1),
+                "kr": jax.lax.dynamic_update_slice_in_dim(cache["kr"], k_rope, 0, 1),
+            }
+        k, v = _expand_kv(p, cfg, c_kv, k_rope)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if shd is not None and mode in ("train", "prefill"):
+            qq, k, v = shd.heads(qq), shd.heads(k), shd.heads(v)
+        o = blockwise_attention(qq, k, v, causal=cfg.causal, scale=scale,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                attn_remat=cfg.attn_remat)
+    else:
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv, cache_len, 1)
+        ckr_c = jax.lax.dynamic_update_slice_in_dim(cache["kr"], k_rope,
+                                                    cache_len, 1)
+        new_cache = {"c": cc, "kr": ckr_c}
+        n_valid = cache_len + 1
+        Smax = cc.shape[1]
+        mask = (jnp.arange(Smax) < n_valid)[None, None, None]
+        if absorb:
+            # fold W_uk into q: q_c = q_nope @ W_uk(head)  -> (B,1,H,R)
+            wuk = p["uk"]["w"].reshape(m.kv_lora_rank, H, dn)
+            q_c = jnp.einsum("bshn,rhn->bshr", q_nope, wuk)
+            s_lat = jnp.einsum("bshr,bcr->bhsc", q_c, cc,
+                               preferred_element_type=jnp.float32)
+            s_rope = jnp.einsum("bshr,bcr->bhsc", q_rope, ckr_c,
+                                preferred_element_type=jnp.float32)
+            att = jax.nn.softmax(
+                jnp.where(mask, (s_lat + s_rope) * scale, NEG_INF), axis=-1)
+            ctx = jnp.einsum("bhsc,bcr->bshr", att.astype(cc.dtype), cc,
+                             preferred_element_type=jnp.float32)
+            wuv = p["uv"]["w"].reshape(m.kv_lora_rank, H, dv)
+            o = jnp.einsum("bshr,rhv->bshv", ctx.astype(x.dtype), wuv)
+        else:
+            k, v = _expand_kv(p, cfg, cc, ckr_c)
+            qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+            s_ = jnp.einsum("bshd,bchd->bhsc", qq, k,
+                            preferred_element_type=jnp.float32) * scale
+            att = jax.nn.softmax(jnp.where(mask, s_, NEG_INF), axis=-1)
+            o = jnp.einsum("bhsc,bchv->bshv", att.astype(v.dtype), v,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+
+    y = dense(p["o"], o.reshape(B, S, H * dv).astype(x.dtype))
+    return y, new_cache
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, m.rope_head_dim), dtype)}

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN with sort-based (FLOP-clean) dispatch.
+
+Instead of the classic GShard one-hot dispatch einsum — whose
+O(T·E·C·D) matmul would swamp the roofline's useful-FLOPs ratio — tokens
+are ordered by expert id with an argsort and moved with gathers/scatters
+(bytes, not FLOPs).  Experts are laid out (E, D, F) and sharded on the
+tensor axis (expert parallelism when E >= axis, intra-expert TP otherwise
+— GSPMD pads uneven cases).
+
+Capacity: C = ceil(T * top_k / E * capacity_factor); overflowing tokens
+drop to the shared expert / residual path (standard GShard semantics); the
+drop fraction is part of the §Roofline "useful FLOPs" accounting.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import FSDP, TENSOR, act_fn, dense, dense_init, spec
+
+
+def moe_init(key, cfg: ArchConfig):
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff, m.n_experts
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(ks[0], D, E, out_axis=None,
+                                          dtype=jnp.float32)
+    sc = D ** -0.5
+    p["w_up"] = (jax.random.normal(ks[1], (E, D, F), jnp.float32) * sc
+                 ).astype(jnp.bfloat16)
+    p["w_gate"] = (jax.random.normal(ks[2], (E, D, F), jnp.float32) * sc
+                   ).astype(jnp.bfloat16)
+    p["w_down"] = (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * F ** -0.5).astype(jnp.bfloat16)
+    if cfg.moe_fsdp_axis == "f":
+        # Megatron-style: split the expert FFN dim — up/gate keep D whole
+        # (no contraction partials), down contracts the F shards
+        s["w_up"] = spec(TENSOR, None, FSDP)
+        s["w_gate"] = spec(TENSOR, None, FSDP)
+        s["w_down"] = spec(TENSOR, FSDP, None)
+    else:
+        s["w_up"] = spec(TENSOR, FSDP, None)
+        s["w_gate"] = spec(TENSOR, FSDP, None)
+        s["w_down"] = spec(TENSOR, None, FSDP)
+    if m.n_shared:
+        fs = m.d_ff_shared or m.d_ff
+        p["sh_up"], s["sh_up"] = dense_init(ks[4], D, fs * m.n_shared)
+        p["sh_gate"], s["sh_gate"] = dense_init(ks[5], D, fs * m.n_shared)
+        p["sh_down"], s["sh_down"] = dense_init(
+            jax.random.fold_in(ks[5], 1), fs * m.n_shared, D,
+            in_axis=TENSOR, out_axis=FSDP)
+    return p, s
+
+
+def moe_apply(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Routed FFN.  ``moe_group_by_batch`` (§Perf lever): dispatch each
+    batch row independently (vmapped sort/scatter, per-row capacity) — the
+    token resort never crosses the data shard, so the partitioner keeps the
+    whole dispatch local instead of gathering the global token buffer."""
+    m = cfg.moe
+    B, S, D = x.shape
+    act = act_fn(cfg.ffn_act)
+    if cfg.moe_group_by_batch:
+        y = jax.vmap(lambda xr: _routed(p, cfg, xr, act))(
+            x.reshape(B, S, D))
+        y = y.reshape(B, S, D).astype(jnp.float32)
+    else:
+        y = _routed(p, cfg, x.reshape(B * S, D), act).astype(jnp.float32)
+        y = y.reshape(B, S, D)
+    if m.n_shared:
+        xt = x.reshape(B * S, D)
+        g = act(dense(p["sh_gate"], xt).astype(jnp.float32))
+        u = dense(p["sh_up"], xt).astype(jnp.float32)
+        y = y + dense(p["sh_down"], (g * u).astype(x.dtype)) \
+            .astype(jnp.float32).reshape(B, S, D)
+    return y.astype(x.dtype)
+
+
+def _routed(p, cfg: ArchConfig, xt: jax.Array, act) -> jax.Array:
+    """Sort-based dispatch over one token group xt (T, D)."""
+    m = cfg.moe
+    T, D = xt.shape
+    E, K = m.n_experts, m.top_k
+
+    logits = dense(p["router"], xt.astype(jnp.float32))          # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                        # (T,K)
+    if m.router_norm_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    C = int(math.ceil(T * K / E * m.capacity_factor))
+    C = max(1, min(C, T))
+
+    # flatten (token, k) assignments and sort by expert id
+    flat_e = top_e.reshape(T * K)
+    flat_p = top_p.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_e)                                   # stable
+    se, sp, st = flat_e[order], flat_p[order], flat_t[order]
+
+    # position of each assignment within its expert
+    ones = jnp.ones_like(se)
+    pos_in_all = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))
+    pos = pos_in_all - seg_start[se]
+    keep = pos < C
+
+    # scatter tokens into (E, C, D) expert buffers
+    slot_e = jnp.where(keep, se, 0)
+    slot_c = jnp.where(keep, pos, C - 1).astype(jnp.int32)
+    buf = jnp.zeros((E, C, D), xt.dtype)
+    tok = jnp.where(keep[:, None], xt[st], 0)
+    buf = buf.at[slot_e, slot_c].add(tok)         # duplicates only on masked
+
+    # expert computation: gated MLP.  moe_bf16_dispatch also demotes the
+    # einsum accumulators: under FSDP the D-contraction partial sums are
+    # all-reduced at this dtype, so f32 doubles the dominant wire bytes.
+    acc_t = jnp.bfloat16 if cfg.moe_bf16_dispatch else jnp.float32
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                   preferred_element_type=acc_t).astype(jnp.float32)
+    h = act(h) * jnp.einsum("ecd,edf->ecf", buf, p["w_up"],
+                            preferred_element_type=acc_t).astype(jnp.float32)
+    out_buf = jnp.einsum("ecf,efd->ecd", h.astype(xt.dtype), p["w_down"],
+                         preferred_element_type=acc_t)
+
+    # gather back and combine with router weights
+    comb_dtype = xt.dtype if cfg.moe_bf16_dispatch else jnp.float32
+    picked = out_buf[slot_e, slot_c].astype(comb_dtype)           # (T*K, D)
+    picked = picked * sp[:, None].astype(comb_dtype)
+    picked = jnp.where(keep[:, None], picked, 0)
+    y = jnp.zeros((T, D), comb_dtype).at[st].add(picked)
+    return y

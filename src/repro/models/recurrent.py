@@ -1,0 +1,244 @@
+"""Recurrent mixers: RG-LRU (Griffin/RecurrentGemma) and RWKV-6 (Finch).
+
+RG-LRU uses ``jax.lax.associative_scan`` (parallel prefix — decays are in
+(0,1) so products are stable).  RWKV-6's data-dependent per-channel decay is
+run as a time-step ``lax.scan`` over the (B,H,dk,dv) state — exact and
+compile-compact; the chunked-factored VMEM formulation lives in
+``kernels/linear_scan`` (the TPU hot-path artifact) and the
+``scan_unroll`` knob lets XLA fuse multiple steps per state round-trip
+(hillclimb lever, see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, LayerSpec
+from .layers import FSDP, TENSOR, dense, dense_init, spec
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+_RG_C = 8.0
+
+
+def rglru_init(key, cfg: ArchConfig, lspec: LayerSpec):
+    D, R = cfg.d_model, cfg.d_rnn
+    W = cfg.conv_width
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["in_x"], s["in_x"] = dense_init(ks[0], D, R)
+    p["in_g"], s["in_g"] = dense_init(ks[1], D, R)
+    p["conv_w"] = (jax.random.normal(ks[2], (W, R), jnp.float32)
+                   * (1.0 / W)).astype(jnp.bfloat16)
+    s["conv_w"] = spec(None, TENSOR)
+    p["conv_b"] = jnp.zeros((R,), jnp.bfloat16)
+    s["conv_b"] = spec(TENSOR)
+    p["gate_a"], s["gate_a"] = dense_init(ks[3], R, R, in_axis=None)
+    p["gate_x"], s["gate_x"] = dense_init(ks[4], R, R, in_axis=None)
+    # Lambda init so that a = sigmoid(L) in ~(0.9, 0.999)
+    p["lam"] = jnp.asarray(
+        jax.random.uniform(ks[5], (R,), jnp.float32, 2.2, 7.0))
+    s["lam"] = spec(TENSOR)
+    p["out"], s["out"] = dense_init(ks[6], R, D, in_axis=TENSOR, out_axis=FSDP)
+    return p, s
+
+
+def _causal_conv(p, u: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Depthwise causal conv, width W.  prev: (B,W-1,R) history or None."""
+    W = p["conv_w"].shape[0]
+    if prev is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = prev.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * p["conv_w"][W - 1 - i]
+              for i in range(W))
+    return out + p["conv_b"]
+
+
+def rglru_apply(p, cfg: ArchConfig, lspec: LayerSpec, x: jax.Array, *,
+                cache=None, mode="train", **_) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    u = dense(p["in_x"], x)
+    g = jax.nn.gelu(dense(p["in_g"], x).astype(jnp.float32))
+
+    prev_conv = cache["conv"] if cache is not None else None
+    uc = _causal_conv(p, u, prev_conv)
+
+    r = jax.nn.sigmoid(dense(p["gate_a"], uc).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["gate_x"], uc).astype(jnp.float32))
+    log_a = -_RG_C * r * jax.nn.softplus(p["lam"])          # (B,S,R) f32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * uc.astype(jnp.float32))
+
+    if mode == "decode":
+        h_prev = cache["h"]                                 # (B,R) f32
+        h = a[:, 0] * h_prev + b[:, 0]
+        hs = h[:, None]
+        new_cache = {"h": h, "conv": jnp.concatenate(
+            [cache["conv"][:, 1:], u], axis=1)}
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = b_s                                            # h_t (zero init)
+        new_cache = None
+        if mode == "prefill":
+            W = p["conv_w"].shape[0]
+            new_cache = {"h": hs[:, -1],
+                         "conv": u[:, S - (W - 1):].astype(jnp.bfloat16)}
+
+    y = dense(p["out"], (hs * g).astype(x.dtype))
+    return y, new_cache
+
+
+def rglru_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return {"h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time-mix (Finch, arXiv:2404.05892)
+# ---------------------------------------------------------------------------
+_LORA_R = 32
+
+
+def rwkv6_init(key, cfg: ArchConfig, lspec: LayerSpec):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    ks = jax.random.split(key, 12)
+    p, s = {}, {}
+    for n, k in zip("rkvgo", ks[:5]):
+        if n == "o":
+            p[f"w_{n}"], s[f"w_{n}"] = dense_init(k, D, D, in_axis=TENSOR,
+                                                  out_axis=FSDP)
+        else:
+            p[f"w_{n}"], s[f"w_{n}"] = dense_init(k, D, D)
+    # token-shift mixing: static mu per stream + shared low-rank dynamic part
+    for j, n in enumerate("rkvgw"):
+        p[f"mu_{n}"] = jnp.full((D,), 0.5, jnp.float32)
+        s[f"mu_{n}"] = spec(None)
+    p["lora_a"], s["lora_a"] = dense_init(ks[5], D, _LORA_R, out_axis=None)
+    for j, n in enumerate("rkvgw"):
+        p[f"lora_b_{n}"], s[f"lora_b_{n}"] = dense_init(
+            ks[6 + j], _LORA_R, D, in_axis=None, out_axis=None, scale=0.01)
+    # decay: w_t = exp(-exp(w0 + tanh(x_w @ A_w) @ B_w))
+    p["lora_wa"], s["lora_wa"] = dense_init(ks[11], D, _LORA_R, out_axis=None)
+    p["w0"] = jnp.full((D,), -1.5, jnp.float32)
+    s["w0"] = spec(None)
+    p["u"] = jnp.zeros((H, hd), jnp.float32)      # bonus
+    s["u"] = spec(None, None)
+    p["ln_g"] = jnp.ones((D,), jnp.float32)       # per-head group norm gain
+    s["ln_g"] = spec(None)
+    return p, s
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream; x_prev is the final token of the previous segment."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    else:
+        x_prev = x_prev[:, None].astype(x.dtype)
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_apply(p, cfg: ArchConfig, lspec: LayerSpec, x: jax.Array, *,
+                cache=None, mode="train", scan_unroll: int = 1,
+                **_) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    xp = _token_shift(x, cache["x_prev"] if cache is not None else None)
+    delta = (xp - x).astype(jnp.float32)
+    lora = jnp.tanh(dense(p["lora_a"], x)).astype(jnp.float32)
+
+    def mixed(n):
+        mix = p[f"mu_{n}"] + lora @ p[f"lora_b_{n}"]["w"].astype(jnp.float32)
+        return (x.astype(jnp.float32) + delta * mix).astype(x.dtype)
+
+    r = dense(p["w_r"], mixed("r")).reshape(B, S, H, hd)
+    k = dense(p["w_k"], mixed("k")).reshape(B, S, H, hd)
+    v = dense(p["w_v"], mixed("v")).reshape(B, S, H, hd)
+    g = jax.nn.silu(dense(p["w_g"], mixed("g")).astype(jnp.float32))
+    xw = jnp.tanh(dense(p["lora_wa"], mixed("w"))).astype(jnp.float32)
+    logw = -jnp.exp(
+        p["w0"] + xw @ p["lora_b_w"]["w"].astype(jnp.float32))
+    w = jnp.exp(logw).reshape(B, S, H, hd)        # per-channel decay in (0,1)
+
+    u = p["u"]
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, y
+
+    state0 = (cache["state"] if cache is not None
+              else jnp.zeros((B, H, hd, hd), jnp.float32))
+    rs, ks_, vs, ws = (t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                       for t in (r, k, v, w))
+    with jax.named_scope("rwkv_scan"):
+        state, ys = jax.lax.scan(step, state0, (rs, ks_, vs, ws),
+                                 unroll=scan_unroll)
+    y = ys.transpose(1, 0, 2, 3)                  # (B,S,H,hd)
+
+    # per-head group norm, then output gate
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, S, D) * p["ln_g"] * g
+    out = dense(p["w_o"], y.astype(x.dtype))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"state": state, "x_prev": x[:, -1].astype(jnp.bfloat16)}
+    return out, new_cache
+
+
+def rwkv6_cache_init(cfg: ArchConfig, batch: int):
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return {"state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((batch, cfg.d_model), jnp.bfloat16)}
+
+
+# RWKV channel-mix (the Finch FFN)
+def rwkv_cm_init(key, cfg: ArchConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w_k"], s["w_k"] = dense_init(ks[0], D, F)
+    p["w_v"], s["w_v"] = dense_init(ks[1], F, D, in_axis=TENSOR, out_axis=FSDP)
+    p["w_r"], s["w_r"] = dense_init(ks[2], D, D, out_axis=None)
+    p["mu_k"] = jnp.full((D,), 0.5, jnp.float32)
+    s["mu_k"] = spec(None)
+    p["mu_r"] = jnp.full((D,), 0.5, jnp.float32)
+    s["mu_r"] = spec(None)
+    return p, s
+
+
+def rwkv_cm_apply(p, cfg: ArchConfig, x: jax.Array, *,
+                  cache=None, mode="train") -> Tuple[jax.Array, Optional[Dict]]:
+    xp = _token_shift(x, cache["x_prev"] if cache is not None else None)
+    delta = (xp - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + delta * p["mu_k"]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + delta * p["mu_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense(p["w_k"], xk)))
+    out = jax.nn.sigmoid(dense(p["w_r"], xr).astype(jnp.float32)).astype(x.dtype) \
+        * dense(p["w_v"], kk)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"x_prev": x[:, -1].astype(jnp.bfloat16)}
+    return out, new_cache

@@ -1,0 +1,381 @@
+"""Transformer assembly: blocks, scan-over-periods, caches, sharding.
+
+Heterogeneous stacks (gemma2 local/global, recurrentgemma (rec,rec,attn),
+VLM cross-attn every 5th layer) are expressed as a repeating ``period`` of
+``LayerSpec``s: the model scans over full periods with stacked params
+(compact HLO — critical for the 62-compile dry-run on one CPU core) and
+unrolls the remainder (+ an optional special prefix layer, e.g.
+deepseek-v2's dense first layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import attention, mla, moe, recurrent
+from .config import ArchConfig, LayerSpec
+from .layers import (FSDP, TENSOR, act_fn, dense, dense_init, embed,
+                     embed_init, rmsnorm, rmsnorm_init, softcap, spec,
+                     unembed)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ShardCtx:
+    """Activation-sharding helper; ``mesh=None`` (smoke tests) is a no-op."""
+
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("data",)
+    tensor: Optional[str] = "model"
+    seq_shard: bool = False
+
+    def _ns(self, pspec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, pspec)
+
+    def _dp_fit(self, dim: int):
+        """Longest dp prefix dividing ``dim`` (pure_dp prefill batches may
+        not cover data×model — fall back to data, then replicate)."""
+        axes = list(self.dp)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if dim % size == 0:
+                return tuple(axes)
+            axes.pop()
+        return None
+
+    def act(self, x: jax.Array) -> jax.Array:
+        """Residual stream (B,S,D)."""
+        if self.mesh is None:
+            return x
+        seq = self.tensor if (self.seq_shard and x.shape[1] > 1) else None
+        return jax.lax.with_sharding_constraint(
+            x, self._ns(P(self._dp_fit(x.shape[0]), seq, None)))
+
+    def heads(self, x: jax.Array) -> jax.Array:
+        """Attention tensors (B,S,H,hd): shard heads on the tensor axis
+        when divisible, else pin batch-only (replicated heads).  Without a
+        pin the partitioner seq-shards q/k/v and the blockwise scan's
+        traced dynamic_slice forces full batch+seq gathers (§Perf — the
+        12.9 GB all-gathers).  GQA k/v with few heads (yi: 4 < 16) are
+        cheap enough to replicate across the tensor axis."""
+        if self.mesh is None or self.tensor is None or x.ndim != 4:
+            return x
+        tp = self.mesh.shape[self.tensor]
+        h_ax = self.tensor if x.shape[2] % tp == 0 else None
+        return jax.lax.with_sharding_constraint(
+            x, self._ns(P(self._dp_fit(x.shape[0]), None, h_ax, None)))
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self._ns(P(self._dp_fit(x.shape[0]), None, self.tensor)))
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+def ffn_init(key, cfg: ArchConfig, lspec: LayerSpec, d_ff: int = 0):
+    kind = lspec.ffn
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if kind == "moe":
+        return moe.moe_init(key, cfg)
+    if kind == "rwkv_cm":
+        return recurrent.rwkv_cm_init(key, cfg)
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["up"], s["up"] = dense_init(ks[0], D, F)
+    p["down"], s["down"] = dense_init(ks[1], F, D, in_axis=TENSOR,
+                                      out_axis=FSDP)
+    if kind == "glu":
+        p["gate"], s["gate"] = dense_init(ks[2], D, F)
+    return p, s
+
+
+def ffn_apply(p, cfg: ArchConfig, lspec: LayerSpec, x, *, cache=None,
+              mode="train"):
+    kind = lspec.ffn
+    if kind == "moe":
+        return moe.moe_apply(p, cfg, x), None
+    if kind == "rwkv_cm":
+        return recurrent.rwkv_cm_apply(p, cfg, x, cache=cache, mode=mode)
+    act = act_fn(cfg.ffn_act)
+    if kind == "glu":
+        h = act(dense(p["gate"], x).astype(jnp.float32)) \
+            * dense(p["up"], x).astype(jnp.float32)
+    else:
+        h = act(dense(p["up"], x).astype(jnp.float32))
+    return dense(p["down"], h.astype(x.dtype)), None
+
+
+# ---------------------------------------------------------------------------
+# Block = mixer + ffn with pre-(and optionally post-)norms
+# ---------------------------------------------------------------------------
+_MIXERS = {
+    "full": (attention.attn_init, attention.attn_apply),
+    "local": (attention.attn_init, attention.attn_apply),
+    "mla": (mla.mla_init, mla.mla_apply),
+    "rglru": (recurrent.rglru_init, recurrent.rglru_apply),
+    "rwkv6": (recurrent.rwkv6_init, recurrent.rwkv6_apply),
+}
+
+
+def block_init(key, cfg: ArchConfig, lspec: LayerSpec, d_ff: int = 0):
+    k1, k2 = jax.random.split(key)
+    init_fn, _ = _MIXERS[lspec.mixer]
+    p, s = {}, {}
+    p["n1"], s["n1"] = rmsnorm_init(cfg.d_model)
+    p["mixer"], s["mixer"] = init_fn(k1, cfg, lspec)
+    p["n2"], s["n2"] = rmsnorm_init(cfg.d_model)
+    p["ffn"], s["ffn"] = ffn_init(k2, cfg, lspec, d_ff)
+    if cfg.post_norm:
+        p["pn1"], s["pn1"] = rmsnorm_init(cfg.d_model)
+        p["pn2"], s["pn2"] = rmsnorm_init(cfg.d_model)
+    return p, s
+
+
+def block_apply(p, cfg: ArchConfig, lspec: LayerSpec, x, *, positions,
+                ctx=None, cache=None, cache_len=None, mode="train",
+                shd: Optional[ShardCtx] = None):
+    _, apply_fn = _MIXERS[lspec.mixer]
+    mix_cache = cache.get("mixer") if cache else None
+    h, new_mix = apply_fn(p["mixer"], cfg, lspec, rmsnorm(p["n1"], x),
+                          positions=positions, ctx=ctx, cache=mix_cache,
+                          cache_len=cache_len, mode=mode, shd=shd)
+    if cfg.post_norm:
+        h = rmsnorm(p["pn1"], h)
+    x = x + h
+    ffn_cache = cache.get("ffn") if cache else None
+    h, new_ffn = ffn_apply(p["ffn"], cfg, lspec, rmsnorm(p["n2"], x),
+                           cache=ffn_cache, mode=mode)
+    if cfg.post_norm:
+        h = rmsnorm(p["pn2"], h)
+    x = x + h
+    if shd is not None:
+        x = shd.act(x)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"mixer": new_mix, "ffn": new_ffn}
+        # keep pytree structure stable across layers
+        if new_mix is None:
+            new_cache["mixer"] = {}
+        if new_ffn is None:
+            new_cache["ffn"] = {}
+    return x, new_cache
+
+
+def block_cache_init(cfg: ArchConfig, lspec: LayerSpec, batch: int,
+                     max_len: int):
+    if lspec.mixer in ("full", "local"):
+        mix = attention.attn_cache_init(cfg, lspec, batch, max_len)
+    elif lspec.mixer == "mla":
+        mix = mla.mla_cache_init(cfg, batch, max_len)
+    elif lspec.mixer == "rglru":
+        mix = recurrent.rglru_cache_init(cfg, batch)
+    elif lspec.mixer == "rwkv6":
+        mix = recurrent.rwkv6_cache_init(cfg, batch)
+    ffn_c: Dict[str, Any] = {}
+    if lspec.ffn == "rwkv_cm":
+        ffn_c = {"x_prev": jnp.zeros((batch, cfg.d_model), jnp.bfloat16)}
+    return {"mixer": mix, "ffn": ffn_c}
+
+
+def _cache_spec(tree, dp, tensor):
+    """Sharding specs for a cache pytree: batch on dp, heads/features on TP."""
+
+    def one(x):
+        if x.ndim >= 3:
+            # (B, S, K, hd) / (B, H, dk, dv) / (B, W, R): shard axis with
+            # head/feature semantics on tensor where possible
+            if x.ndim == 4:
+                return P(dp, None, tensor, None)
+            return P(dp, None, None)
+        if x.ndim == 2:
+            return P(dp, tensor)
+        return P(dp)
+
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+def _stack_init(init_fn, key, n: int):
+    """Stack n param trees along a new leading axis; specs get P(None, ...)."""
+    keys = jax.random.split(key, n)
+    _, s0 = init_fn(keys[0])
+
+    def params_only(k):
+        return init_fn(k)[0]
+
+    stacked = jax.vmap(params_only)(keys)
+    specs = jax.tree.map(lambda sp: P(None, *sp), s0,
+                         is_leaf=lambda x: isinstance(x, P))
+    return stacked, specs
+
+
+def model_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    if not cfg.audio_frontend:
+        p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab, cfg.d_model)
+    if cfg.n_prefix:
+        p["prefix"], s["prefix"] = block_init(
+            ks[1], cfg, dataclasses.replace(cfg.period[0], ffn="glu"),
+            d_ff=cfg.first_layer_ffn)
+    stacks, stack_specs = [], []
+    if cfg.n_full_periods > 0:
+        for j, lspec in enumerate(cfg.period):
+            st, sp_ = _stack_init(
+                lambda k, ls=lspec: block_init(k, cfg, ls),
+                jax.random.fold_in(ks[2], j), cfg.n_full_periods)
+            stacks.append(st)
+            stack_specs.append(sp_)
+    p["stack"] = tuple(stacks)
+    s["stack"] = tuple(stack_specs)
+    rems, rem_specs = [], []
+    for j in range(cfg.n_remainder):
+        lspec = cfg.period[j % len(cfg.period)]
+        rp, rs = block_init(jax.random.fold_in(ks[3], j), cfg, lspec)
+        rems.append(rp)
+        rem_specs.append(rs)
+    p["rem"] = tuple(rems)
+    s["rem"] = tuple(rem_specs)
+    p["final_norm"], s["final_norm"] = rmsnorm_init(cfg.d_model)
+    if cfg.audio_frontend or not cfg.tie_embeddings:
+        p["head"], s["head"] = dense_init(ks[4], cfg.d_model, cfg.vocab,
+                                          in_axis=FSDP, out_axis=TENSOR)
+    return p, s
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Decode/prefill cache pytree mirroring the param layout."""
+    stack = tuple(
+        jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_full_periods,) + x.shape, x.dtype),
+            block_cache_init(cfg, lspec, batch, max_len))
+        for lspec in cfg.period) if cfg.n_full_periods > 0 else ()
+    rem = tuple(
+        block_cache_init(cfg, cfg.period[j % len(cfg.period)], batch, max_len)
+        for j in range(cfg.n_remainder))
+    prefix = (block_cache_init(cfg, cfg.period[0], batch, max_len)
+              if cfg.n_prefix else {})
+    return {"stack": stack, "rem": rem, "prefix": prefix}
+
+
+def cache_specs(cfg: ArchConfig, cache, dp, tensor):
+    def per_block(tree, stacked):
+        sp = _cache_spec(tree, dp, tensor)
+        if stacked:
+            sp = jax.tree.map(lambda q: P(None, *q), sp,
+                              is_leaf=lambda x: isinstance(x, P))
+        return sp
+
+    return {
+        "stack": tuple(per_block(t, True) for t in cache["stack"]),
+        "rem": tuple(per_block(t, False) for t in cache["rem"]),
+        "prefix": per_block(cache["prefix"], False) if cache["prefix"] else {},
+    }
+
+
+def model_apply(params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+                mode: str = "train", shd: Optional[ShardCtx] = None,
+                cache=None, cache_len=None):
+    """Returns (logits, new_cache).  mode="train_hidden" skips the unembed
+    and returns the final hidden states (the chunked-loss path)."""
+    return_hidden = mode == "train_hidden"
+    if return_hidden:
+        mode = "train"
+    shd = shd or ShardCtx(mesh=None)
+    if cfg.audio_frontend:
+        x = batch["frames"]
+    else:
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.scale_embed:
+            x = (x.astype(jnp.float32) * cfg.d_model ** 0.5).astype(x.dtype)
+    x = shd.act(x)
+    B, S = x.shape[:2]
+    ctx = batch.get("image_embeds")
+
+    if mode == "decode":
+        positions = jnp.reshape(cache_len, (1,))
+    else:
+        positions = jnp.arange(S)
+
+    kw = dict(positions=positions, ctx=ctx, cache_len=cache_len, mode=mode,
+              shd=shd)
+    new_cache = {"stack": [], "rem": [], "prefix": {}}
+
+    if cfg.n_prefix:
+        pl = dataclasses.replace(cfg.period[0], ffn="glu")
+        pc = cache["prefix"] if cache else None
+        x, nc = block_apply(params["prefix"], cfg, pl, x, cache=pc, **kw)
+        new_cache["prefix"] = nc or {}
+
+    n_full = cfg.n_full_periods
+    if n_full > 0:
+        def body(x, xs):
+            p_slices, c_slices = xs
+            ncs = []
+            for j, lspec in enumerate(cfg.period):
+                cj = c_slices[j] if cache is not None else None
+                x, nc = block_apply(p_slices[j], cfg, lspec, x, cache=cj, **kw)
+                ncs.append(nc if nc is not None else
+                           {"mixer": {}, "ffn": {}})
+            return x, tuple(ncs)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+        c_stack = cache["stack"] if cache is not None else tuple(
+            {"mixer": {}, "ffn": {}} for _ in cfg.period)
+        if cfg.use_scan:
+            # named scope → the dry-run's collective-traffic parser keys
+            # loop-body ops to their trip count (n_full_periods)
+            with jax.named_scope("layers_scan"):
+                x, ncs = jax.lax.scan(body, x, (params["stack"], c_stack))
+        else:
+            ncs_all = []
+            for i in range(n_full):
+                sl = jax.tree.map(lambda a: a[i], params["stack"])
+                cl = (jax.tree.map(lambda a: a[i], c_stack)
+                      if cache is not None else c_stack)
+                x, nc_i = body(x, (sl, cl))
+                ncs_all.append(nc_i)
+            ncs = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs_all) \
+                if cache is not None else None
+        new_cache["stack"] = ncs
+
+    for j in range(cfg.n_remainder):
+        lspec = cfg.period[j % len(cfg.period)]
+        cj = cache["rem"][j] if cache else None
+        x, nc = block_apply(params["rem"][j], cfg, lspec, x, cache=cj, **kw)
+        new_cache["rem"].append(nc or {"mixer": {}, "ffn": {}})
+
+    x = rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, None                     # chunked-loss path: no logits here
+    if "head" in params:
+        logits = dense(params["head"], x)
+    else:
+        logits = unembed(params["embed"], x)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    logits = shd.logits(logits)
+
+    if mode == "train":
+        return logits, None
+    new_cache["rem"] = tuple(new_cache["rem"])
+    return logits, new_cache
+
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))

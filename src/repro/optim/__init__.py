@@ -1,0 +1,5 @@
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm
+from .compress import compress_grads_int8, decompress_grads_int8
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "compress_grads_int8", "decompress_grads_int8"]

@@ -1,0 +1,40 @@
+"""Int8 gradient compression with error feedback (cross-pod all-reduce aid).
+
+Quantize per-leaf to int8 with a per-leaf f32 scale before the cross-pod
+gradient reduction, keep the quantization residual as error feedback for
+the next step (1-bit-Adam-style EF).  Used by the train loop when
+``grad_compress=True``; the collective-bytes delta shows up directly in the
+dry-run's §Roofline collective term (4x reduction on the "pod" axis
+traffic for bf16->int8).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads_int8(grads, error=None) -> Tuple[Any, Any, Any]:
+    """Returns (q_int8_tree, scale_tree, new_error_tree)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        s = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * s
+        return q, s, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    q = jax.tree.unflatten(treedef, [o[0] for o in out])
+    s = jax.tree.unflatten(treedef, [o[1] for o in out])
+    ne = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return q, s, ne
+
+
+def decompress_grads_int8(q, s):
+    return jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, s)

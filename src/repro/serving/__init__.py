@@ -1,0 +1,1 @@
+from .scheduler import (BatchRequest, PCScheduler, SerialScheduler)  # noqa: F401

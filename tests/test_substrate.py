@@ -1,0 +1,205 @@
+"""Data pipeline, checkpointing, serving scheduler, watchdog."""
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, \
+    load_checkpoint, save_checkpoint
+from repro.data import make_pipeline
+from repro.launch.train import StragglerWatchdog
+from repro.serving import PCScheduler, SerialScheduler
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_deterministic_and_stateless():
+    p = make_pipeline(500, 64, 8, seed=1)
+    b1 = p.global_batch(7)
+    b2 = p.global_batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = p.global_batch(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_pipeline_host_sharding_covers_global():
+    full = make_pipeline(500, 32, 12, seed=2)
+    shards = [make_pipeline(500, 32, 12, seed=2, n_hosts=3, host_id=h)
+              for h in range(3)]
+    g = full.global_batch(3)
+    got = np.concatenate([s[3]["tokens"] for s in shards], axis=0)
+    np.testing.assert_array_equal(g["tokens"], got)
+
+
+def test_pipeline_elastic_resharding_identical_stream():
+    """Changing host count must not change the global token stream."""
+    a = make_pipeline(500, 32, 8, seed=3, n_hosts=2, host_id=0)
+    b = make_pipeline(500, 32, 8, seed=3, n_hosts=4, host_id=0)
+    ga = np.concatenate(
+        [make_pipeline(500, 32, 8, seed=3, n_hosts=2, host_id=h)[5]["tokens"]
+         for h in range(2)])
+    gb = np.concatenate(
+        [make_pipeline(500, 32, 8, seed=3, n_hosts=4, host_id=h)[5]["tokens"]
+         for h in range(4)])
+    np.testing.assert_array_equal(ga, gb)
+
+
+def test_pipeline_labels_shifted_and_masked():
+    p = make_pipeline(100, 32, 2, seed=0)
+    b = p.global_batch(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert b["mask"].min() >= 0 and b["mask"].max() <= 1
+    assert (b["mask"][b["labels"] == 0] == 0).all()
+
+
+def test_pipeline_prefetch(tmp_path):
+    p = make_pipeline(100, 16, 2, seed=0)
+    it = p.prefetch(4, depth=2)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], p[4]["tokens"])
+    second = next(it)
+    np.testing.assert_array_equal(second["tokens"], p[5]["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+            "o": {"m": jnp.ones((5,), jnp.float32),
+                  "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree, extra={"k": 1})
+    restored, extra = load_checkpoint(
+        str(tmp_path), 3, jax.tree.map(jnp.zeros_like, tree))
+    assert extra == {"k": 1}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_checkpoint_atomicity_partial_write_ignored(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    # simulate a crash mid-write: a bare tmp dir and a corrupt final dir
+    os.makedirs(tmp_path / "step_0000000002.tmp")
+    os.makedirs(tmp_path / "step_0000000003")
+    (tmp_path / "step_0000000003" / "manifest.json").write_text("{broken")
+    assert latest_step(str(tmp_path)) == 1
+    cm = CheckpointManager(str(tmp_path))
+    assert not (tmp_path / "step_0000000002.tmp").exists()  # GC'd
+
+
+def test_checkpoint_manager_keep_k_and_async(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree, blocking=False)
+    cm.wait()
+    steps = sorted(int(d[5:]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+    got = cm.restore_latest(jax.tree.map(jnp.zeros_like, tree))
+    assert got[0] == 4
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# serving scheduler
+# ---------------------------------------------------------------------------
+def test_pc_scheduler_combines_and_is_correct():
+    calls = []
+
+    def step_fn(rows):
+        calls.append(len(rows))
+        time.sleep(0.001)
+        return [r * 10 for r in rows]
+
+    sch = PCScheduler(step_fn, max_batch=8)
+    outs = {}
+
+    def sess(tid):
+        outs[tid] = [sch.submit(tid * 100 + i, deadline=i)
+                     for i in range(15)]
+
+    ts = [threading.Thread(target=sess, args=(t,)) for t in range(5)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    for tid, res in outs.items():
+        assert res == [(tid * 100 + i) * 10 for i in range(15)]
+    assert max(calls) > 1                  # combining actually happened
+    assert sum(calls) == 75
+
+
+def test_pc_scheduler_respects_max_batch():
+    def step_fn(rows):
+        assert len(rows) <= 4
+        return rows
+
+    sch = PCScheduler(step_fn, max_batch=4)
+
+    def sess(tid):
+        for i in range(10):
+            sch.submit(i)
+
+    ts = [threading.Thread(target=sess, args=(t,)) for t in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert all(b <= 4 for b in sch.batches)
+
+
+def test_pq_ordering_prefers_earlier_deadlines():
+    """When more requests are pending than fit, the PQ picks the smallest
+    deadlines first."""
+    order = []
+    gate = threading.Event()
+
+    def step_fn(rows):
+        order.extend(rows)
+        time.sleep(0.005)
+        return rows
+
+    sch = PCScheduler(step_fn, max_batch=2, use_pq=True)
+    # 6 concurrent sessions with distinct deadlines
+    def sess(tid):
+        gate.wait()
+        sch.submit(tid, deadline=float(tid))
+
+    ts = [threading.Thread(target=sess, args=(t,)) for t in range(6)]
+    [t.start() for t in ts]
+    gate.set()
+    [t.join() for t in ts]
+    assert sorted(order) == list(range(6))
+
+
+def test_serial_scheduler_baseline():
+    sch = SerialScheduler(lambda rows: [r + 1 for r in rows])
+    assert sch.submit(41) == 42
+    assert all(b == 1 for b in sch.batches)
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog
+# ---------------------------------------------------------------------------
+def test_watchdog_flags_outliers():
+    wd = StragglerWatchdog(factor=3.0, warmup=3)
+    for _ in range(10):
+        assert not wd.check(0.1)
+    assert wd.check(1.0)
+    assert not wd.check(0.11)
