@@ -2,6 +2,8 @@
 
 Implementations (paper's rivals adapted per DESIGN.md §8.4):
   PC        — parallel combining over the §4 batched binary heap (ours)
+  PC-K{K}   — parallel combining over the K-sharded batched heap
+              (DESIGN.md §9); sharded vs single-heap at K ∈ {1, 4, 8}
   FC Binary — flat combining over the sequential Gonnet–Munro heap
   Lock      — global mutex over the sequential heap
   Lock SL   — global mutex over the skip-list PQ (fine-grained stand-in)
@@ -26,7 +28,8 @@ import numpy as np
 
 from repro.core.batched_pq import BatchedPriorityQueue
 from repro.core.locks import LockDS
-from repro.core.pc_pq import fc_priority_queue, pc_priority_queue
+from repro.core.pc_pq import (fc_priority_queue, pc_priority_queue,
+                              pc_sharded_priority_queue)
 from repro.core.seq_pq import SequentialHeap
 from repro.core.skiplist_pq import SkipListPQ
 
@@ -34,7 +37,7 @@ from .common import save, throughput
 
 
 def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
-             value_range=2 ** 31 - 1, seed=0):
+             value_range=2 ** 31 - 1, seed=0, shard_counts=(1, 4, 8)):
     rng = np.random.default_rng(seed)
     results = []
     for S in sizes:
@@ -52,13 +55,21 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
             sl = SkipListPQ()
             for v in sorted(init.tolist()):
                 sl.insert(v)
-            return {
+            impls = {
                 "PC": pc_priority_queue(pq).execute,
                 "Lock Device": LockDS(_DeviceHeapAdapter(pq_serial)).execute,
                 "FC Binary": _fc(heap),
                 "Lock": LockDS(heap2).execute,
                 "Lock SL": LockDS(sl).execute,
             }
+            # sharded vs single-heap (DESIGN.md §9): same PC engine, the
+            # K-shard queue applies the combined batch as ONE vmapped
+            # program — K=1 isolates the vmap overhead vs plain "PC"
+            for K in shard_counts:
+                impls[f"PC-K{K}"] = pc_sharded_priority_queue(
+                    2 * S // max(K, 1) + 4096, c_max=16, n_shards=K,
+                    values=init).execute
+            return impls
 
         for P in threads:
             impls = make_impls()
@@ -107,8 +118,11 @@ def main(argv=None):
     ap.add_argument("--size", type=int, default=100_000)
     ap.add_argument("--ops", type=int, default=300)
     ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 4, 8],
+                    help="shard counts K for the PC-K rows")
     a = ap.parse_args(argv)
-    bench_pq(sizes=(a.size,), threads=tuple(a.threads), ops=a.ops)
+    bench_pq(sizes=(a.size,), threads=tuple(a.threads), ops=a.ops,
+             shard_counts=tuple(a.shards))
 
 
 if __name__ == "__main__":

@@ -3,8 +3,9 @@
 The production claim (DESIGN.md §3): under concurrent sessions, the
 parallel-combining scheduler turns N per-request device dispatches into
 ~N/batch combined dispatches, with the batched-PQ deadline ordering.
-Measures requests/s and device-step counts for both schedulers over the
-reduced qwen2 model.
+Measures requests/s and device-step counts for the serial baseline, the
+async PC scheduler with blocking submits ("pc") and the fully non-blocking
+``submit_async`` client path ("pc-async") over the reduced qwen2 model.
 """
 from __future__ import annotations
 
@@ -16,9 +17,10 @@ from .common import save
 
 
 def bench_serving(arch="qwen2_0_5b", session_counts=(1, 2, 4, 8),
-                  requests=3, tokens=6, max_batch=8):
+                  requests=3, tokens=6, max_batch=8,
+                  schedulers=("serial", "pc", "pc-async")):
     results = []
-    for sched in ("serial", "pc"):
+    for sched in schedulers:
         for s in session_counts:
             stats = run_serving(arch, sessions=s,
                                 requests_per_session=requests,
@@ -26,7 +28,7 @@ def bench_serving(arch="qwen2_0_5b", session_counts=(1, 2, 4, 8),
                                 scheduler=sched, seed=42)
             stats["sessions"] = s
             results.append(stats)
-            print(f"[serving] {sched:6s} sessions={s}: "
+            print(f"[serving] {sched:8s} sessions={s}: "
                   f"{stats['req_per_s']:6.2f} req/s, "
                   f"{stats['device_steps']:4d} device steps, "
                   f"mean batch {stats['mean_batch']}")

@@ -12,6 +12,11 @@ from .batched_pq import (
     check_heap_property,
     heap_init,
 )
+from .sharded_pq import (
+    ShardedBatchedPQ,
+    ShardedHeapState,
+    sharded_apply_batch,
+)
 from .read_opt import batched_read_optimized, read_optimized_combining
 from .dynamic_graph import DynamicGraph
 
@@ -21,6 +26,7 @@ __all__ = [
     "SequentialHeap", "SkipListPQ",
     "BatchedPriorityQueue", "HeapState", "apply_batch",
     "apply_batch_reference", "check_heap_property", "heap_init",
+    "ShardedBatchedPQ", "ShardedHeapState", "sharded_apply_batch",
     "batched_read_optimized", "read_optimized_combining",
     "DynamicGraph",
 ]

@@ -48,6 +48,17 @@ def _flush_subnormals(x):
     return jnp.where(jnp.abs(x) < _TINY, jnp.zeros_like(x), x)
 
 
+def require_finite_keys(values) -> None:
+    """Reject keys outside the heap's domain (±inf is the empty-slot
+    sentinel, NaN breaks the frontier search) — shared by every host
+    entry point that accepts keys."""
+    if len(values) and not np.all(np.isfinite(np.asarray(values,
+                                                         np.float32))):
+        raise ValueError(
+            "keys must be finite f32: ±inf is the heap's empty-slot "
+            "sentinel and NaN breaks the frontier search")
+
+
 class HeapState(NamedTuple):
     """1-indexed array heap. ``a[0]`` is a scratch slot for masked scatters."""
 
@@ -59,6 +70,7 @@ def heap_init(capacity: int, values=None) -> HeapState:
     a = jnp.full((capacity,), INF, jnp.float32)
     size = jnp.int32(0)
     if values is not None:
+        require_finite_keys(values)
         values = jnp.sort(_flush_subnormals(jnp.asarray(values, jnp.float32)))
         (n,) = values.shape
         if n + 1 > capacity:
@@ -303,22 +315,23 @@ def _insert_chunk(a, size, chunk_vals, m_chunk, c_max, max_depth):
 # The full batch application (paper §4, COMBINER_CODE + CLIENT_CODE fused
 # into one SPMD program — the "clients" are the vector lanes)
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("c_max", "use_pallas"))
-def apply_batch(state: HeapState, n_extract: jax.Array,
-                insert_vals: jax.Array, n_insert: jax.Array,
-                *, c_max: int,
-                use_pallas: bool = False) -> Tuple[HeapState, jax.Array, jax.Array]:
-    """Apply a combined batch.
+def apply_batch_impl(state: HeapState, n_extract: jax.Array,
+                     insert_vals: jax.Array, n_insert: jax.Array,
+                     *, c_max: int, use_pallas: bool = False,
+                     phase1: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     ) -> Tuple[HeapState, jax.Array, jax.Array]:
+    """Traceable body of :func:`apply_batch` (phases 1–4, un-jitted).
 
-    Args:
-      state: heap state.
-      n_extract: () int32 — number of ExtractMin requests (≤ c_max).
-      insert_vals: (c_max,) float32 — insert arguments (first n_insert valid).
-      n_insert: () int32 — number of Insert requests (≤ c_max).
+    Exposed separately so the sharded queue (``sharded_pq.py``, DESIGN.md §9)
+    can ``jax.vmap`` the whole per-shard batch application over the shard
+    axis and jit the K-shard program as ONE dispatch.  ``use_pallas`` must
+    be False under vmap (the Pallas kernels are written for a single heap).
 
-    Returns:
-      (new_state, extracted (c_max,) ascending +inf-padded, k_eff) where
-      k_eff = min(n_extract, size) is the number of successful extracts.
+    ``phase1`` optionally supplies a precomputed phase-1 result
+    ``(out_ids, out_vals)`` — the first ``n_extract`` smallest nodes,
+    ascending, (0, +inf)-padded — so a caller that already ran the
+    frontier search (the sharded candidate merge) doesn't pay the
+    ``O(c log c)`` scan twice.
     """
     a, size = state
     cap = a.shape[0]
@@ -331,7 +344,10 @@ def apply_batch(state: HeapState, n_extract: jax.Array,
     insert_vals = jnp.sort(jnp.where(lane < n_insert, insert_vals, INF))
 
     # phase 1: k smallest
-    out_ids, out_vals = _k_smallest(a, size, n_extract, c_max)
+    if phase1 is None:
+        out_ids, out_vals = _k_smallest(a, size, n_extract, c_max)
+    else:
+        out_ids, out_vals = phase1
     k_eff = jnp.minimum(n_extract, size)
     L = jnp.minimum(k_eff, n_insert)
 
@@ -371,6 +387,27 @@ def apply_batch(state: HeapState, n_extract: jax.Array,
     return HeapState(a, size), out_vals, k_eff
 
 
+@partial(jax.jit, static_argnames=("c_max", "use_pallas"))
+def apply_batch(state: HeapState, n_extract: jax.Array,
+                insert_vals: jax.Array, n_insert: jax.Array,
+                *, c_max: int,
+                use_pallas: bool = False) -> Tuple[HeapState, jax.Array, jax.Array]:
+    """Apply a combined batch (jitted — one XLA program).
+
+    Args:
+      state: heap state.
+      n_extract: () int32 — number of ExtractMin requests (≤ c_max).
+      insert_vals: (c_max,) float32 — insert arguments (first n_insert valid).
+      n_insert: () int32 — number of Insert requests (≤ c_max).
+
+    Returns:
+      (new_state, extracted (c_max,) ascending +inf-padded, k_eff) where
+      k_eff = min(n_extract, size) is the number of successful extracts.
+    """
+    return apply_batch_impl(state, n_extract, insert_vals, n_insert,
+                            c_max=c_max, use_pallas=use_pallas)
+
+
 # ---------------------------------------------------------------------------
 # Reference oracle (paper batch semantics, sequential numpy)
 # ---------------------------------------------------------------------------
@@ -393,8 +430,35 @@ def check_heap_property(a: np.ndarray, size: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Host-facing wrapper
+# Host-facing wrappers
 # ---------------------------------------------------------------------------
+def apply_sliced(step, c_max: int, extracts: int, inserts) -> list:
+    """Shared host-side batching loop for the PQ wrappers.
+
+    Applies a combined batch of ``extracts`` ExtractMin + ``inserts`` in
+    ≤ c_max slices; ``step(ne, buf, ni) -> (vals, k_eff)`` runs one device
+    program over one slice (and updates the caller's state).  Returns the
+    extracted values ascending per slice, ``None``-padded for extracts
+    that found the queue empty.
+    """
+    inserts = list(inserts)
+    require_finite_keys(inserts)
+    out: list = []
+    extracts = int(extracts)
+    while extracts > 0 or inserts:
+        ne = min(extracts, c_max)
+        ni = min(len(inserts), c_max)
+        buf = np.full((c_max,), np.inf, np.float32)
+        buf[:ni] = inserts[:ni]
+        vals, k_eff = step(ne, buf, ni)
+        k = int(k_eff)
+        out.extend(np.asarray(vals)[:k].tolist())
+        out.extend([None] * (ne - k))      # empty-queue extracts
+        extracts -= ne
+        inserts = inserts[ni:]
+    return out
+
+
 class BatchedPriorityQueue:
     """Device-resident PQ with batch application (the §4 data structure)."""
 
@@ -411,26 +475,19 @@ class BatchedPriorityQueue:
         return int(self.state.size)
 
     def apply(self, extracts: int, inserts) -> list:
-        """Apply a combined batch; returns the extracted values (floats)."""
-        inserts = list(inserts)
-        out: list = []
-        # batches larger than c_max are applied in c_max slices (still one
-        # device program per slice)
-        while extracts > 0 or inserts:
-            ne = min(extracts, self.c_max)
-            ni = min(len(inserts), self.c_max)
-            buf = np.full((self.c_max,), np.inf, np.float32)
-            buf[:ni] = inserts[:ni]
+        """Apply a combined batch; returns the extracted values (floats).
+
+        Batches larger than c_max are applied in c_max slices — still one
+        device program per slice.
+        """
+        def step(ne, buf, ni):
             self.state, vals, k_eff = apply_batch(
                 self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
                 c_max=self.c_max, use_pallas=self.use_pallas,
             )
-            k = int(k_eff)
-            out.extend(np.asarray(vals)[:k].tolist())
-            out.extend([None] * (ne - k))      # empty-heap extracts
-            extracts -= ne
-            inserts = inserts[ni:]
-        return out
+            return vals, k_eff
+
+        return apply_sliced(step, self.c_max, extracts, inserts)
 
     def values(self) -> list:
         a = np.asarray(self.state.a)

@@ -13,14 +13,17 @@ kept only as an optional policy knob.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Union
 
 from .batched_pq import BatchedPriorityQueue
 from .combining import ParallelCombiner, Request, Status
 from .seq_pq import SequentialHeap
+from .sharded_pq import ShardedBatchedPQ
+
+AnyBatchedPQ = Union[BatchedPriorityQueue, ShardedBatchedPQ]
 
 
-def pc_priority_queue(pq: BatchedPriorityQueue, *,
+def pc_priority_queue(pq: AnyBatchedPQ, *,
                       sequential_fallback: bool = False,
                       **kw) -> ParallelCombiner:
     def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
@@ -48,6 +51,20 @@ def pc_priority_queue(pq: BatchedPriorityQueue, *,
         return
 
     return ParallelCombiner(combiner_code, client_code, **kw)
+
+
+def pc_sharded_priority_queue(capacity: int, c_max: int,
+                              n_shards: int = 4, values=None,
+                              **kw) -> ParallelCombiner:
+    """Parallel combining over the K-sharded batched heap (DESIGN.md §9).
+
+    Same combiner protocol as :func:`pc_priority_queue` — the combined
+    batch is split into E/I and applied as ONE vmapped K-shard device
+    program via ``ShardedBatchedPQ.apply``.
+    """
+    return pc_priority_queue(
+        ShardedBatchedPQ(capacity, c_max=c_max, n_shards=n_shards,
+                         values=values), **kw)
 
 
 def fc_priority_queue(**kw) -> ParallelCombiner:

@@ -1,0 +1,264 @@
+"""Sharded batched priority queue (DESIGN.md §9) — K heaps, ONE dispatch.
+
+The §4 batched heap applies a combined batch of ``|E|`` ExtractMin +
+``|I|`` Insert in ``O(c log c + log n)`` parallel time, but a single heap
+caps the payoff at one combining pass in flight at a time.  Following the
+sharding recipe of batch-parallel search trees (Lim's 2-3 trees partition
+batches by key range; Calciu et al.'s adaptive PQ grows combining capacity
+with load), we stack **K independent ``HeapState`` shards on a leading
+axis** and apply one combined batch across all of them as a single
+``jax.vmap``-ed XLA program:
+
+1. **route** — inserts are assigned to shards by a bit-mix hash of their
+   key (default; load-balancing) or by a fixed key range (``key_range=``,
+   the Lim-style partition), entirely inside the jitted program;
+2. **frontier merge** — every shard's ``min(|E|, size_k)`` smallest nodes
+   are found with the §4 Dijkstra-like frontier search (vmapped, read-only)
+   and the K candidate lists are merged by one global sort; the first
+   ``|E|`` finite entries decide the per-shard extract counts ``e_k``;
+3. **vmapped batch-apply** — phases 1–4 of the §4 algorithm run on all K
+   shards simultaneously (``jax.vmap`` of ``apply_batch_impl``), each shard
+   extracting its ``e_k`` minima and absorbing its routed inserts;
+4. **answer merge** — the K per-shard extract lists are merged by one sort;
+   the first ``k_eff = min(|E|, Σ size_k)`` values are the batch answer, in
+   ascending order, exactly the single-heap (and ``SequentialHeap``
+   oracle) semantics.
+
+Correctness: the global |E| smallest keys of the union are a subset of the
+union of per-shard |E|-smallest candidate lists, so step 2's merge picks
+exactly the right multiset; step 3 then extracts precisely those nodes
+because each shard's frontier search is deterministic.  Insert routing is
+an arbitrary partition — extraction always merges across shards, so ANY
+deterministic routing preserves set semantics (fuzzed against the
+sequential oracle, including batches larger than the live size).
+
+Cost: the paper's single-heap pass is one ``O(c log c + log n)`` program;
+here K such passes run as one program of the same depth — K concurrent
+combining passes for the price of one dispatch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched_pq import (
+    INF,
+    _TINY,
+    HeapState,
+    _flush_subnormals,
+    _k_smallest,
+    apply_batch_impl,
+    apply_sliced,
+    require_finite_keys,
+)
+
+
+def host_key(x: float) -> float:
+    """Quantize a host float to the exact f32 key the device heap stores.
+
+    Applies f32 rounding, the device's flush-to-zero (DESIGN.md §7) and a
+    clamp to the finite f32 range (±inf is the heap's empty-slot
+    sentinel), so a key extracted from the device round-trips exactly to
+    the host-side value produced here — load-bearing for dict lookups
+    keyed on extracted values (the scheduler's persistent request table).
+    """
+    k = np.float32(x)
+    if np.isnan(k):
+        raise ValueError("key must not be NaN")
+    if not np.isfinite(k):
+        big = np.finfo(np.float32).max
+        k = np.float32(big) if k > 0 else np.float32(-big)
+    if abs(k) < _TINY:
+        k = np.float32(0.0)
+    return float(k)
+
+
+class ShardedHeapState(NamedTuple):
+    """K 1-indexed array heaps stacked on the leading axis."""
+
+    a: jax.Array      # (K, capacity) float32, +inf marks empty slots
+    size: jax.Array   # (K,) int32
+
+
+# ---------------------------------------------------------------------------
+# Insert routing — hash (default) or key-range (Lim-style partition)
+# ---------------------------------------------------------------------------
+def route_hash(vals: jax.Array, n_shards: int) -> jax.Array:
+    """Shard id per value via a Fibonacci bit-mix of the f32 bit pattern."""
+    bits = jax.lax.bitcast_convert_type(vals.astype(jnp.float32),
+                                        jnp.uint32)
+    h = bits * jnp.uint32(2654435761)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def route_range(vals: jax.Array, n_shards: int,
+                lo: float, hi: float) -> jax.Array:
+    """Shard id per value by equal-width key range over [lo, hi)."""
+    span = max(hi - lo, 1e-30)
+    idx = jnp.floor((vals - lo) / span * n_shards).astype(jnp.int32)
+    return jnp.clip(idx, 0, n_shards - 1)
+
+
+def _route(vals: jax.Array, n_shards: int,
+           key_range: Optional[Tuple[float, float]]) -> jax.Array:
+    if key_range is None:
+        return route_hash(vals, n_shards)
+    return route_range(vals, n_shards, key_range[0], key_range[1])
+
+
+# ---------------------------------------------------------------------------
+# One combined batch over all K shards — a single jitted XLA program
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("c_max", "n_shards", "key_range"))
+def sharded_apply_batch(
+    state: ShardedHeapState, n_extract: jax.Array,
+    insert_vals: jax.Array, n_insert: jax.Array,
+    *, c_max: int, n_shards: int,
+    key_range: Optional[Tuple[float, float]] = None,
+) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
+    """Apply one combined batch of ≤ c_max extracts + ≤ c_max inserts.
+
+    Returns (new_state, extracted (c_max,) ascending +inf-padded, k_eff)
+    where k_eff = min(n_extract, Σ size_k).
+    """
+    K = n_shards
+    a, size = state
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+
+    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
+    n_insert = jnp.minimum(jnp.int32(n_insert), c_max)
+    insert_vals = _flush_subnormals(insert_vals.astype(jnp.float32))
+    ins_valid = lane < n_insert
+
+    # -- 1. route inserts to shards (invalid lanes park on shard 0 masked out)
+    shard_of = jnp.where(ins_valid, _route(insert_vals, K, key_range), 0)
+    # per-shard dense rows: row k holds shard-k inserts sorted ascending
+    one_hot = (shard_of[None, :] == jnp.arange(K)[:, None]) & ins_valid[None, :]
+    ins_rows = jnp.sort(jnp.where(one_hot, insert_vals[None, :], INF), axis=1)
+    ins_counts = jnp.sum(one_hot, axis=1).astype(jnp.int32)
+
+    # -- 2. per-shard frontier candidates (read-only) + global merge
+    cand_ids, cand_vals = jax.vmap(
+        lambda ak, sk: _k_smallest(ak, sk, n_extract, c_max)
+    )(a, size)                                           # (K, c_max) each
+    flat_vals = cand_vals.reshape(-1)                    # (K*c_max,)
+    flat_shard = jnp.repeat(jnp.arange(K, dtype=jnp.int32), c_max)
+    order = jnp.argsort(flat_vals)                       # stable
+    chosen = (jnp.arange(K * c_max) < n_extract) & jnp.isfinite(
+        flat_vals[order])
+    e_counts = jax.ops.segment_sum(
+        chosen.astype(jnp.int32), flat_shard[order], num_segments=K)
+
+    # -- 3. all K per-shard batch-applies as one vmapped program.  The
+    # frontier scan is deterministic and prefix-stable, so the first e_k
+    # lanes of the step-2 candidates ARE shard k's phase-1 result — mask
+    # and reuse them instead of re-running the O(c log c) search.
+    def one_shard(ak, sk, ek, row, ik, ids_k, vals_k):
+        lane_k = jnp.arange(c_max, dtype=jnp.int32)
+        p1 = (jnp.where(lane_k < ek, ids_k, 0),
+              jnp.where(lane_k < ek, vals_k, INF))
+        st, out_vals, _ = apply_batch_impl(
+            HeapState(ak, sk), ek, row, ik, c_max=c_max, use_pallas=False,
+            phase1=p1)
+        return st.a, st.size, out_vals
+
+    new_a, new_size, out_rows = jax.vmap(one_shard)(
+        a, size, e_counts, ins_rows, ins_counts, cand_ids, cand_vals)
+
+    # -- 4. merge the per-shard answers (ascending, +inf padded)
+    merged = jnp.sort(out_rows.reshape(-1))[:c_max]
+    k_eff = jnp.minimum(n_extract, jnp.sum(size))
+    return ShardedHeapState(new_a, new_size), merged, k_eff
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrapper (same interface as BatchedPriorityQueue)
+# ---------------------------------------------------------------------------
+class ShardedBatchedPQ:
+    """K-sharded device-resident PQ with combined batch application.
+
+    Args:
+      capacity: per-shard heap capacity (slot 0 is scratch, as in §4).
+      c_max: combined-batch capacity per apply (compile-time constant).
+      n_shards: number of independent heap shards (K).
+      values: optional initial values, routed with the same rule as inserts.
+      key_range: optional (lo, hi) — route by key range instead of hash.
+    """
+
+    def __init__(self, capacity: int, c_max: int, n_shards: int = 4,
+                 values=None, key_range: Optional[Tuple[float, float]] = None):
+        if c_max < 1:
+            raise ValueError("c_max must be >= 1")
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.c_max = int(c_max)
+        self.capacity = int(capacity)
+        self.n_shards = int(n_shards)
+        self.key_range = (
+            (float(key_range[0]), float(key_range[1]))
+            if key_range is not None else None)
+        self.state = self._init_state(values)
+
+    def _init_state(self, values) -> ShardedHeapState:
+        K, cap = self.n_shards, self.capacity
+        a = np.full((K, cap), np.inf, np.float32)
+        size = np.zeros((K,), np.int32)
+        values = list(values) if values is not None else []
+        if values:
+            require_finite_keys(values)
+            vals = np.asarray(
+                _flush_subnormals(jnp.asarray(values, jnp.float32)))
+            shards = np.asarray(_route(jnp.asarray(vals), K,
+                                       self.key_range))
+            for k in range(K):
+                mine = np.sort(vals[shards == k])
+                if mine.size + 1 > cap:
+                    raise ValueError("per-shard capacity too small")
+                # a sorted array satisfies the heap property
+                a[k, 1 : mine.size + 1] = mine
+                size[k] = mine.size
+        return ShardedHeapState(jnp.asarray(a), jnp.asarray(size))
+
+    def __len__(self) -> int:
+        return int(np.sum(np.asarray(self.state.size)))
+
+    def apply(self, extracts: int, inserts) -> list:
+        """Apply a combined batch; returns extracted values (None-padded).
+
+        Batches larger than c_max are applied in c_max slices — still one
+        device program per slice, K shards each.
+        """
+        def step(ne, buf, ni):
+            if ni:
+                # routing skew could overflow one shard while the queue
+                # as a whole has room — refuse rather than let the device
+                # scatter silently drop keys.  (Conservative: same-slice
+                # extracts that would free room are not credited.)
+                shards = np.asarray(_route(jnp.asarray(buf[:ni]),
+                                           self.n_shards, self.key_range))
+                growth = np.bincount(shards, minlength=self.n_shards)
+                sizes = np.asarray(self.state.size)
+                if np.any(sizes + growth + 1 > self.capacity):
+                    raise ValueError(
+                        f"per-shard capacity {self.capacity} exceeded: "
+                        f"insert routing would grow a shard past it")
+            self.state, vals, k_eff = sharded_apply_batch(
+                self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
+                c_max=self.c_max, n_shards=self.n_shards,
+                key_range=self.key_range)
+            return vals, k_eff
+
+        return apply_sliced(step, self.c_max, extracts, inserts)
+
+    def values(self) -> list:
+        a = np.asarray(self.state.a)
+        sizes = np.asarray(self.state.size)
+        out: list = []
+        for k in range(self.n_shards):
+            out.extend(a[k, 1 : sizes[k] + 1].tolist())
+        return sorted(out)

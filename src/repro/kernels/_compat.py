@@ -1,0 +1,32 @@
+"""Version shims for the Pallas TPU API across jax releases.
+
+``pltpu.TPUCompilerParams`` (jax ≤ 0.4.x) was renamed to
+``pltpu.CompilerParams`` in newer releases, and newer releases also grew
+extra fields (e.g. ``has_side_effects``).  The kernels target the new
+name/fields; this shim resolves the installed class and silently drops
+constructor arguments it does not know, so the same kernel source runs on
+the baked-in toolchain and on current jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from jax.experimental.pallas import tpu as pltpu
+
+_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+_fields = {f.name for f in dataclasses.fields(_cls)}
+
+
+def CompilerParams(**kwargs):
+    """``pltpu.CompilerParams`` with unknown-to-this-jax kwargs dropped
+    (with a warning — a dropped ``dimension_semantics`` is a silent perf
+    cliff the user should know about)."""
+    dropped = sorted(set(kwargs) - _fields)
+    if dropped:
+        warnings.warn(
+            f"installed jax's {_cls.__name__} does not support "
+            f"{dropped}; dropping them (kernel semantics/perf may "
+            f"differ)", RuntimeWarning, stacklevel=2)
+    return _cls(**{k: v for k, v in kwargs.items() if k in _fields})

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 NEG_INF = -1e30  # python float: jnp scalars would be captured consts in Pallas
 
 
@@ -148,7 +150,7 @@ def flash_attention_bhsd(
             pltpu.VMEM((block_q,), jnp.float32),        # l — running denom
             pltpu.VMEM((block_q, hd_v), jnp.float32),   # acc — weighted V sum
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

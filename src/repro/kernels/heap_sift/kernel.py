@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 INF = jnp.inf
 
 
@@ -114,7 +116,7 @@ def sift_wavefront_vmem(a: jax.Array, size: jax.Array, starts: jax.Array,
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((cap,), a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             has_side_effects=False),
         interpret=interpret,
     )(jnp.reshape(size.astype(jnp.int32), (1,)),

@@ -77,13 +77,22 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 requests_per_session: int = 4, n_tokens: int = 8,
                 prompt_len: int = 16, max_batch: int = 8,
                 scheduler: str = "pc", seed: int = 0) -> Dict[str, Any]:
+    """Drive ``sessions`` concurrent client sessions through a scheduler.
+
+    ``scheduler``: "serial" (one dispatch per request), "pc" (async
+    combiner, blocking per-session submits) or "pc-async" (each session
+    publishes ALL its requests via ``submit_async`` up front and gathers
+    the futures — the non-blocking client API).
+    """
     cfg = configs.get_reduced(arch_id)
     ex = DecodeExecutor(cfg, max_batch=max_batch,
                         max_len=prompt_len + n_tokens + 1, seed=seed)
-    if scheduler == "pc":
+    if scheduler in ("pc", "pc-async"):
         sch = PCScheduler(ex, max_batch=max_batch, use_pq=True)
-    else:
+    elif scheduler == "serial":
         sch = SerialScheduler(ex)
+    else:
+        raise ValueError(f"unknown scheduler {scheduler!r}")
 
     rng = np.random.default_rng(seed)
     prompts = rng.integers(2, cfg.vocab, (sessions, requests_per_session,
@@ -92,12 +101,14 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     t0 = time.time()
 
     def session(sid: int):
-        outs = []
-        for j in range(requests_per_session):
-            outs.append(sch.submit(
-                {"prompt": prompts[sid, j], "n_tokens": n_tokens},
-                deadline=float(sid * requests_per_session + j)))
-        results[sid] = outs
+        reqs = [({"prompt": prompts[sid, j], "n_tokens": n_tokens},
+                 float(sid * requests_per_session + j))
+                for j in range(requests_per_session)]
+        if scheduler == "pc-async":
+            futs = [sch.submit_async(inp, deadline=d) for inp, d in reqs]
+            results[sid] = [f.result() for f in futs]
+        else:
+            results[sid] = [sch.submit(inp, deadline=d) for inp, d in reqs]
 
     threads = [threading.Thread(target=session, args=(s,))
                for s in range(sessions)]
@@ -106,6 +117,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     for t in threads:
         t.join()
     wall = time.time() - t0
+    if isinstance(sch, PCScheduler):
+        sch.close()
 
     total_reqs = sessions * requests_per_session
     total_toks = total_reqs * n_tokens
@@ -117,7 +130,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         "tok_per_s": round(total_toks / wall, 1),
         "device_steps": ex.device_steps,
         "mean_batch": round(getattr(sch, "mean_batch", 1.0), 2)
-        if scheduler == "pc" else 1.0,
+        if scheduler != "serial" else 1.0,
     }
     # determinism check: same prompt -> same tokens regardless of batching
     return stats
@@ -130,7 +143,8 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--scheduler", choices=["pc", "serial"], default="pc")
+    ap.add_argument("--scheduler", choices=["pc", "pc-async", "serial"],
+                    default="pc")
     args = ap.parse_args()
     stats = run_serving(args.arch, sessions=args.sessions,
                         requests_per_session=args.requests,

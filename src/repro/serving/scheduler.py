@@ -1,26 +1,33 @@
-"""Parallel-combining continuous-batching scheduler (the production
-integration of the paper's technique — DESIGN.md §3).
+"""Async parallel-combining continuous-batching scheduler (DESIGN.md §3, §9).
 
 Decode serving is exactly the paper's workload: many concurrent request
 streams share one structure (the device batch slots / KV cache) and the
 system must choose between fine-grained dispatch (one device program per
 request — the "fine-grained locking" analogue) and combining.
 
-This scheduler IS Listing 1:
+The first revision of this scheduler was a literal Listing 1: session
+threads spin on a publication list and whichever wins the global lock
+becomes the combiner.  This revision keeps the paper's *explicit
+synchronization* (one combiner, batched application) but moves it onto a
+production async engine:
 
-* a session thread with a new request publishes it (``ParallelCombiner``
-  publication list) and tries the global lock;
-* whichever thread wins becomes the **combiner**: it drains the publication
-  list, *orders* the pending requests with the paper's §4 **batched priority
-  queue** (keyed by deadline — all pending keys are inserted and the
-  ``max_batch`` smallest extracted in ONE device batch-apply), stacks the
-  chosen requests into a dense batch and launches ONE SPMD ``step_fn`` over
-  the mesh;
-* the waiting clients' "free cycles" are the device lanes: a combined batch
-  of B requests runs on the same program at ~the cost of one.
-
-Requests not selected by the deadline-PQ stay PUSHED and are picked up by
-the next combining pass (continuous batching).
+* ``submit_async`` is non-blocking and returns a ``concurrent.futures``
+  future — the publication step is an O(1) append under a condition
+  variable, no spinning;
+* a **dedicated combiner loop** drains the publication buffer, orders the
+  pending requests by deadline on the **K-sharded batched priority queue**
+  (DESIGN.md §9 — inserts routed across shards, extraction is a K-way
+  merge, all as vmapped device programs) and hands the chosen batch to the
+  device;
+* the combiner is **pipelined** against the device: while device pass N is
+  in flight, the combiner is already collecting and ordering pass N+1
+  (a depth-1 handoff queue), so host-side ordering cost hides behind
+  device compute;
+* the PQ keys live in a **persistent key→request table**: unchosen
+  requests simply *stay* in the device-resident PQ across passes (the
+  previous revision cleared and re-inserted every pending key each pass —
+  ``O(pending)`` device work per pass; now each key is inserted once and
+  extracted once).
 
 ``SerialScheduler`` is the fine-grained baseline: every request dispatches
 its own device program under a plain mutex (the "single global lock, no
@@ -28,15 +35,19 @@ combining" analogue) — the benchmark compares the two (EXPERIMENTS §Paper).
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
+from collections import deque
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.batched_pq import BatchedPriorityQueue
-from repro.core.combining import ParallelCombiner, Request, Status
+from repro.core.sharded_pq import ShardedBatchedPQ, host_key
+
+_SENTINEL = object()
 
 
 @dataclass
@@ -48,8 +59,17 @@ class BatchRequest:
     submitted_at: float = field(default_factory=time.monotonic)
 
 
+@dataclass
+class _Entry:
+    """A published request inside the scheduler (request + its future)."""
+
+    req: BatchRequest
+    future: Future
+    key: float = 0.0                  # f32-quantized deadline (PQ dtype)
+
+
 class PCScheduler:
-    """Parallel-combining scheduler around a batched ``step_fn``.
+    """Async parallel-combining scheduler around a batched ``step_fn``.
 
     Args:
       step_fn: callable taking a list of request inputs (length ≤ max_batch)
@@ -57,78 +77,206 @@ class PCScheduler:
         the jitted SPMD ``serve_step`` (stack → one device program →
         unstack); the scheduler is agnostic.
       max_batch: device batch capacity per combining pass.
-      use_pq: order pending requests by deadline with the §4 batched PQ
-        (True) or FIFO (False) — the PQ path exercises the paper's batched
-        data structure inside the serving layer.
+      use_pq: order pending requests by deadline with the sharded batched
+        PQ (True) or FIFO (False) — the PQ path exercises the paper's
+        batched data structure inside the serving layer.
+      pq_capacity: per-shard heap capacity of the deadline PQ.
+      n_shards: shard count K of the deadline PQ.
+      pipeline: overlap combiner-side collection/ordering of pass N+1 with
+        the in-flight device step of pass N (depth-1 handoff).  False runs
+        the device step inline on the combiner thread (debug mode).
     """
 
     def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]],
                  max_batch: int = 16, use_pq: bool = True,
-                 pq_capacity: int = 1 << 16):
+                 pq_capacity: int = 1 << 16, n_shards: int = 4,
+                 pipeline: bool = True):
         self.step_fn = step_fn
         self.max_batch = max_batch
         self.use_pq = use_pq
+        self.pipeline = pipeline
         if use_pq:
-            self._pq = BatchedPriorityQueue(pq_capacity,
-                                            c_max=min(max_batch, 64))
-            self._key_map: Dict[float, List[Request]] = {}
-            self._key_lock = threading.Lock()
-        self.engine = ParallelCombiner(self._combiner_code,
-                                       self._client_code)
+            self._pq_ctor = dict(capacity=pq_capacity,
+                                 c_max=min(max_batch, 64),
+                                 n_shards=n_shards)
+            self._pq = ShardedBatchedPQ(**self._pq_ctor)
+            # persistent key→request table: a key is inserted into the
+            # device PQ exactly once and stays there until extracted
+            self._table: Dict[float, Deque[_Entry]] = {}
+            self._queued = 0           # keys currently resident in the PQ
+        self._backlog: Deque[_Entry] = deque()   # FIFO-mode leftovers
+        self._pending: Deque[_Entry] = deque()   # publication buffer
+        self._cond = threading.Condition()
+        self._closed = False
         # instrumentation
         self.batches: List[int] = []
+        self.passes = 0
 
-    # -- Listing-1 plumbing -------------------------------------------------
-    def _order(self, requests: List[Request]) -> List[Request]:
-        if not self.use_pq or len(requests) <= 1:
-            return sorted(requests, key=lambda r: r.input.deadline)
-        # §4 batched PQ: one combined batch inserts every pending deadline
-        # key and extracts the max_batch smallest — a single device program.
-        # Keys are quantized to f32 (the device heap dtype) so extracted
-        # values round-trip exactly to the submission keys.
-        keys = [float(np.float32(r.input.deadline)) for r in requests]
-        with self._key_lock:
-            for r, k in zip(requests, keys):
-                self._key_map.setdefault(k, []).append(r)
-            self._pq.apply(0, keys)                     # insert all
-            got = self._pq.apply(min(len(requests), self.max_batch), [])
-            chosen: List[Request] = []
-            for k in got:
-                if k is None:
-                    continue
-                chosen.append(self._key_map[float(k)].pop(0))
-            # drain the unchosen keys (those requests stay PUSHED and are
-            # re-inserted on the next combining pass)
-            n_left = len(requests) - len(chosen)
-            if n_left:
-                self._pq.apply(n_left, [])
-            self._key_map.clear()
-        return chosen
-
-    def _combiner_code(self, engine: ParallelCombiner,
-                       requests: List[Request]) -> None:
-        if not requests:
-            return
-        chosen = self._order(requests)[: self.max_batch]
-        self.batches.append(len(chosen))
-        outs = self.step_fn([r.input.inputs for r in chosen])
-        for r, o in zip(chosen, outs):
-            r.res = o
-            r.status = Status.FINISHED
-        # unchosen requests remain PUSHED → next combining pass serves them
-
-    def _client_code(self, engine: ParallelCombiner, r: Request) -> None:
-        return                       # device lanes did the work
+        self._handoff: "queue.Queue[Any]" = queue.Queue(maxsize=1)
+        self._combiner = threading.Thread(
+            target=self._combiner_loop, name="pc-combiner", daemon=True)
+        self._device: Optional[threading.Thread] = None
+        if pipeline:
+            self._device = threading.Thread(
+                target=self._device_loop, name="pc-device", daemon=True)
+            self._device.start()
+        self._combiner.start()
 
     # -- public API ----------------------------------------------------------
+    def submit_async(self, inputs: Any, deadline: float = 0.0) -> Future:
+        """Non-blocking submit; returns a future for the request's output."""
+        if deadline != deadline:        # reject NaN at the client boundary
+            raise ValueError("deadline must not be NaN")
+        f: Future = Future()
+        ent = _Entry(BatchRequest(inputs=inputs, deadline=deadline), f)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._pending.append(ent)
+            self._cond.notify()
+        return f
+
     def submit(self, inputs: Any, deadline: float = 0.0) -> Any:
         """Blocking submit from a session thread; returns the output."""
-        return self.engine.execute(
-            "serve", BatchRequest(inputs=inputs, deadline=deadline))
+        return self.submit_async(inputs, deadline).result()
+
+    def close(self) -> None:
+        """Drain outstanding requests, then stop the worker threads."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._combiner.join()
+        if self._device is not None:
+            self._handoff.put(_SENTINEL)
+            self._device.join()
+
+    def __enter__(self) -> "PCScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     @property
     def mean_batch(self) -> float:
         return float(np.mean(self.batches)) if self.batches else 0.0
+
+    # -- combiner loop -------------------------------------------------------
+    def _has_leftovers(self) -> bool:
+        return (self._queued > 0) if self.use_pq else bool(self._backlog)
+
+    def _combiner_loop(self) -> None:
+        while True:
+            with self._cond:
+                while (not self._closed and not self._pending
+                       and not self._has_leftovers()):
+                    self._cond.wait()
+                if (self._closed and not self._pending
+                        and not self._has_leftovers()):
+                    return
+                new = list(self._pending)
+                self._pending.clear()
+            try:
+                chosen = self._order(new)
+            except BaseException as exc:
+                # ordering failure must not kill the combiner silently:
+                # fail every affected future (ordering state may be
+                # inconsistent, so flush leftovers too) and keep serving
+                self._abort_pending(new, exc)
+                continue
+            if not chosen:
+                continue
+            self.passes += 1
+            self.batches.append(len(chosen))
+            if self.pipeline:
+                self._handoff.put(chosen)   # blocks at pipeline depth 1
+            else:
+                self._run_batch(chosen)
+
+    def _abort_pending(self, new: List[_Entry], exc: BaseException) -> None:
+        doomed = list(new) + list(self._backlog)
+        self._backlog.clear()
+        if self.use_pq:
+            for bucket in self._table.values():
+                doomed.extend(bucket)
+            self._table.clear()
+            self._queued = 0
+            # the device PQ may hold keys for the doomed requests (and be
+            # mid-batch inconsistent) — rebuild it from scratch
+            self._pq = ShardedBatchedPQ(**self._pq_ctor)
+        for ent in doomed:
+            if not ent.future.done():
+                ent.future.set_exception(exc)
+
+    def _order(self, new: List[_Entry]) -> List[_Entry]:
+        """Pick ≤ max_batch most-urgent requests; leftovers stay queued."""
+        if not self.use_pq:
+            self._backlog.extend(new)
+            n = min(self.max_batch, len(self._backlog))
+            return [self._backlog.popleft() for _ in range(n)]
+        if self._queued == 0 and len(new) <= 1:
+            # nothing resident and ≤1 new: ordering is a no-op, skip the
+            # two PQ device programs on the low-concurrency hot path
+            return list(new)
+        # publish the NEW keys only — everything already in the device PQ
+        # stays there (persistent table; no clear-and-reinsert churn).
+        # host_key applies the device's full key quantization (f32 +
+        # flush-to-zero + finite clamp) so extracted keys hit the table.
+        for ent in new:
+            ent.key = host_key(ent.req.deadline)
+            self._table.setdefault(ent.key, deque()).append(ent)
+        if new:
+            self._pq.apply(0, [e.key for e in new])
+            self._queued += len(new)
+        want = min(self.max_batch, self._queued)
+        chosen: List[_Entry] = []
+        if want:
+            for k in self._pq.apply(want, []):
+                if k is None:
+                    # the device PQ is empty though bookkeeping says
+                    # otherwise — reconcile instead of livelocking, and
+                    # fail any requests whose keys were lost
+                    self._queued = 0
+                    stranded = [e for b in self._table.values() for e in b]
+                    self._table.clear()
+                    for ent in stranded:
+                        if not ent.future.done():
+                            ent.future.set_exception(RuntimeError(
+                                "deadline key lost from the device PQ"))
+                    break
+                self._queued -= 1
+                bucket = self._table.get(float(k))
+                if bucket is None:
+                    continue    # stale key flushed by an ordering abort
+                chosen.append(bucket.popleft())
+                if not bucket:
+                    del self._table[float(k)]
+        return chosen
+
+    # -- device side ---------------------------------------------------------
+    def _device_loop(self) -> None:
+        while True:
+            batch = self._handoff.get()
+            if batch is _SENTINEL:
+                return
+            self._run_batch(batch)
+
+    def _run_batch(self, batch: List[_Entry]) -> None:
+        try:
+            outs = list(self.step_fn([e.req.inputs for e in batch]))
+            for ent, out in zip(batch, outs):
+                if not ent.future.done():   # client may have cancelled
+                    ent.future.set_result(out)
+            if len(outs) < len(batch):
+                # a short return must not strand the tail forever
+                raise RuntimeError(
+                    f"step_fn returned {len(outs)} outputs for a batch "
+                    f"of {len(batch)}")
+        except BaseException as exc:   # propagate to every waiting client
+            for ent in batch:
+                if not ent.future.done():
+                    ent.future.set_exception(exc)
 
 
 class SerialScheduler:

@@ -1,0 +1,180 @@
+"""Sharded batched PQ (DESIGN.md §9): differential fuzz vs SequentialHeap.
+
+The K-sharded queue must be observationally identical to the single
+sequential heap for every combined batch with ne, ni ≤ c_max (extracts see
+the pre-batch multiset; answers ascending).  Batches larger than c_max are
+applied in slices (same contract as ``BatchedPriorityQueue.apply``), so
+oversized batches are checked for multiset conservation + per-shard heap
+invariants instead of exact interleaving.
+"""
+import numpy as np
+import pytest
+
+from repro.core.batched_pq import check_heap_property
+from repro.core.seq_pq import SequentialHeap
+from repro.core.sharded_pq import (
+    ShardedBatchedPQ,
+    route_hash,
+    route_range,
+)
+
+C_MAX = 8
+CAP = 1024
+
+
+def _check_invariants(pq: ShardedBatchedPQ):
+    a = np.asarray(pq.state.a)
+    sizes = np.asarray(pq.state.size)
+    for k in range(pq.n_shards):
+        assert check_heap_property(a[k], int(sizes[k]))
+        assert a[k, 0] == np.inf            # scratch slot invariant
+
+
+def _fuzz_against_oracle(pq: ShardedBatchedPQ, rng, steps: int,
+                         value_range: float = 1000.0):
+    oracle = SequentialHeap()
+    for v in pq.values():
+        oracle.insert(v)
+    for _ in range(steps):
+        ne = int(rng.integers(0, C_MAX + 1))
+        ni = int(rng.integers(0, C_MAX + 1))
+        ins = rng.uniform(0, value_range, ni).astype(np.float32).tolist()
+        got = pq.apply(ne, ins)
+        exp = [oracle.extract_min() for _ in range(ne)]
+        for x in ins:
+            oracle.insert(x)
+        got_real = sorted(g for g in got if g is not None)
+        exp_real = sorted(e for e in exp if e is not None)
+        assert got.count(None) == exp.count(None)
+        np.testing.assert_allclose(got_real, exp_real, rtol=1e-6)
+        np.testing.assert_allclose(pq.values(), oracle.values(), rtol=1e-6)
+        _check_invariants(pq)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_differential_fuzz_vs_sequential_heap(n_shards):
+    """Mixed extract/insert batches, empty-queue extracts included."""
+    rng = np.random.default_rng(100 + n_shards)
+    pq = ShardedBatchedPQ(CAP, c_max=C_MAX, n_shards=n_shards)
+    _fuzz_against_oracle(pq, rng, steps=12)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_differential_fuzz_key_range_routing(n_shards):
+    rng = np.random.default_rng(7)
+    pq = ShardedBatchedPQ(CAP, c_max=C_MAX, n_shards=n_shards,
+                          key_range=(0.0, 1000.0))
+    _fuzz_against_oracle(pq, rng, steps=10)
+
+
+def test_prepopulated_matches_oracle():
+    rng = np.random.default_rng(42)
+    init = rng.uniform(0, 500, 60).astype(np.float32).tolist()
+    pq = ShardedBatchedPQ(CAP, c_max=C_MAX, n_shards=4, values=init)
+    np.testing.assert_allclose(pq.values(), sorted(init), rtol=1e-6)
+    assert len(pq) == 60
+    _fuzz_against_oracle(pq, rng, steps=8, value_range=500.0)
+
+
+def test_batch_larger_than_size():
+    """Extract far more than the live size in one combined batch."""
+    pq = ShardedBatchedPQ(CAP, c_max=C_MAX, n_shards=4,
+                          values=[5.0, 1.0, 9.0])
+    got = pq.apply(C_MAX, [])
+    assert [g for g in got if g is not None] == [1.0, 5.0, 9.0]
+    assert got.count(None) == C_MAX - 3
+    assert len(pq) == 0
+    _check_invariants(pq)
+
+
+def test_oversized_batches_conserve_multiset():
+    """ne, ni > c_max: sliced applies; conservation + invariants hold."""
+    rng = np.random.default_rng(9)
+    init = rng.uniform(0, 100, 20).astype(np.float32).tolist()
+    pq = ShardedBatchedPQ(CAP, c_max=4, n_shards=2, values=init)
+    ins = rng.uniform(0, 100, 11).astype(np.float32).tolist()
+    got = pq.apply(10, ins)
+    assert len(got) == 10
+    n_extracted = sum(1 for g in got if g is not None)
+    assert len(pq.values()) == len(init) + len(ins) - n_extracted
+    _check_invariants(pq)
+
+
+def test_empty_queue_extracts_return_none():
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=2)
+    assert pq.apply(3, []) == [None, None, None]
+
+
+def test_extract_order_is_globally_ascending():
+    """One batch answer merges across shards in ascending order."""
+    vals = [float(v) for v in (50, 3, 7, 99, 1, 42, 8, 60)]
+    pq = ShardedBatchedPQ(256, c_max=8, n_shards=4, values=vals)
+    got = pq.apply(5, [])
+    assert got == sorted(vals)[:5]
+
+
+def test_per_shard_capacity_overflow_rejected():
+    """Routing skew that would overflow one shard raises instead of
+    silently dropping keys in the device scatter."""
+    pq = ShardedBatchedPQ(8, c_max=4, n_shards=2, key_range=(0.0, 1.0))
+    with pytest.raises(ValueError, match="capacity"):
+        for _ in range(4):                 # all keys route to shard 0
+            pq.apply(0, [0.1, 0.1, 0.1])
+    # the queue is still coherent after the refusal
+    assert pq.values() == sorted(pq.values())
+
+
+def test_nonfinite_inserts_rejected():
+    """±inf is the empty-slot sentinel — it must never enter the heap."""
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=2)
+    for bad in (float("inf"), float("-inf"), float("nan")):
+        with pytest.raises(ValueError):
+            pq.apply(0, [1.0, bad])
+    assert len(pq) == 0
+
+
+def test_host_key_matches_device_storage():
+    from repro.core.sharded_pq import host_key
+    big = float(np.finfo(np.float32).max)
+    assert host_key(1e-39) == 0.0          # flush-to-zero
+    assert host_key(float("inf")) == big   # clamped into the heap domain
+    assert host_key(float("-inf")) == -big
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=2)
+    for x in (1e-39, 0.3, 7.5, 1e30):
+        pq.apply(0, [host_key(x)])
+    got = pq.apply(4, [])
+    assert got == sorted(host_key(x) for x in (1e-39, 0.3, 7.5, 1e30))
+
+
+def test_routing_is_deterministic_and_in_range():
+    import jax.numpy as jnp
+    vals = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 64),
+                       jnp.float32)
+    for K in (1, 3, 8):
+        h1, h2 = route_hash(vals, K), route_hash(vals, K)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+        assert int(h1.min()) >= 0 and int(h1.max()) < K
+        r = route_range(vals, K, 0.0, 1.0)
+        assert int(r.min()) >= 0 and int(r.max()) < K
+
+
+def test_single_dispatch_per_slice():
+    """K-shard batch apply stays one jitted call per ≤c_max slice."""
+    from repro.core import sharded_pq as sp
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=4,
+                          values=[1.0, 2.0, 3.0])
+    calls = []
+    orig = sp.sharded_apply_batch
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    sp.sharded_apply_batch = counting
+    try:
+        pq.apply(2, [0.5, 7.0])           # one slice
+        assert len(calls) == 1
+        pq.apply(6, [])                   # two slices of c_max=4
+        assert len(calls) == 3
+    finally:
+        sp.sharded_apply_batch = orig

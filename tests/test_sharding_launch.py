@@ -13,10 +13,17 @@ from repro.launch import sharding as sh
 from repro.launch.mesh import mesh_axes
 
 
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:   # jax ≤ 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def fake_mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_mesh_axes_helper():

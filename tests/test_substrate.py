@@ -188,6 +188,178 @@ def test_pq_ordering_prefers_earlier_deadlines():
     assert sorted(order) == list(range(6))
 
 
+def test_submit_async_returns_futures_and_combines():
+    """submit_async is non-blocking, returns futures; flooding the
+    scheduler with concurrent async submissions yields mean_batch > 1."""
+    from concurrent.futures import Future
+
+    def step_fn(rows):
+        time.sleep(0.002)              # device step in flight
+        return [r * 10 for r in rows]
+
+    sch = PCScheduler(step_fn, max_batch=8)
+    gate = threading.Event()
+    futs = {}
+
+    def sess(tid):
+        gate.wait()
+        futs[tid] = [sch.submit_async(tid * 100 + i, deadline=float(i))
+                     for i in range(10)]
+
+    ts = [threading.Thread(target=sess, args=(t,)) for t in range(4)]
+    [t.start() for t in ts]
+    gate.set()
+    [t.join() for t in ts]
+    for tid, fs in futs.items():
+        assert all(isinstance(f, Future) for f in fs)
+        assert [f.result(timeout=30) for f in fs] == [
+            (tid * 100 + i) * 10 for i in range(10)]
+    assert sum(sch.batches) == 40
+    assert sch.mean_batch > 1           # combining under concurrent load
+    sch.close()
+
+
+def test_async_scheduler_drains_on_close():
+    sch = PCScheduler(lambda rows: [r + 1 for r in rows], max_batch=4)
+    fs = [sch.submit_async(i) for i in range(13)]
+    sch.close()                         # must serve everything first
+    assert [f.result(timeout=5) for f in fs] == [i + 1 for i in range(13)]
+    with pytest.raises(RuntimeError):
+        sch.submit_async(0)
+
+
+def test_async_scheduler_propagates_step_errors():
+    def boom(rows):
+        raise ValueError("step failed")
+
+    sch = PCScheduler(boom, max_batch=4, use_pq=False)
+    f = sch.submit_async(1)
+    with pytest.raises(ValueError, match="step failed"):
+        f.result(timeout=5)
+    sch.close()
+
+
+def test_persistent_pq_table_no_reinsert_churn():
+    """Unchosen requests stay in the device PQ across passes: total PQ
+    insert traffic equals the number of requests, not O(pending·passes)."""
+    inserted = []
+
+    sch = PCScheduler(lambda rows: (time.sleep(0.002), rows)[1],
+                      max_batch=2)
+    orig_apply = sch._pq.apply
+
+    def counting_apply(extracts, inserts):
+        inserted.extend(inserts)
+        return orig_apply(extracts, inserts)
+
+    sch._pq.apply = counting_apply
+    gate = threading.Event()
+
+    def sess(tid):
+        gate.wait()
+        sch.submit(tid, deadline=float(tid))
+
+    ts = [threading.Thread(target=sess, args=(t,)) for t in range(8)]
+    [t.start() for t in ts]
+    gate.set()
+    [t.join() for t in ts]
+    sch.close()
+    # each key is published at most once (never re-inserted on later
+    # passes); single-request passes may bypass the device PQ entirely
+    assert len(inserted) <= 8
+    assert len(inserted) == len(set(inserted))
+
+
+def test_extreme_deadlines_round_trip_through_device_pq():
+    """Subnormal deadlines (flushed to 0 on device) and ±inf deadlines
+    (clamped to the finite f32 range) must still resolve to their
+    requests instead of killing the combiner with a table miss."""
+    sch = PCScheduler(lambda rows: [r * 2 for r in rows], max_batch=4)
+    deadlines = [1e-39, 0.0, float("inf"), 5.0, float("-inf")]
+    futs = [sch.submit_async(i, deadline=d)
+            for i, d in enumerate(deadlines)]
+    assert [f.result(timeout=10) for f in futs] == [0, 2, 4, 6, 8]
+    sch.close()
+
+
+def test_short_step_fn_output_fails_tail_futures():
+    """A step_fn that returns fewer outputs than requests must error the
+    stranded futures instead of hanging them forever."""
+    sch = PCScheduler(lambda rows: rows[:-1], max_batch=4, use_pq=False)
+    f = sch.submit_async(7)
+    with pytest.raises(RuntimeError, match="0 outputs for a batch of 1"):
+        f.result(timeout=10)
+    sch.close()
+
+
+def test_cancelled_future_does_not_poison_batch():
+    """Cancelling one request must not steal the results of the others
+    batched with it."""
+    release = threading.Event()
+
+    def step_fn(rows):
+        release.wait(10)
+        return [r * 10 for r in rows]
+
+    sch = PCScheduler(step_fn, max_batch=4, use_pq=False, pipeline=False)
+    f1 = sch.submit_async(1)
+    f2 = sch.submit_async(2)
+    f3 = sch.submit_async(3)
+    assert f2.cancel() or f2.done()     # cancel while pending/queued
+    release.set()
+    assert f1.result(timeout=10) == 10
+    assert f3.result(timeout=10) == 30  # unaffected by f2's cancellation
+    sch.close()
+
+
+def test_nonfinite_init_values_rejected():
+    from repro.core import BatchedPriorityQueue, ShardedBatchedPQ
+    for cls, kw in ((ShardedBatchedPQ, dict(n_shards=2)),
+                    (BatchedPriorityQueue, {})):
+        with pytest.raises(ValueError):
+            cls(256, c_max=4, values=[1.0, float("inf")], **kw)
+
+
+def test_nan_deadline_rejected_at_submit():
+    sch = PCScheduler(lambda rows: rows, max_batch=4)
+    with pytest.raises(ValueError, match="NaN"):
+        sch.submit_async(1, deadline=float("nan"))
+    assert sch.submit(5, deadline=0.0) == 5     # scheduler unharmed
+    sch.close()
+
+
+def test_ordering_failure_fails_futures_not_silence():
+    """An exception on the ordering path must surface on the futures and
+    leave the scheduler alive for later requests."""
+    started = threading.Event()
+
+    def slow(rows):
+        started.set()
+        time.sleep(0.15)
+        return rows
+
+    sch = PCScheduler(slow, max_batch=4, pipeline=False)
+
+    def boom(extracts, inserts):
+        raise RuntimeError("device fell over")
+
+    orig_pq = sch._pq
+    f0 = sch.submit_async(0, deadline=0.0)   # single → fast path, no PQ
+    assert started.wait(10)
+    sch._pq.apply = boom
+    # two requests accumulate while the inline step sleeps → the next
+    # pass has len(new) == 2 and must go through the (broken) device PQ
+    f1 = sch.submit_async(1, deadline=1.0)
+    f2 = sch.submit_async(2, deadline=2.0)
+    for f in (f1, f2):
+        with pytest.raises(RuntimeError, match="device fell over"):
+            f.result(timeout=10)
+    assert f0.result(timeout=10) == 0
+    assert sch._pq is not orig_pq          # PQ rebuilt after the abort
+    assert sch.submit(21, deadline=0.0) == 21   # still serving
+    sch.close()
+
+
 def test_serial_scheduler_baseline():
     sch = SerialScheduler(lambda rows: [r + 1 for r in rows])
     assert sch.submit(41) == 42
