@@ -8,6 +8,13 @@ Implementations (paper's rivals adapted per DESIGN.md §8.4):
   Lock      — global mutex over the sequential heap
   Lock SL   — global mutex over the skip-list PQ (fine-grained stand-in)
 
+Ablation rows (EXPERIMENTS §Ablations; DESIGN.md §10):
+  PC-K{K} nodonate — same program, donation off: XLA copies the
+              (K, capacity) heap buffers every combining pass
+  PC-K{K} pallas   — phases 1/3/4 as shard-grid Pallas kernels
+              (grid=(K,)); on a CPU backend these run in interpret mode
+              (slow — enable with --ablate-pallas; on-by-default on TPU)
+
 Workload (paper §5.2): prepopulate with S values from range R; each thread
 alternates 50/50 Insert(random)/ExtractMin.
 
@@ -24,6 +31,8 @@ Two comparison tiers (DESIGN.md §8.1):
 from __future__ import annotations
 
 import argparse
+import math
+
 import numpy as np
 
 from repro.core.batched_pq import BatchedPriorityQueue
@@ -35,18 +44,44 @@ from repro.core.skiplist_pq import SkipListPQ
 
 from .common import save, throughput
 
+C_MAX = 16
+
+
+def shard_capacity(n_keys: int, n_shards: int, c_max: int = C_MAX,
+                   z: float = 6.0) -> int:
+    """Per-shard heap capacity that survives hash-routing skew w.h.p.
+
+    Hash routing drops each of the ≤ ``n_keys`` live keys into one of K
+    shards i.i.d. uniformly, so a shard's occupancy is Binomial(n, 1/K).
+    Size for mean + z·σ (normal tail of the binomial: z = 6 puts the
+    per-shard overflow odds below 1e-9 — the wrapper's occupancy guard
+    still refuses loudly in the astronomically unlikely tail) plus the
+    worst case of one combined batch (c_max inserts all routed to the
+    same shard) and the 1-indexed scratch slot.  Replaces the old
+    ``2·S//K + 4096`` guess, which under-provisioned small K and wasted
+    memory at large K.
+    """
+    n = max(int(n_keys), 1)
+    p = 1.0 / n_shards
+    sigma = math.sqrt(n * p * (1.0 - p))
+    return int(math.ceil(n * p + z * sigma)) + c_max + 2
+
 
 def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
-             value_range=2 ** 31 - 1, seed=0, shard_counts=(1, 4, 8)):
-    rng = np.random.default_rng(seed)
+             value_range=2 ** 31 - 1, seed=0, shard_counts=(1, 4, 8),
+             ablate_donation=True, ablate_pallas=None):
+    if ablate_pallas is None:
+        import jax
+        ablate_pallas = jax.default_backend() == "tpu"
     results = []
     for S in sizes:
+        rng = np.random.default_rng(seed)
         init = rng.uniform(0, value_range, S).astype(np.float32)
 
-        def make_impls():
-            pq = BatchedPriorityQueue(2 * S + 4096, c_max=16,
+        def make_impls(P):
+            pq = BatchedPriorityQueue(2 * S + 4096, c_max=C_MAX,
                                       values=init)
-            pq_serial = BatchedPriorityQueue(2 * S + 4096, c_max=16,
+            pq_serial = BatchedPriorityQueue(2 * S + 4096, c_max=C_MAX,
                                              values=init)
             heap = SequentialHeap()
             heap.a = [float("-inf")] + sorted(init.tolist())
@@ -62,17 +97,28 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                 "Lock": LockDS(heap2).execute,
                 "Lock SL": LockDS(sl).execute,
             }
+            # binomial-tail shard sizing: the run inserts at most P*ops
+            # keys on top of the S initial ones (+ the 2-op jit warmup)
+            n_keys = S + P * ops + 2
             # sharded vs single-heap (DESIGN.md §9): same PC engine, the
-            # K-shard queue applies the combined batch as ONE vmapped
-            # program — K=1 isolates the vmap overhead vs plain "PC"
+            # K-shard queue applies the combined batch as ONE device
+            # program — K=1 isolates the sharding overhead vs plain "PC"
             for K in shard_counts:
+                cap_k = shard_capacity(n_keys, K)
                 impls[f"PC-K{K}"] = pc_sharded_priority_queue(
-                    2 * S // max(K, 1) + 4096, c_max=16, n_shards=K,
-                    values=init).execute
+                    cap_k, c_max=C_MAX, n_shards=K, values=init).execute
+                if ablate_donation:
+                    impls[f"PC-K{K} nodonate"] = pc_sharded_priority_queue(
+                        cap_k, c_max=C_MAX, n_shards=K, values=init,
+                        donate=False).execute
+                if ablate_pallas:
+                    impls[f"PC-K{K} pallas"] = pc_sharded_priority_queue(
+                        cap_k, c_max=C_MAX, n_shards=K, values=init,
+                        use_pallas=True).execute
             return impls
 
         for P in threads:
-            impls = make_impls()
+            impls = make_impls(P)
             for name, ex in impls.items():
                 # warm the jit caches outside the timed window
                 ex("insert", 0.5)
@@ -90,7 +136,7 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                 tput = throughput(P, ops, body)
                 results.append({"impl": name, "size": S, "threads": P,
                                 "ops_per_s": round(tput, 1)})
-                print(f"[pq] S={S} P={P} {name:10s} {tput:10.0f} ops/s")
+                print(f"[pq] S={S} P={P} {name:18s} {tput:10.0f} ops/s")
     save("bench_pq", results)
     return results
 
@@ -120,9 +166,18 @@ def main(argv=None):
     ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--shards", type=int, nargs="+", default=[1, 4, 8],
                     help="shard counts K for the PC-K rows")
+    ap.add_argument("--no-ablate-donation", action="store_true",
+                    help="skip the 'PC-K{K} nodonate' ablation rows")
+    ap.add_argument("--ablate-pallas", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="force the 'PC-K{K} pallas' ablation rows on/off "
+                         "(default: on only on a TPU backend — interpret "
+                         "mode on CPU is orders of magnitude slower)")
     a = ap.parse_args(argv)
     bench_pq(sizes=(a.size,), threads=tuple(a.threads), ops=a.ops,
-             shard_counts=tuple(a.shards))
+             shard_counts=tuple(a.shards),
+             ablate_donation=not a.no_ablate_donation,
+             ablate_pallas=a.ablate_pallas)
 
 
 if __name__ == "__main__":

@@ -4,8 +4,13 @@ The production claim (DESIGN.md §3): under concurrent sessions, the
 parallel-combining scheduler turns N per-request device dispatches into
 ~N/batch combined dispatches, with the batched-PQ deadline ordering.
 Measures requests/s and device-step counts for the serial baseline, the
-async PC scheduler with blocking submits ("pc") and the fully non-blocking
-``submit_async`` client path ("pc-async") over the reduced qwen2 model.
+async PC scheduler with blocking submits ("pc"), the fully non-blocking
+``submit_async`` client path ("pc-async"), and the zero-copy ablation
+("pc-nodonate": the deadline PQ copies its heap buffers every combining
+pass — EXPERIMENTS §Ablations) over the reduced qwen2 model.  The
+"pc-pallas" mode (PQ through the shard-grid kernels, DESIGN.md §10) is
+opt-in via ``schedulers=``, not in the default run — Pallas interpret
+mode on a CPU backend is too slow for a benchmark row.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ from .common import save
 
 def bench_serving(arch="qwen2_0_5b", session_counts=(1, 2, 4, 8),
                   requests=3, tokens=6, max_batch=8,
-                  schedulers=("serial", "pc", "pc-async")):
+                  schedulers=("serial", "pc", "pc-async", "pc-nodonate")):
     results = []
     for sched in schedulers:
         for s in session_counts:

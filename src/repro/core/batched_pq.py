@@ -27,11 +27,16 @@ count-partition preserves Thm 2, see the inline notes.
 Everything is shape-static (batch capacity ``c_max`` is a compile-time
 constant; the actual counts are traced scalars with masks) so the whole
 batch application jits to a single XLA program.
+
+Zero-copy pass structure (DESIGN.md §10): the jitted entry points donate
+the heap state (``donate_argnums``) so the (capacity,)-sized arrays update
+in place instead of being copied every pass, and the host slicing loop
+(``apply_sliced_async``) keeps every per-slice result on device — ONE
+blocking host transfer per ``apply()`` call, at result consumption.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +44,10 @@ import numpy as np
 
 INF = jnp.float32(jnp.inf)
 _TINY = float(np.finfo(np.float32).tiny)        # smallest normal f32
+
+# All device→host transfers on the PQ hot path route through this hook so
+# tests can count blocking syncs (DESIGN.md §10: at most one per apply()).
+_host_fetch = jax.device_get
 
 
 def _flush_subnormals(x):
@@ -102,6 +111,7 @@ def _k_smallest(a: jax.Array, size: jax.Array, n_extract: jax.Array,
     Returned in ascending value order; padded with (0, +inf).
     The frontier holds candidate nodes whose parents were already taken —
     the heap property makes the running frontier-min the global next-min.
+    (The Pallas twin is ``kernels/heap_kmin`` — element-wise identical.)
     """
     F = 2 * c_max + 1
     f_ids = jnp.zeros((F,), jnp.int32).at[0].set(1)
@@ -312,6 +322,81 @@ def _insert_chunk(a, size, chunk_vals, m_chunk, c_max, max_depth):
 
 
 # ---------------------------------------------------------------------------
+# Composable phase helpers (also used, vmapped, by the sharded queue)
+# ---------------------------------------------------------------------------
+def _phases12(a, size, n_extract, insert_vals, n_insert, *, c_max: int,
+              phase1: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Combiner phases 1–2 + client-phase setup (pure XLA, vmappable).
+
+    Returns ``(a, size, out_vals, k_eff, starts, active, rem, m_left)``:
+    the refilled heap, the extracted values (ascending, +inf padded), the
+    sift wavefront's start cursors, and the sorted suffix of insert values
+    still to be placed by phase 4.
+    """
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
+    n_insert = jnp.minimum(jnp.int32(n_insert), c_max)
+    insert_vals = _flush_subnormals(insert_vals.astype(jnp.float32))
+    insert_vals = jnp.sort(jnp.where(lane < n_insert, insert_vals, INF))
+
+    if phase1 is None:
+        out_ids, out_vals = _k_smallest(a, size, n_extract, c_max)
+    else:
+        out_ids, out_vals = phase1
+    k_eff = jnp.minimum(n_extract, size)
+    L = jnp.minimum(k_eff, n_insert)
+
+    a, size = _refill(a, size, out_ids, insert_vals, k_eff, L, c_max)
+
+    starts = jnp.where(lane < k_eff, out_ids, 0)
+    active = (lane < k_eff) & (starts >= 1) & (starts <= size)
+
+    m_left = n_insert - L
+    rem = _gather(insert_vals, lane + L, lane < m_left)  # sorted suffix
+    return a, size, out_vals, k_eff, starts, active, rem, m_left
+
+
+def _chunk_len(size, left):
+    """Length of the next level-chunk: targets ``size+1 ..`` truncated at
+    the last id on that tree level.  Elementwise — shared by the scalar
+    loop below and the (K,)-vector loop in ``sharded_pq.py``."""
+    lo = size + 1
+    level_end = (jnp.int32(2) << _depth(lo)) - 1       # last id on lo's level
+    return jnp.minimum(left, level_end - lo + 1)
+
+
+def _phase4(a, size, rem, m_left, insert_fn, *, c_max: int, max_depth: int):
+    """Remaining inserts, chunked at level boundaries.
+
+    ``insert_fn(a, size, vals, m) -> (a, size)`` places one sorted
+    level-chunk — the pure-XLA `_insert_chunk` or the Pallas kernel.
+    (The K-shard variant of this loop lives in ``sharded_pq.py`` — same
+    chunk-boundary math via ``_chunk_len``, vectorized over shards.)
+    """
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+
+    def chunk(_, carry):
+        a, size, off, left = carry
+        m = _chunk_len(size, left)
+        vals = _gather(rem, off + lane, lane < m)
+        a, size = insert_fn(a, size, vals, m)
+        return (a, size, off + m, left - m)
+
+    a, size, _, _ = jax.lax.fori_loop(
+        0, max_depth + 1, chunk, (a, size, jnp.int32(0), m_left)
+    )
+    return a, size
+
+
+def _phase4_xla(a, size, rem, m_left, *, c_max: int, max_depth: int):
+    """Pure-XLA phase 4 (vmappable — the sharded queue's fallback path)."""
+    return _phase4(
+        a, size, rem, m_left,
+        lambda a, s, v, m: _insert_chunk(a, s, v, m, c_max, max_depth),
+        c_max=c_max, max_depth=max_depth)
+
+
+# ---------------------------------------------------------------------------
 # The full batch application (paper §4, COMBINER_CODE + CLIENT_CODE fused
 # into one SPMD program — the "clients" are the vector lanes)
 # ---------------------------------------------------------------------------
@@ -322,10 +407,11 @@ def apply_batch_impl(state: HeapState, n_extract: jax.Array,
                      ) -> Tuple[HeapState, jax.Array, jax.Array]:
     """Traceable body of :func:`apply_batch` (phases 1–4, un-jitted).
 
-    Exposed separately so the sharded queue (``sharded_pq.py``, DESIGN.md §9)
-    can ``jax.vmap`` the whole per-shard batch application over the shard
-    axis and jit the K-shard program as ONE dispatch.  ``use_pallas`` must
-    be False under vmap (the Pallas kernels are written for a single heap).
+    ``use_pallas`` routes phases 1, 3 and 4 through the heap kernels
+    (``kernels/heap_kmin``, ``heap_sift``, ``heap_insert``) — shard-grid
+    kernels dispatched with K=1 here; the K-sharded queue
+    (``sharded_pq.py``, DESIGN.md §9–§10) calls the same phase helpers
+    across all K shards with ``grid=(K,)`` kernels.
 
     ``phase1`` optionally supplies a precomputed phase-1 result
     ``(out_ids, out_vals)`` — the first ``n_extract`` smallest nodes,
@@ -336,27 +422,17 @@ def apply_batch_impl(state: HeapState, n_extract: jax.Array,
     a, size = state
     cap = a.shape[0]
     max_depth = int(np.ceil(np.log2(cap))) + 1
-    lane = jnp.arange(c_max, dtype=jnp.int32)
 
-    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
-    n_insert = jnp.minimum(jnp.int32(n_insert), c_max)
-    insert_vals = _flush_subnormals(insert_vals.astype(jnp.float32))
-    insert_vals = jnp.sort(jnp.where(lane < n_insert, insert_vals, INF))
+    if phase1 is None and use_pallas:
+        from repro.kernels.heap_kmin import k_smallest as _kmin_k
+        n_e = jnp.minimum(jnp.int32(n_extract), c_max)
+        phase1 = _kmin_k(a, size, n_e, c_max=c_max)
 
-    # phase 1: k smallest
-    if phase1 is None:
-        out_ids, out_vals = _k_smallest(a, size, n_extract, c_max)
-    else:
-        out_ids, out_vals = phase1
-    k_eff = jnp.minimum(n_extract, size)
-    L = jnp.minimum(k_eff, n_insert)
-
-    # phase 2: refill
-    a, size = _refill(a, size, out_ids, insert_vals, k_eff, L, c_max)
+    a, size, out_vals, k_eff, starts, active, rem, m_left = _phases12(
+        a, size, n_extract, insert_vals, n_insert, c_max=c_max,
+        phase1=phase1)
 
     # phase 3: parallel sift wavefront from still-valid extracted nodes
-    starts = jnp.where(lane < k_eff, out_ids, 0)
-    active = (lane < k_eff) & (starts >= 1) & (starts <= size)
     if use_pallas:
         from repro.kernels.heap_sift import sift_wavefront as _sift_k
         a = _sift_k(a, size, starts, active)
@@ -364,34 +440,33 @@ def apply_batch_impl(state: HeapState, n_extract: jax.Array,
         a = _sift_wavefront(a, size, starts, active)
 
     # phase 4: remaining inserts, chunked at level boundaries
-    m_left = n_insert - L
-    rem = _gather(insert_vals, lane + L, lane < m_left)  # sorted suffix
+    if use_pallas:
+        from repro.kernels.heap_insert import insert_chunk_sharded as _ins_k
 
-    def chunk(_, carry):
-        a, size, off, left = carry
-        lo = size + 1
-        level_end = (jnp.int32(2) << _depth(lo)) - 1   # last id on lo's level
-        m = jnp.minimum(left, level_end - lo + 1)
-        vals = _gather(rem, off + lane, lane < m)
-        if use_pallas:
-            from repro.kernels.heap_insert import insert_chunk as _ins_k
-            a, size = _ins_k(a, size, vals, m)
-        else:
-            a, size = _insert_chunk(a, size, vals, m, c_max, max_depth)
-        return (a, size, off + m, left - m)
+        # pad the insert headroom once; re-padding inside the chunk loop
+        # would copy the whole heap max_depth times per pass
+        a = jnp.concatenate([a, jnp.full((c_max,), INF, a.dtype)])
 
-    a, size, _, _ = jax.lax.fori_loop(
-        0, max_depth + 1, chunk, (a, size, jnp.int32(0), m_left)
-    )
+        def ins_fn(ah, s, v, m):
+            out, ns = _ins_k(ah[None], jnp.reshape(s, (1,)), v[None],
+                             jnp.reshape(m, (1,)), pre_padded=True)
+            return out[0], ns[0]
+
+        a, size = _phase4(a, size, rem, m_left, ins_fn,
+                          c_max=c_max, max_depth=max_depth)
+        a = a[:cap]
+    else:
+        a, size = _phase4_xla(a, size, rem, m_left, c_max=c_max,
+                              max_depth=max_depth)
 
     return HeapState(a, size), out_vals, k_eff
 
 
-@partial(jax.jit, static_argnames=("c_max", "use_pallas"))
-def apply_batch(state: HeapState, n_extract: jax.Array,
-                insert_vals: jax.Array, n_insert: jax.Array,
-                *, c_max: int,
-                use_pallas: bool = False) -> Tuple[HeapState, jax.Array, jax.Array]:
+def _apply_batch(state: HeapState, n_extract: jax.Array,
+                 insert_vals: jax.Array, n_insert: jax.Array,
+                 *, c_max: int,
+                 use_pallas: bool = False) -> Tuple[HeapState, jax.Array,
+                                                    jax.Array]:
     """Apply a combined batch (jitted — one XLA program).
 
     Args:
@@ -406,6 +481,17 @@ def apply_batch(state: HeapState, n_extract: jax.Array,
     """
     return apply_batch_impl(state, n_extract, insert_vals, n_insert,
                             c_max=c_max, use_pallas=use_pallas)
+
+
+# ``state`` is DONATED: the (capacity,) heap array updates in place instead
+# of being copied every pass (DESIGN.md §10).  Callers must not reuse a
+# state after passing it in — the wrapper classes below never do.
+apply_batch = jax.jit(_apply_batch, static_argnames=("c_max", "use_pallas"),
+                      donate_argnums=(0,))
+# Ablation twin (EXPERIMENTS §Ablations): identical program, no donation —
+# XLA copies the heap buffers every pass.
+apply_batch_undonated = jax.jit(_apply_batch,
+                                static_argnames=("c_max", "use_pallas"))
 
 
 # ---------------------------------------------------------------------------
@@ -430,64 +516,133 @@ def check_heap_property(a: np.ndarray, size: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Host-facing wrappers
+# Host-facing wrappers — sync-free slicing (DESIGN.md §10)
 # ---------------------------------------------------------------------------
-def apply_sliced(step, c_max: int, extracts: int, inserts) -> list:
-    """Shared host-side batching loop for the PQ wrappers.
+class AsyncBatchResult:
+    """Deferred host view of one ``apply()`` call's extracted values.
+
+    Holds the per-slice device arrays (+inf-padded, ascending per slice)
+    and performs ONE blocking device→host transfer, at first
+    :meth:`result` call — the device keeps computing while the host is
+    free to publish more batches (the scheduler's pipelined combiner).
+    The +inf padding doubles as the empty-queue sentinel: a slice that
+    asked for ``ne`` extracts but fetched ``k`` finite values reports
+    ``ne - k`` ``None`` entries, without shipping ``k_eff`` separately.
+    """
+
+    def __init__(self, slice_ne: List[int], slice_vals: List[jax.Array],
+                 extra: Optional[Callable[[], object]] = None,
+                 on_fetch: Optional[Callable[[object], None]] = None):
+        self._ne = slice_ne
+        self._vals = slice_vals
+        self._extra = extra
+        self._on_fetch = on_fetch
+        self._out: Optional[list] = None
+
+    def result(self) -> list:
+        """Extracted values ascending per slice, ``None``-padded for
+        extracts that found the queue empty (cached after first call)."""
+        if self._out is None:
+            # ``extra`` is evaluated NOW, not at apply time: under
+            # pipelined consumption (result() of pass N−1 while pass N is
+            # in flight) the fetched sizes then reflect every dispatched
+            # slice — exactly the prefix the host mirror has accounted.
+            extra_dev = self._extra() if self._extra is not None else None
+            vals_h, extra_h = _host_fetch((self._vals, extra_dev))
+            out: list = []
+            for ne, vals in zip(self._ne, vals_h):
+                vals = np.asarray(vals)
+                k = int(np.isfinite(vals[:ne]).sum())
+                out.extend(vals[:k].tolist())
+                out.extend([None] * (ne - k))      # empty-queue extracts
+            if self._on_fetch is not None:
+                self._on_fetch(extra_h)
+            self._out = out
+            self._vals = self._extra = self._on_fetch = None
+        return self._out
+
+
+def apply_sliced_async(step, c_max: int, extracts: int, inserts,
+                       *, extra=None,
+                       on_fetch: Optional[Callable[[object], None]] = None,
+                       ) -> AsyncBatchResult:
+    """Shared host-side batching loop for the PQ wrappers — sync-free.
 
     Applies a combined batch of ``extracts`` ExtractMin + ``inserts`` in
     ≤ c_max slices; ``step(ne, buf, ni) -> (vals, k_eff)`` runs one device
-    program over one slice (and updates the caller's state).  Returns the
-    extracted values ascending per slice, ``None``-padded for extracts
-    that found the queue empty.
+    program over one slice (and updates the caller's state).  The loop
+    never touches a device value: slice shapes depend only on host counts,
+    and the per-slice results stay on device inside the returned
+    :class:`AsyncBatchResult`.  ``extra`` (an optional thunk returning a
+    device pytree, e.g. the current shard sizes — evaluated at RESULT
+    consumption, so it reflects every slice dispatched by then) is fetched
+    alongside the values in the one blocking transfer and handed to
+    ``on_fetch``.
     """
     inserts = list(inserts)
     require_finite_keys(inserts)
-    out: list = []
+    slice_ne: List[int] = []
+    slice_vals: List[jax.Array] = []
     extracts = int(extracts)
     while extracts > 0 or inserts:
         ne = min(extracts, c_max)
         ni = min(len(inserts), c_max)
         buf = np.full((c_max,), np.inf, np.float32)
         buf[:ni] = inserts[:ni]
-        vals, k_eff = step(ne, buf, ni)
-        k = int(k_eff)
-        out.extend(np.asarray(vals)[:k].tolist())
-        out.extend([None] * (ne - k))      # empty-queue extracts
+        vals, _k_eff = step(ne, buf, ni)   # k_eff stays on device, unused
+        if ne:
+            slice_ne.append(ne)
+            slice_vals.append(vals)
         extracts -= ne
         inserts = inserts[ni:]
-    return out
+    return AsyncBatchResult(slice_ne, slice_vals, extra=extra,
+                            on_fetch=on_fetch)
+
+
+def apply_sliced(step, c_max: int, extracts: int, inserts) -> list:
+    """Blocking convenience wrapper over :func:`apply_sliced_async`."""
+    return apply_sliced_async(step, c_max, extracts, inserts).result()
 
 
 class BatchedPriorityQueue:
-    """Device-resident PQ with batch application (the §4 data structure)."""
+    """Device-resident PQ with batch application (the §4 data structure).
+
+    ``donate=True`` (default) dispatches through the donating jit — the
+    heap buffers update in place (zero-copy pass, DESIGN.md §10);
+    ``donate=False`` is the copy-per-pass ablation twin.
+    """
 
     def __init__(self, capacity: int, c_max: int, values=None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, donate: bool = True):
         if c_max < 1:
             raise ValueError("c_max must be >= 1")
         self.c_max = int(c_max)
         self.capacity = int(capacity)
         self.use_pallas = bool(use_pallas)
+        self.donate = bool(donate)
         self.state = heap_init(capacity, values)
 
     def __len__(self) -> int:
         return int(self.state.size)
 
+    def _step(self, ne, buf, ni):
+        fn = apply_batch if self.donate else apply_batch_undonated
+        self.state, vals, k_eff = fn(
+            self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
+            c_max=self.c_max, use_pallas=self.use_pallas,
+        )
+        return vals, k_eff
+
+    def apply_async(self, extracts: int, inserts) -> AsyncBatchResult:
+        """Apply a combined batch; the extracted values stay on device
+        until ``.result()`` — one blocking host sync per call, not per
+        slice.  Batches larger than c_max are applied in c_max slices —
+        still one device program per slice."""
+        return apply_sliced_async(self._step, self.c_max, extracts, inserts)
+
     def apply(self, extracts: int, inserts) -> list:
-        """Apply a combined batch; returns the extracted values (floats).
-
-        Batches larger than c_max are applied in c_max slices — still one
-        device program per slice.
-        """
-        def step(ne, buf, ni):
-            self.state, vals, k_eff = apply_batch(
-                self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
-                c_max=self.c_max, use_pallas=self.use_pallas,
-            )
-            return vals, k_eff
-
-        return apply_sliced(step, self.c_max, extracts, inserts)
+        """Apply a combined batch; returns the extracted values (floats)."""
+        return self.apply_async(extracts, inserts).result()
 
     def values(self) -> list:
         a = np.asarray(self.state.a)

@@ -55,16 +55,20 @@ def pc_priority_queue(pq: AnyBatchedPQ, *,
 
 def pc_sharded_priority_queue(capacity: int, c_max: int,
                               n_shards: int = 4, values=None,
+                              use_pallas: bool = False, donate: bool = True,
                               **kw) -> ParallelCombiner:
     """Parallel combining over the K-sharded batched heap (DESIGN.md §9).
 
     Same combiner protocol as :func:`pc_priority_queue` — the combined
-    batch is split into E/I and applied as ONE vmapped K-shard device
-    program via ``ShardedBatchedPQ.apply``.
+    batch is split into E/I and applied as ONE K-shard device program via
+    ``ShardedBatchedPQ.apply``.  ``use_pallas``/``donate`` select the
+    shard-grid kernel path and the zero-copy (donated) dispatch
+    (DESIGN.md §10; ``donate=False`` is the copy-per-pass ablation).
     """
     return pc_priority_queue(
         ShardedBatchedPQ(capacity, c_max=c_max, n_shards=n_shards,
-                         values=values), **kw)
+                         values=values, use_pallas=use_pallas,
+                         donate=donate), **kw)
 
 
 def fc_priority_queue(**kw) -> ParallelCombiner:

@@ -1,4 +1,4 @@
-"""Sharded batched priority queue (DESIGN.md §9) — K heaps, ONE dispatch.
+"""Sharded batched priority queue (DESIGN.md §9–§10) — K heaps, ONE dispatch.
 
 The §4 batched heap applies a combined batch of ``|E|`` ExtractMin +
 ``|I|`` Insert in ``O(c log c + log n)`` parallel time, but a single heap
@@ -6,23 +6,31 @@ caps the payoff at one combining pass in flight at a time.  Following the
 sharding recipe of batch-parallel search trees (Lim's 2-3 trees partition
 batches by key range; Calciu et al.'s adaptive PQ grows combining capacity
 with load), we stack **K independent ``HeapState`` shards on a leading
-axis** and apply one combined batch across all of them as a single
-``jax.vmap``-ed XLA program:
+axis** and apply one combined batch across all of them as a single jitted
+XLA program:
 
 1. **route** — inserts are assigned to shards by a bit-mix hash of their
    key (default; load-balancing) or by a fixed key range (``key_range=``,
    the Lim-style partition), entirely inside the jitted program;
 2. **frontier merge** — every shard's ``min(|E|, size_k)`` smallest nodes
-   are found with the §4 Dijkstra-like frontier search (vmapped, read-only)
+   are found with the §4 Dijkstra-like frontier search (read-only)
    and the K candidate lists are merged by one global sort; the first
    ``|E|`` finite entries decide the per-shard extract counts ``e_k``;
-3. **vmapped batch-apply** — phases 1–4 of the §4 algorithm run on all K
-   shards simultaneously (``jax.vmap`` of ``apply_batch_impl``), each shard
-   extracting its ``e_k`` minima and absorbing its routed inserts;
+3. **batch-apply** — phases 1–4 of the §4 algorithm run on all K
+   shards simultaneously, each shard extracting its ``e_k`` minima and
+   absorbing its routed inserts;
 4. **answer merge** — the K per-shard extract lists are merged by one sort;
    the first ``k_eff = min(|E|, Σ size_k)`` values are the batch answer, in
    ascending order, exactly the single-heap (and ``SequentialHeap``
    oracle) semantics.
+
+``use_pallas=True`` (DESIGN.md §10) runs phases 1, 3 and 4 as shard-grid
+Pallas kernels over ``grid=(K,)`` (``kernels/heap_kmin``, ``heap_sift``,
+``heap_insert``) — the whole K-shard pass stays one fused device program
+with per-shard heap blocks in VMEM; ``use_pallas=False`` vmaps the pure-XLA
+phase helpers instead (the semantics twin).  Either way the jitted entry
+point **donates the heap state**, so the (K, capacity) arrays update in
+place instead of being copied every pass.
 
 Correctness: the global |E| smallest keys of the union are a subset of the
 union of per-shard |E|-smallest candidate lists, so step 2's merge picks
@@ -38,7 +46,6 @@ combining passes for the price of one dispatch.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -48,11 +55,14 @@ import numpy as np
 from .batched_pq import (
     INF,
     _TINY,
-    HeapState,
+    AsyncBatchResult,
+    _chunk_len,
     _flush_subnormals,
     _k_smallest,
-    apply_batch_impl,
-    apply_sliced,
+    _phase4_xla,
+    _phases12,
+    _sift_wavefront,
+    apply_sliced_async,
     require_finite_keys,
 )
 
@@ -85,7 +95,10 @@ class ShardedHeapState(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# Insert routing — hash (default) or key-range (Lim-style partition)
+# Insert routing — hash (default) or key-range (Lim-style partition).
+# Each rule has a bit-exact numpy twin so the host wrapper can mirror the
+# device's shard assignment WITHOUT a device round-trip (the overflow guard
+# below runs sync-free, DESIGN.md §10).
 # ---------------------------------------------------------------------------
 def route_hash(vals: jax.Array, n_shards: int) -> jax.Array:
     """Shard id per value via a Fibonacci bit-mix of the f32 bit pattern."""
@@ -111,15 +124,49 @@ def _route(vals: jax.Array, n_shards: int,
     return route_range(vals, n_shards, key_range[0], key_range[1])
 
 
+def _flush_host(vals) -> np.ndarray:
+    v = np.asarray(vals, np.float32)
+    return np.where(np.abs(v) < _TINY, np.float32(0.0), v)
+
+
+def route_hash_host(vals, n_shards: int) -> np.ndarray:
+    """Numpy twin of :func:`route_hash` (bit-exact: uint32 wrap-around)."""
+    bits = _flush_host(vals).view(np.uint32)
+    with np.errstate(over="ignore"):
+        h = bits * np.uint32(2654435761)
+    h = h ^ (h >> np.uint32(16))
+    return (h % np.uint32(n_shards)).astype(np.int32)
+
+
+def route_range_host(vals, n_shards: int, lo: float, hi: float) -> np.ndarray:
+    """Numpy twin of :func:`route_range` (same f32 arithmetic).
+
+    The clip happens in FLOAT space before the int cast: XLA's f32→s32
+    convert saturates out-of-range keys to ±INT32_MAX (→ clip to the edge
+    shard) while numpy's cast wraps — clipping first makes both agree.
+    """
+    span = np.float32(max(hi - lo, 1e-30))
+    v = _flush_host(vals)
+    idx = np.floor((v - np.float32(lo)) / span * np.float32(n_shards))
+    return np.clip(idx, 0, n_shards - 1).astype(np.int32)
+
+
+def _route_host(vals, n_shards: int,
+                key_range: Optional[Tuple[float, float]]) -> np.ndarray:
+    if key_range is None:
+        return route_hash_host(vals, n_shards)
+    return route_range_host(vals, n_shards, key_range[0], key_range[1])
+
+
 # ---------------------------------------------------------------------------
 # One combined batch over all K shards — a single jitted XLA program
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("c_max", "n_shards", "key_range"))
-def sharded_apply_batch(
+def _sharded_apply_batch(
     state: ShardedHeapState, n_extract: jax.Array,
     insert_vals: jax.Array, n_insert: jax.Array,
     *, c_max: int, n_shards: int,
     key_range: Optional[Tuple[float, float]] = None,
+    use_pallas: bool = False,
 ) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
     """Apply one combined batch of ≤ c_max extracts + ≤ c_max inserts.
 
@@ -128,6 +175,8 @@ def sharded_apply_batch(
     """
     K = n_shards
     a, size = state
+    cap = a.shape[1]
+    max_depth = int(np.ceil(np.log2(cap))) + 1
     lane = jnp.arange(c_max, dtype=jnp.int32)
 
     n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
@@ -142,10 +191,15 @@ def sharded_apply_batch(
     ins_rows = jnp.sort(jnp.where(one_hot, insert_vals[None, :], INF), axis=1)
     ins_counts = jnp.sum(one_hot, axis=1).astype(jnp.int32)
 
-    # -- 2. per-shard frontier candidates (read-only) + global merge
-    cand_ids, cand_vals = jax.vmap(
-        lambda ak, sk: _k_smallest(ak, sk, n_extract, c_max)
-    )(a, size)                                           # (K, c_max) each
+    # -- 2. per-shard frontier candidates (read-only) + global merge.
+    # use_pallas: ONE grid=(K,) kernel instead of a vmapped c_max-step scan.
+    if use_pallas:
+        from repro.kernels.heap_kmin import k_smallest_sharded as _kmin_k
+        cand_ids, cand_vals = _kmin_k(a, size, n_extract, c_max=c_max)
+    else:
+        cand_ids, cand_vals = jax.vmap(
+            lambda ak, sk: _k_smallest(ak, sk, n_extract, c_max)
+        )(a, size)                                       # (K, c_max) each
     flat_vals = cand_vals.reshape(-1)                    # (K*c_max,)
     flat_shard = jnp.repeat(jnp.arange(K, dtype=jnp.int32), c_max)
     order = jnp.argsort(flat_vals)                       # stable
@@ -154,26 +208,68 @@ def sharded_apply_batch(
     e_counts = jax.ops.segment_sum(
         chosen.astype(jnp.int32), flat_shard[order], num_segments=K)
 
-    # -- 3. all K per-shard batch-applies as one vmapped program.  The
-    # frontier scan is deterministic and prefix-stable, so the first e_k
-    # lanes of the step-2 candidates ARE shard k's phase-1 result — mask
-    # and reuse them instead of re-running the O(c log c) search.
-    def one_shard(ak, sk, ek, row, ik, ids_k, vals_k):
+    # -- 3. phases 1–2 on every shard (vmapped XLA — scatter-heavy, cheap).
+    # The frontier scan is deterministic and prefix-stable, so the first
+    # e_k lanes of the step-2 candidates ARE shard k's phase-1 result —
+    # mask and reuse them instead of re-running the O(c log c) search.
+    def prep(ak, sk, ek, row, ik, ids_k, vals_k):
         lane_k = jnp.arange(c_max, dtype=jnp.int32)
         p1 = (jnp.where(lane_k < ek, ids_k, 0),
               jnp.where(lane_k < ek, vals_k, INF))
-        st, out_vals, _ = apply_batch_impl(
-            HeapState(ak, sk), ek, row, ik, c_max=c_max, use_pallas=False,
-            phase1=p1)
-        return st.a, st.size, out_vals
+        return _phases12(ak, sk, ek, row, ik, c_max=c_max, phase1=p1)
 
-    new_a, new_size, out_rows = jax.vmap(one_shard)(
-        a, size, e_counts, ins_rows, ins_counts, cand_ids, cand_vals)
+    a2, size2, out_rows, _k_eff_k, starts, active, rem, m_left = jax.vmap(
+        prep)(a, size, e_counts, ins_rows, ins_counts, cand_ids, cand_vals)
+
+    # -- 3b. sift wavefront + collective inserts on every shard: either the
+    # shard-grid kernels (one launch each, per-shard heap block in VMEM) or
+    # the vmapped pure-XLA twins.
+    if use_pallas:
+        from repro.kernels.heap_insert import insert_chunk_sharded as _ins_k
+        from repro.kernels.heap_sift import sift_wavefront_sharded as _sift_k
+        a3 = _sift_k(a2, size2, starts, active)
+        # pad the insert headroom ONCE and carry the padded stack through
+        # the loop (re-padding per chunk would copy the whole heap stack
+        # max_depth times — exactly the per-pass copy donation removes)
+        a3 = jnp.concatenate(
+            [a3, jnp.full((K, c_max), INF, a3.dtype)], axis=1)
+
+        # K-vector twin of batched_pq._phase4's chunk loop — the level-
+        # boundary math is the shared elementwise _chunk_len
+        def chunk(_, carry):
+            ac, sz, off, left = carry
+            m = _chunk_len(sz, left)                         # (K,)
+            idx = jnp.clip(off[:, None] + lane[None, :], 0, c_max - 1)
+            vals = jnp.where(lane[None, :] < m[:, None],
+                             jnp.take_along_axis(rem, idx, axis=1), INF)
+            ac, sz = _ins_k(ac, sz, vals, m, pre_padded=True)
+            return (ac, sz, off + m, left - m)
+
+        zeros = jnp.zeros((K,), jnp.int32)
+        new_a, new_size, _, _ = jax.lax.fori_loop(
+            0, max_depth + 1, chunk, (a3, size2, zeros, m_left))
+        new_a = new_a[:, :cap]
+    else:
+        a3 = jax.vmap(_sift_wavefront)(a2, size2, starts, active)
+        new_a, new_size = jax.vmap(
+            lambda ak, sk, rk, mk: _phase4_xla(
+                ak, sk, rk, mk, c_max=c_max, max_depth=max_depth)
+        )(a3, size2, rem, m_left)
 
     # -- 4. merge the per-shard answers (ascending, +inf padded)
     merged = jnp.sort(out_rows.reshape(-1))[:c_max]
     k_eff = jnp.minimum(n_extract, jnp.sum(size))
     return ShardedHeapState(new_a, new_size), merged, k_eff
+
+
+_STATIC = ("c_max", "n_shards", "key_range", "use_pallas")
+# ``state`` is DONATED — the (K, capacity) heap stack updates in place
+# (DESIGN.md §10); callers must not reuse a state after passing it in.
+sharded_apply_batch = jax.jit(_sharded_apply_batch, static_argnames=_STATIC,
+                              donate_argnums=(0,))
+# Ablation twin (EXPERIMENTS §Ablations): no donation, copy per pass.
+sharded_apply_batch_undonated = jax.jit(_sharded_apply_batch,
+                                        static_argnames=_STATIC)
 
 
 # ---------------------------------------------------------------------------
@@ -188,10 +284,28 @@ class ShardedBatchedPQ:
       n_shards: number of independent heap shards (K).
       values: optional initial values, routed with the same rule as inserts.
       key_range: optional (lo, hi) — route by key range instead of hash.
+      use_pallas: run phases 1/3/4 as shard-grid Pallas kernels
+        (``grid=(K,)``, DESIGN.md §10) instead of vmapped XLA.
+      donate: dispatch through the donating jit (zero-copy pass, default);
+        False is the copy-per-pass ablation twin.
+
+    Sync-free occupancy guard (DESIGN.md §10): the wrapper mirrors the
+    device's insert routing on the host (bit-exact numpy twins) and keeps
+    per-shard occupancy *upper bounds* plus the *exact* total size, so the
+    per-slice overflow check never reads a device value.  Same-slice
+    extracts are credited with the guaranteed lower bound
+    ``e_k ≥ min(ne, total) - Σ_{j≠k} size_j`` (the global ne smallest must
+    come from somewhere).  The bounds re-tighten to the true sizes at
+    every consumed ``result()``: the sizes are read at consumption time,
+    so they reflect exactly the slices the mirror has accounted — correct
+    under pipelined (one-pass-behind) consumption too.  The wrapper is
+    not thread-safe; confine each instance to one thread (the scheduler's
+    combiner loop does).
     """
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 4,
-                 values=None, key_range: Optional[Tuple[float, float]] = None):
+                 values=None, key_range: Optional[Tuple[float, float]] = None,
+                 use_pallas: bool = False, donate: bool = True):
         if c_max < 1:
             raise ValueError("c_max must be >= 1")
         if n_shards < 1:
@@ -199,6 +313,8 @@ class ShardedBatchedPQ:
         self.c_max = int(c_max)
         self.capacity = int(capacity)
         self.n_shards = int(n_shards)
+        self.use_pallas = bool(use_pallas)
+        self.donate = bool(donate)
         self.key_range = (
             (float(key_range[0]), float(key_range[1]))
             if key_range is not None else None)
@@ -211,10 +327,8 @@ class ShardedBatchedPQ:
         values = list(values) if values is not None else []
         if values:
             require_finite_keys(values)
-            vals = np.asarray(
-                _flush_subnormals(jnp.asarray(values, jnp.float32)))
-            shards = np.asarray(_route(jnp.asarray(vals), K,
-                                       self.key_range))
+            vals = _flush_host(values)
+            shards = _route_host(vals, K, self.key_range)
             for k in range(K):
                 mine = np.sort(vals[shards == k])
                 if mine.size + 1 > cap:
@@ -222,38 +336,72 @@ class ShardedBatchedPQ:
                 # a sorted array satisfies the heap property
                 a[k, 1 : mine.size + 1] = mine
                 size[k] = mine.size
+        # host occupancy mirror: exact at init, upper bounds between syncs
+        self._sizes_ub = size.astype(np.int64).copy()
+        self._total = int(size.sum())
         return ShardedHeapState(jnp.asarray(a), jnp.asarray(size))
 
     def __len__(self) -> int:
         return int(np.sum(np.asarray(self.state.size)))
 
-    def apply(self, extracts: int, inserts) -> list:
-        """Apply a combined batch; returns extracted values (None-padded).
+    def _refresh_sizes(self, sizes) -> None:
+        """Replace the occupancy mirror with fetched true sizes.  The
+        fetch thunk reads ``self.state.size`` at consumption time, so the
+        values correspond exactly to the slices already accounted by
+        :meth:`_guard_and_account` — the refresh is exact, never stale."""
+        self._sizes_ub = np.asarray(sizes, np.int64).copy()
+        self._total = int(self._sizes_ub.sum())
 
+    def _guard_and_account(self, ne: int, buf: np.ndarray, ni: int) -> None:
+        """Sync-free per-slice overflow guard + host mirror update."""
+        K = self.n_shards
+        growth = np.zeros((K,), np.int64)
+        if ni:
+            shards = _route_host(buf[:ni], K, self.key_range)
+            growth = np.bincount(shards, minlength=K).astype(np.int64)
+        ub = self._sizes_ub
+        # guaranteed same-slice extract credit per shard: the min(ne, total)
+        # globally smallest keys exist somewhere; at most Σ_{j≠k} size_j of
+        # them live outside shard k.  size_k ≥ total - Σ_{j≠k} ub_j.
+        take = min(ne, self._total)
+        lb = np.maximum(self._total - (ub.sum() - ub), 0)
+        credit = np.maximum(take - (self._total - lb), 0)
+        peak = ub - credit + growth
+        if np.any(peak + 1 > self.capacity):
+            # routing skew could overflow one shard while the queue as a
+            # whole has room — refuse rather than let the device scatter
+            # silently drop keys.
+            raise ValueError(
+                f"per-shard capacity {self.capacity} exceeded: "
+                f"insert routing would grow a shard past it")
+        self._sizes_ub = peak
+        self._total = self._total + int(growth.sum()) - take
+
+    def _step(self, ne, buf, ni):
+        self._guard_and_account(ne, buf, ni)
+        fn = sharded_apply_batch if self.donate \
+            else sharded_apply_batch_undonated
+        self.state, vals, k_eff = fn(
+            self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
+            c_max=self.c_max, n_shards=self.n_shards,
+            key_range=self.key_range, use_pallas=self.use_pallas)
+        return vals, k_eff
+
+    def apply_async(self, extracts: int, inserts) -> AsyncBatchResult:
+        """Apply a combined batch; extracted values stay on device until
+        ``.result()`` — one blocking host sync per call, not per slice.
         Batches larger than c_max are applied in c_max slices — still one
-        device program per slice, K shards each.
-        """
-        def step(ne, buf, ni):
-            if ni:
-                # routing skew could overflow one shard while the queue
-                # as a whole has room — refuse rather than let the device
-                # scatter silently drop keys.  (Conservative: same-slice
-                # extracts that would free room are not credited.)
-                shards = np.asarray(_route(jnp.asarray(buf[:ni]),
-                                           self.n_shards, self.key_range))
-                growth = np.bincount(shards, minlength=self.n_shards)
-                sizes = np.asarray(self.state.size)
-                if np.any(sizes + growth + 1 > self.capacity):
-                    raise ValueError(
-                        f"per-shard capacity {self.capacity} exceeded: "
-                        f"insert routing would grow a shard past it")
-            self.state, vals, k_eff = sharded_apply_batch(
-                self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
-                c_max=self.c_max, n_shards=self.n_shards,
-                key_range=self.key_range)
-            return vals, k_eff
+        device program per slice, K shards each."""
+        # `+ 0` detaches the fetched sizes from self.state.size, which a
+        # later apply_async would donate (fetching a donated buffer throws)
+        return apply_sliced_async(
+            self._step, self.c_max, extracts, inserts,
+            extra=lambda: self.state.size + 0,
+            on_fetch=self._refresh_sizes)
 
-        return apply_sliced(step, self.c_max, extracts, inserts)
+    def apply(self, extracts: int, inserts) -> list:
+        """Apply a combined batch; returns extracted values (None-padded)."""
+        return self.apply_async(extracts, inserts).result()
 
     def values(self) -> list:
         a = np.asarray(self.state.a)

@@ -1,1 +1,1 @@
-from .ops import insert_chunk  # noqa: F401
+from .ops import insert_chunk, insert_chunk_sharded  # noqa: F401

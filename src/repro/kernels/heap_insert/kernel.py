@@ -1,4 +1,4 @@
-"""Paper §4 Insert phase as a Pallas TPU kernel (one level-chunk).
+"""Paper §4 Insert phase as a shard-grid Pallas TPU kernel (one level-chunk).
 
 The collective insert places ``m`` sorted values at leaf targets
 ``size+1 .. size+m`` (all on one tree level — the caller splits batches at
@@ -20,10 +20,16 @@ Heap array access per level is one *contiguous* dynamic slice
 ``a[lo_d : lo_d + C]`` (the target-ancestor set at one depth is an id
 interval) — VMEM-friendly streaming, no scatter.
 
-Descent is top-down over ``max_depth`` levels (a static bound derived from
-capacity), so the whole phase is ONE kernel launch regardless of batch
-shape — the pure-XLA fallback in ``core/batched_pq.py`` is the semantics
-twin and the element-wise oracle.
+Shard-grid layout (DESIGN.md §10): the kernel runs over ``grid=(K,)`` —
+one program per heap shard, each with its own ``(size_k, m_k)`` scalars in
+SMEM and its own ``(cap,)`` heap block + ``(C,)`` sorted chunk row in VMEM.
+A shard whose chunk is empty this level (``m_k == 0``) runs the descent
+fully predicated-off (identity stores), so ragged per-shard level
+boundaries need no host-side control flow.  Descent is top-down over
+``max_depth`` levels (a static bound derived from capacity), so the whole
+phase is ONE kernel launch for all K shards regardless of batch shape —
+the pure-XLA fallback in ``core/batched_pq.py`` is the semantics twin and
+the element-wise oracle.
 """
 from __future__ import annotations
 
@@ -72,10 +78,11 @@ def _shift_rows_left(sets, amt):
 
 def _insert_kernel(size_ref, m_ref, vals_ref, a_ref, out_ref,
                    *, c_max: int, cap: int, max_depth: int):
+    shard = pl.program_id(0)
     out_ref[...] = a_ref[...]
     C = c_max
-    size = size_ref[0]
-    m = m_ref[0]
+    size = size_ref[shard]
+    m = m_ref[shard]
     lane = jax.lax.iota(jnp.int32, C)
 
     lo_c = size + 1
@@ -146,30 +153,34 @@ def _insert_kernel(size_ref, m_ref, vals_ref, a_ref, out_ref,
     jax.lax.fori_loop(0, max_depth + 1, level, sets0)
 
 
-def insert_chunk_vmem(a: jax.Array, size: jax.Array, chunk_vals: jax.Array,
-                      m_chunk: jax.Array, *, max_depth: int,
-                      interpret: bool = False) -> jax.Array:
-    """a: (cap,) f32; chunk_vals: (C,) sorted asc, +inf padded; m_chunk ≤ C.
+def insert_sharded_vmem(a: jax.Array, size: jax.Array, chunk_vals: jax.Array,
+                        m_chunk: jax.Array, *, max_depth: int,
+                        interpret: bool = False) -> jax.Array:
+    """a: (K, cap) f32; chunk_vals: (K, C) sorted asc, +inf padded;
+    m_chunk: (K,) int32 ≤ C.  One grid program per shard.
 
-    Requires cap ≥ size + C (contiguous level loads) — the ops wrapper pads.
+    Requires cap ≥ size_k + C (contiguous level loads) — the ops wrapper
+    pads.
     """
-    (cap,) = a.shape
-    (C,) = chunk_vals.shape
+    K, cap = a.shape
+    _, C = chunk_vals.shape
     assert C <= 64, "InsertSet matrix is (C,C,C) in the split op; keep C ≤ 64"
     kernel = functools.partial(_insert_kernel, c_max=C, cap=cap,
                                max_depth=max_depth)
     return pl.pallas_call(
         kernel,
-        grid=(),
+        grid=(K,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (1,)
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # m (1,)
-            pl.BlockSpec(memory_space=pltpu.VMEM),   # chunk_vals
-            pl.BlockSpec(memory_space=pltpu.VMEM),   # heap
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (K,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # m (K,)
+            pl.BlockSpec((None, C), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # chunk_vals row
+            pl.BlockSpec((None, cap), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # heap shard
         ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((cap,), a.dtype),
+        out_specs=pl.BlockSpec((None, cap), lambda k: (k, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((K, cap), a.dtype),
         interpret=interpret,
-    )(jnp.reshape(size.astype(jnp.int32), (1,)),
-      jnp.reshape(m_chunk.astype(jnp.int32), (1,)),
+    )(size.astype(jnp.int32), m_chunk.astype(jnp.int32),
       chunk_vals.astype(jnp.float32), a)

@@ -1,4 +1,4 @@
-"""Public wrapper for the collective-insert kernel."""
+"""Public wrappers for the collective-insert kernel (single + shard-grid)."""
 from __future__ import annotations
 
 import functools
@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .kernel import insert_chunk_vmem
+from .kernel import insert_sharded_vmem
 
 
 def _on_tpu() -> bool:
@@ -23,15 +23,44 @@ def insert_chunk(a: jax.Array, size: jax.Array, chunk_vals: jax.Array,
 
     a: (cap,) f32 heap (1-indexed, a[0]=+inf); chunk_vals: (C,) sorted asc,
     +inf-padded; m_chunk: () int32 ≤ C; all targets size+1..size+m on one
-    level.  Returns (new_a, new_size).
+    level.  Returns (new_a, new_size).  (K=1 shard-grid dispatch.)
+    """
+    out, new_size = insert_chunk_sharded(
+        a[None], jnp.reshape(size, (1,)), chunk_vals[None],
+        jnp.reshape(m_chunk, (1,)), interpret=interpret)
+    return out[0], new_size[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "pre_padded"))
+def insert_chunk_sharded(a: jax.Array, size: jax.Array,
+                         chunk_vals: jax.Array, m_chunk: jax.Array, *,
+                         interpret: Optional[bool] = None,
+                         pre_padded: bool = False):
+    """All-shards level-chunk insert as ONE ``grid=(K,)`` kernel
+    (DESIGN.md §10).
+
+    a: (K, cap) f32 heap shards; chunk_vals: (K, C) sorted asc, +inf
+    padded; m_chunk: (K,) int32 ≤ C (a shard may be empty this chunk);
+    per shard, all targets size_k+1..size_k+m_k lie on one tree level.
+    Returns (new_a (K, cap), new_size (K,)).
+
+    ``pre_padded=True``: the caller already appended ≥ C slots of +inf
+    headroom (the kernel streams one contiguous C-wide level block) and
+    wants the padded array back — lets a chunk LOOP pad once instead of
+    re-concatenating + re-slicing the whole heap stack every iteration.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    (cap,) = a.shape
-    (C,) = chunk_vals.shape
-    pad = C                                   # contiguous level loads headroom
-    a_p = jnp.concatenate([a, jnp.full((pad,), jnp.inf, a.dtype)])
-    max_depth = int(math.ceil(math.log2(cap + pad))) + 1
-    out = insert_chunk_vmem(a_p, size, chunk_vals, m_chunk,
-                            max_depth=max_depth, interpret=interpret)
-    return out[:cap], size + m_chunk
+    K, cap = a.shape
+    _, C = chunk_vals.shape
+    if pre_padded:
+        a_p, out_width = a, cap
+    else:
+        a_p = jnp.concatenate(
+            [a, jnp.full((K, C), jnp.inf, a.dtype)], axis=1)
+        out_width = cap                       # strip the headroom again
+        cap = cap + C
+    max_depth = int(math.ceil(math.log2(cap))) + 1
+    out = insert_sharded_vmem(a_p, size, chunk_vals, m_chunk,
+                              max_depth=max_depth, interpret=interpret)
+    return out[:, :out_width], size + m_chunk

@@ -1,0 +1,1 @@
+from .ops import k_smallest, k_smallest_sharded  # noqa: F401

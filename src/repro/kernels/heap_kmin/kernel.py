@@ -1,0 +1,109 @@
+"""Paper §4 combiner phase 1 as a shard-grid Pallas TPU kernel.
+
+The combiner's first job is the Dijkstra-like *frontier search*: find the
+``min(n_extract, size)`` smallest nodes of the array heap.  The frontier
+holds candidate nodes whose parents were already taken; the heap property
+makes the running frontier-min the global next-min, so ``c_max`` dependent
+steps of (argmin over ``F = 2·c_max+1`` lanes, then two child loads)
+produce the answer in ascending order.
+
+The pure-XLA version (``core/batched_pq._k_smallest``) runs this as a
+``lax.scan`` of ``c_max`` argmin steps and is vmapped K times by the
+sharded queue — every step materializes the full frontier in HBM-visible
+buffers and the vmap multiplies the fusion barriers.  Here the whole
+search is ONE kernel over ``grid=(K,)`` (DESIGN.md §10): per shard the
+frontier lives in registers across a ``fori_loop``, each step does two
+scalar VMEM loads from the shard's heap block and two scalar stores of the
+(id, value) answer — no intermediate HBM traffic, no vmap.
+
+Determinism: ``jnp.argmin`` takes the first minimum, exactly as the XLA
+twin, so both paths emit identical candidate lists — load-bearing for the
+sharded queue, which reuses the merged candidates as each shard's phase-1
+result (prefix-stability, see ``sharded_pq.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compat
+
+INF = jnp.inf
+
+
+def _kmin_kernel(ne_ref, size_ref, a_ref, ids_ref, vals_ref,
+                 *, c_max: int, cap: int):
+    shard = pl.program_id(0)
+    ne = ne_ref[0]
+    size = size_ref[shard]
+    F = 2 * c_max + 1
+
+    def load1(idx):
+        return pl.load(a_ref, (pl.dslice(idx, 1),))[0]
+
+    root = jnp.where(size >= 1, load1(jnp.minimum(1, cap - 1)), INF)
+    f_ids = jnp.zeros((F,), jnp.int32).at[0].set(1)
+    f_vals = jnp.full((F,), INF, jnp.float32).at[0].set(root)
+
+    def step(i, carry):
+        f_ids, f_vals, nfree = carry
+        j = jnp.argmin(f_vals)
+        v, val = f_ids[j], f_vals[j]
+        active = (i < ne) & jnp.isfinite(val)
+        l, r = 2 * v, 2 * v + 1
+        lval = jnp.where(active & (l <= size),
+                         load1(jnp.clip(l, 0, cap - 1)), INF)
+        rval = jnp.where(active & (r <= size),
+                         load1(jnp.clip(r, 0, cap - 1)), INF)
+        # replace the taken slot with the left child, append the right child
+        f_ids = f_ids.at[j].set(jnp.where(active, l, f_ids[j]))
+        f_vals = f_vals.at[j].set(jnp.where(active, lval, f_vals[j]))
+        slot = jnp.where(active, nfree, F - 1)
+        f_ids = f_ids.at[slot].set(jnp.where(active, r, f_ids[slot]))
+        f_vals = f_vals.at[slot].set(jnp.where(active, rval, f_vals[slot]))
+        nfree = nfree + active.astype(jnp.int32)
+        pl.store(ids_ref, (pl.dslice(i, 1),),
+                 jnp.full((1,), jnp.where(active, v, 0), jnp.int32))
+        pl.store(vals_ref, (pl.dslice(i, 1),),
+                 jnp.full((1,), jnp.where(active, val, INF), jnp.float32))
+        return f_ids, f_vals, nfree
+
+    jax.lax.fori_loop(0, c_max, step, (f_ids, f_vals, jnp.int32(1)))
+
+
+def kmin_sharded_vmem(a: jax.Array, size: jax.Array, n_extract: jax.Array,
+                      *, c_max: int, interpret: bool = False):
+    """a: (K, cap) f32 heap shards; size: (K,) int32; n_extract: () int32
+    (global — the same batch is combined across shards).  Returns
+    (ids (K, c_max) int32, vals (K, c_max) f32), ascending per shard,
+    (0, +inf)-padded.  One grid program per shard."""
+    K, cap = a.shape
+    kernel = functools.partial(_kmin_kernel, c_max=c_max, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # n_extract (1,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (K,)
+            pl.BlockSpec((None, cap), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # heap shard
+        ],
+        out_specs=[
+            pl.BlockSpec((None, c_max), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((None, c_max), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, c_max), jnp.int32),
+            jax.ShapeDtypeStruct((K, c_max), jnp.float32),
+        ],
+        compiler_params=_compat.CompilerParams(
+            has_side_effects=False),
+        interpret=interpret,
+    )(jnp.reshape(n_extract.astype(jnp.int32), (1,)),
+      size.astype(jnp.int32), a)

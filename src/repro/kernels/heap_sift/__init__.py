@@ -1,1 +1,1 @@
-from .ops import sift_wavefront  # noqa: F401
+from .ops import sift_wavefront, sift_wavefront_sharded  # noqa: F401

@@ -1,4 +1,4 @@
-"""Paper §4 ExtractMin phase as a Pallas TPU kernel.
+"""Paper §4 ExtractMin phase as a shard-grid Pallas TPU kernel.
 
 The batched PQ's hot loop is the *parallel sift-down wavefront*: ``c``
 cursors (one per extracted node) walk disjoint root-to-leaf paths of the
@@ -11,13 +11,17 @@ staggers the cursors so two active cursors are always ≥ 2 levels apart —
 the per-step loads/stores are then provably conflict-free and the result
 equals the paper's sequential execution SE (deepest-first).
 
-Kernel layout:
+Kernel layout (DESIGN.md §10 — the shard-grid revision):
 
-* the heap prefix lives wholly in VMEM (one block; f32 capacity ≤ ~2M is
-  8 MiB — within the 16 MiB VMEM of a v5e core).  The wrapper slices the
-  touched prefix out of the HBM-resident heap, so VMEM holds only
-  ``min(cap, needed)`` entries.
-* ``size`` / ``starts`` / ``active`` are scalars in SMEM.
+* the kernel runs over ``grid=(K,)`` — one program per heap shard of the
+  K-sharded queue (``sharded_pq.py``).  The ``(K, cap)`` heap is
+  block-sliced so each program sees only its own shard's ``(cap,)`` prefix
+  in VMEM (f32 capacity ≤ ~2M per shard is 8 MiB — within the 16 MiB VMEM
+  of a v5e core; the per-shard capacity of the K-sharded queue divides the
+  budget by K, see DESIGN.md §10).  ``K=1`` recovers the single-heap kernel
+  and is what ``BatchedPriorityQueue`` uses via the ops wrapper.
+* per-shard ``size`` / ``starts`` / ``active`` live in SMEM, indexed by
+  ``pl.program_id(0)`` (scalar-unit reads).
 * cursor state (pos, active) is a register-resident ``(c,)`` vector carried
   through the ``lax.while_loop``; each step does ≤ 3 scalar VMEM loads and
   2 scalar VMEM stores per cursor (scalar-unit work — the paper's phase is
@@ -47,12 +51,14 @@ def _depth(v):
 
 def _sift_kernel(size_ref, starts_ref, active_ref, a_ref, out_ref,
                  *, c: int, cap: int):
-    # copy the heap block into the output buffer, then mutate in place
+    # one program per shard: scalars are rows of the (K, ...) SMEM inputs
+    shard = pl.program_id(0)
+    # copy the shard's heap block into the output buffer, then mutate in place
     out_ref[...] = a_ref[...]
-    size = size_ref[0]
+    size = size_ref[shard]
 
-    starts = starts_ref[...]
-    active0 = active_ref[...] != 0
+    starts = starts_ref[shard, :]
+    active0 = active_ref[shard, :] != 0
 
     depths = _depth(starts)
     d_max = jnp.max(jnp.where(active0, depths, 0))
@@ -99,25 +105,28 @@ def _sift_kernel(size_ref, starts_ref, active_ref, a_ref, out_ref,
     jax.lax.while_loop(cond, body, (jnp.int32(0), starts, active0))
 
 
-def sift_wavefront_vmem(a: jax.Array, size: jax.Array, starts: jax.Array,
-                        active: jax.Array, *, interpret: bool = False):
-    """a: (cap,) f32 (1-indexed heap, a[0]=+inf); starts/active: (c,) int32."""
-    (cap,) = a.shape
-    (c,) = starts.shape
+def sift_sharded_vmem(a: jax.Array, size: jax.Array, starts: jax.Array,
+                      active: jax.Array, *, interpret: bool = False):
+    """a: (K, cap) f32 (1-indexed heaps, a[k, 0]=+inf); size: (K,) int32;
+    starts/active: (K, c) int32.  One grid program per shard."""
+    K, cap = a.shape
+    _, c = starts.shape
     kernel = functools.partial(_sift_kernel, c=c, cap=cap)
     return pl.pallas_call(
         kernel,
-        grid=(),
+        grid=(K,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (1,)
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # starts (c,)
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # active (c,)
-            pl.BlockSpec(memory_space=pltpu.VMEM),   # heap
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # size (K,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # starts (K, c)
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # active (K, c)
+            pl.BlockSpec((None, cap), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # heap shard
         ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((cap,), a.dtype),
+        out_specs=pl.BlockSpec((None, cap), lambda k: (k, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((K, cap), a.dtype),
         compiler_params=_compat.CompilerParams(
             has_side_effects=False),
         interpret=interpret,
-    )(jnp.reshape(size.astype(jnp.int32), (1,)),
-      starts.astype(jnp.int32), active.astype(jnp.int32), a)
+    )(size.astype(jnp.int32), starts.astype(jnp.int32),
+      active.astype(jnp.int32), a)

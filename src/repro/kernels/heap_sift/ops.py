@@ -1,4 +1,4 @@
-"""Public wrapper for the sift-wavefront kernel."""
+"""Public wrappers for the sift-wavefront kernel (single-heap + shard-grid)."""
 from __future__ import annotations
 
 import functools
@@ -7,7 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .kernel import sift_wavefront_vmem
+from .kernel import sift_sharded_vmem
 
 
 def _on_tpu() -> bool:
@@ -22,8 +22,24 @@ def sift_wavefront(a: jax.Array, size: jax.Array, starts: jax.Array,
 
     a: (cap,) f32 — 1-indexed heap, ``a[0] == +inf`` scratch slot.
     size: () int32; starts: (c,) int32 node ids; active: (c,) bool.
-    Returns the updated heap array.
+    Returns the updated heap array.  (K=1 shard-grid dispatch.)
     """
     if interpret is None:
         interpret = not _on_tpu()
-    return sift_wavefront_vmem(a, size, starts, active, interpret=interpret)
+    out = sift_sharded_vmem(a[None], jnp.reshape(size, (1,)),
+                            starts[None], active[None], interpret=interpret)
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sift_wavefront_sharded(a: jax.Array, size: jax.Array, starts: jax.Array,
+                           active: jax.Array, *,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """All-shards sift wavefront as ONE ``grid=(K,)`` kernel (DESIGN.md §10).
+
+    a: (K, cap) f32 — K 1-indexed heap shards; size: (K,) int32;
+    starts/active: (K, c).  Returns the updated (K, cap) heap stack.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return sift_sharded_vmem(a, size, starts, active, interpret=interpret)

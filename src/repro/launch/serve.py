@@ -80,15 +80,21 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
     ``scheduler``: "serial" (one dispatch per request), "pc" (async
-    combiner, blocking per-session submits) or "pc-async" (each session
+    combiner, blocking per-session submits), "pc-async" (each session
     publishes ALL its requests via ``submit_async`` up front and gathers
-    the futures — the non-blocking client API).
+    the futures — the non-blocking client API), "pc-nodonate" (ablation:
+    the deadline PQ copies its heap buffers every pass instead of the
+    zero-copy donated dispatch, EXPERIMENTS §Ablations) or "pc-pallas"
+    (the PQ's combining passes run as shard-grid Pallas kernels,
+    DESIGN.md §10).
     """
     cfg = configs.get_reduced(arch_id)
     ex = DecodeExecutor(cfg, max_batch=max_batch,
                         max_len=prompt_len + n_tokens + 1, seed=seed)
-    if scheduler in ("pc", "pc-async"):
-        sch = PCScheduler(ex, max_batch=max_batch, use_pq=True)
+    if scheduler in ("pc", "pc-async", "pc-nodonate", "pc-pallas"):
+        sch = PCScheduler(ex, max_batch=max_batch, use_pq=True,
+                          pq_donate=scheduler != "pc-nodonate",
+                          pq_use_pallas=scheduler == "pc-pallas")
     elif scheduler == "serial":
         sch = SerialScheduler(ex)
     else:
@@ -143,7 +149,9 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--scheduler", choices=["pc", "pc-async", "serial"],
+    ap.add_argument("--scheduler",
+                    choices=["pc", "pc-async", "pc-nodonate", "pc-pallas",
+                             "serial"],
                     default="pc")
     args = ap.parse_args()
     stats = run_serving(args.arch, sessions=args.sessions,

@@ -23,6 +23,11 @@ production async engine:
   in flight, the combiner is already collecting and ordering pass N+1
   (a depth-1 handoff queue), so host-side ordering cost hides behind
   device compute;
+* PQ device programs are **sync-free** (DESIGN.md §10): publishing new
+  keys uses ``apply_async`` — the insert dispatch returns immediately with
+  the result left on device — and the extraction apply performs exactly
+  one blocking host transfer, so the combiner loop pays at most one
+  device round-trip per pass instead of one per PQ slice;
 * the PQ keys live in a **persistent key→request table**: unchosen
   requests simply *stay* in the device-resident PQ across passes (the
   previous revision cleared and re-inserted every pending key each pass —
@@ -85,12 +90,17 @@ class PCScheduler:
       pipeline: overlap combiner-side collection/ordering of pass N+1 with
         the in-flight device step of pass N (depth-1 handoff).  False runs
         the device step inline on the combiner thread (debug mode).
+      pq_use_pallas: run the deadline PQ's combining passes through the
+        shard-grid Pallas kernels (DESIGN.md §10).
+      pq_donate: zero-copy (donated) PQ dispatch (default); False is the
+        copy-per-pass ablation twin (EXPERIMENTS §Ablations).
     """
 
     def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]],
                  max_batch: int = 16, use_pq: bool = True,
                  pq_capacity: int = 1 << 16, n_shards: int = 4,
-                 pipeline: bool = True):
+                 pipeline: bool = True, pq_use_pallas: bool = False,
+                 pq_donate: bool = True):
         self.step_fn = step_fn
         self.max_batch = max_batch
         self.use_pq = use_pq
@@ -98,7 +108,9 @@ class PCScheduler:
         if use_pq:
             self._pq_ctor = dict(capacity=pq_capacity,
                                  c_max=min(max_batch, 64),
-                                 n_shards=n_shards)
+                                 n_shards=n_shards,
+                                 use_pallas=pq_use_pallas,
+                                 donate=pq_donate)
             self._pq = ShardedBatchedPQ(**self._pq_ctor)
             # persistent key→request table: a key is inserted into the
             # device PQ exactly once and stays there until extracted
@@ -227,7 +239,9 @@ class PCScheduler:
             ent.key = host_key(ent.req.deadline)
             self._table.setdefault(ent.key, deque()).append(ent)
         if new:
-            self._pq.apply(0, [e.key for e in new])
+            # insert-only pass: nothing to read back — apply_async leaves
+            # the dispatch on device with NO blocking host round-trip
+            self._pq.apply_async(0, [e.key for e in new])
             self._queued += len(new)
         want = min(self.max_batch, self._queued)
         chosen: List[_Entry] = []

@@ -8,11 +8,13 @@ import pytest
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
-from repro.kernels.heap_insert import insert_chunk
+from repro.kernels.heap_insert import insert_chunk, insert_chunk_sharded
 from repro.kernels.heap_insert.ref import (check_heap_property,
                                            insert_chunk_reference,
                                            insert_chunk_sequential)
-from repro.kernels.heap_sift import sift_wavefront
+from repro.kernels.heap_kmin import k_smallest, k_smallest_sharded
+from repro.kernels.heap_kmin.ref import k_smallest_reference
+from repro.kernels.heap_sift import sift_wavefront, sift_wavefront_sharded
 from repro.kernels.heap_sift.ref import sift_wavefront_reference
 from repro.kernels.linear_scan import rglru_scan, rwkv6_scan
 from repro.kernels.linear_scan.ref import rglru_reference, rwkv6_reference
@@ -176,3 +178,95 @@ def test_heap_insert_matches_parallel_ref(trial):
                                np.sort(seq_a[1:seq_n + 1]))
     assert check_heap_property(got, n + m)
     assert int(new_sz) == n + m
+
+
+# ---------------------------------------------------------------------------
+# shard-grid dispatch (DESIGN.md §10): grid=(K,) — one program per heap shard
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("trial", range(4))
+def test_heap_sift_sharded_matches_per_shard_reference(trial):
+    rng = np.random.default_rng(300 + trial)
+    K, cap, c = 3, 256, 8
+    A = np.stack([_random_heap(rng, int(rng.integers(16, 200)), cap)
+                  for _ in range(K)])
+    sizes = np.asarray([np.isfinite(A[k, 1:]).sum() for k in range(K)],
+                       np.int32)
+    starts = np.zeros((K, c), np.int32)
+    active = np.zeros((K, c), np.int32)
+    wants = []
+    for k in range(K):
+        ss = sorted(rng.choice(np.arange(1, sizes[k] + 1), size=3,
+                               replace=False).tolist())
+        for i, s in enumerate(ss):
+            A[k, s] = rng.uniform(0, 150)
+            starts[k, i] = s
+            active[k, i] = 1
+        wants.append(sift_wavefront_reference(A[k], sizes[k], starts[k],
+                                              active[k]))
+    got = np.asarray(sift_wavefront_sharded(
+        jnp.asarray(A), jnp.asarray(sizes), jnp.asarray(starts),
+        jnp.asarray(active)))
+    np.testing.assert_array_equal(got, np.stack(wants))
+
+
+def test_heap_insert_sharded_ragged_chunks():
+    """Per-shard chunk sizes differ (one shard empty this level) — the
+    shard-grid kernel handles the ragged case fully predicated."""
+    rng = np.random.default_rng(7)
+    K, cap, C = 3, 512, 8
+    sizes = np.asarray([20, 27, 34], np.int32)
+    A = np.stack([_random_heap(rng, int(s), cap) for s in sizes])
+    ms = np.asarray([3, 0, 5], np.int32)
+    CV = np.full((K, C), np.inf, np.float32)
+    wants = []
+    for k in range(K):
+        if ms[k]:
+            lo = int(sizes[k]) + 1
+            level_end = (2 << int(math.floor(math.log2(lo)))) - 1
+            ms[k] = min(int(ms[k]), level_end - lo + 1)
+            CV[k, :ms[k]] = np.sort(
+                rng.uniform(0, 100, ms[k]).astype(np.float32))
+        w, _ = insert_chunk_reference(A[k], sizes[k], CV[k], ms[k],
+                                      c_max=C, max_depth=10)
+        wants.append(np.asarray(w))
+    got, new_sz = insert_chunk_sharded(
+        jnp.asarray(A), jnp.asarray(sizes), jnp.asarray(CV),
+        jnp.asarray(ms))
+    np.testing.assert_array_equal(np.asarray(got), np.stack(wants))
+    np.testing.assert_array_equal(np.asarray(new_sz), sizes + ms)
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_heap_kmin_matches_xla_and_reference(trial):
+    """The fused frontier-search kernel must agree ELEMENT-WISE with the
+    XLA scan twin (prefix-stability is load-bearing for the sharded
+    candidate merge) and the numpy oracle."""
+    from repro.core.batched_pq import _k_smallest
+
+    rng = np.random.default_rng(400 + trial)
+    n = int(rng.integers(0, 150))
+    cap, c_max = 256, 8
+    a = _random_heap(rng, n, cap)
+    ne = int(rng.integers(0, c_max + 1))
+    ids_r, vals_r = k_smallest_reference(a, n, ne, c_max)
+    ids_x, vals_x = _k_smallest(jnp.asarray(a), jnp.int32(n),
+                                jnp.int32(ne), c_max)
+    ids_k, vals_k = k_smallest(jnp.asarray(a), jnp.int32(n),
+                               jnp.int32(ne), c_max=c_max)
+    np.testing.assert_array_equal(np.asarray(ids_x), ids_r)
+    np.testing.assert_array_equal(np.asarray(vals_x), vals_r)
+    np.testing.assert_array_equal(np.asarray(ids_k), ids_r)
+    np.testing.assert_array_equal(np.asarray(vals_k), vals_r)
+
+
+def test_heap_kmin_sharded_per_shard_search():
+    rng = np.random.default_rng(11)
+    K, cap, c_max = 4, 256, 8
+    sizes = np.asarray([30, 0, 40, 5], np.int32)   # one empty shard
+    A = np.stack([_random_heap(rng, int(s), cap) for s in sizes])
+    ids, vals = k_smallest_sharded(jnp.asarray(A), jnp.asarray(sizes),
+                                   jnp.int32(5), c_max=c_max)
+    for k in range(K):
+        ir, vr = k_smallest_reference(A[k], sizes[k], 5, c_max)
+        np.testing.assert_array_equal(np.asarray(ids)[k], ir)
+        np.testing.assert_array_equal(np.asarray(vals)[k], vr)

@@ -1,4 +1,4 @@
-"""Sharded batched PQ (DESIGN.md §9): differential fuzz vs SequentialHeap.
+"""Sharded batched PQ (DESIGN.md §9–§10): differential fuzz vs SequentialHeap.
 
 The K-sharded queue must be observationally identical to the single
 sequential heap for every combined batch with ne, ni ≤ c_max (extracts see
@@ -6,10 +6,17 @@ the pre-batch multiset; answers ascending).  Batches larger than c_max are
 applied in slices (same contract as ``BatchedPriorityQueue.apply``), so
 oversized batches are checked for multiset conservation + per-shard heap
 invariants instead of exact interleaving.
+
+``use_pallas=True`` runs the same fuzz through the shard-grid kernels
+(``grid=(K,)``, DESIGN.md §10) — in interpret mode on CPU CI, so the
+kernel code paths are exercised without TPU hardware.  Donation and the
+one-blocking-sync slicing contract are asserted directly below.
 """
 import numpy as np
 import pytest
 
+from repro.core import batched_pq as bpq
+from repro.core import sharded_pq as sp
 from repro.core.batched_pq import check_heap_property
 from repro.core.seq_pq import SequentialHeap
 from repro.core.sharded_pq import (
@@ -57,6 +64,144 @@ def test_differential_fuzz_vs_sequential_heap(n_shards):
     rng = np.random.default_rng(100 + n_shards)
     pq = ShardedBatchedPQ(CAP, c_max=C_MAX, n_shards=n_shards)
     _fuzz_against_oracle(pq, rng, steps=12)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_differential_fuzz_pallas_path(n_shards):
+    """use_pallas=True: shard-grid kernels (interpret mode on CPU CI) must
+    be observationally identical to the sequential oracle, including
+    batches larger than the live size (the fuzz draws ne up to c_max on a
+    queue that starts empty)."""
+    rng = np.random.default_rng(300 + n_shards)
+    pq = ShardedBatchedPQ(512, c_max=C_MAX, n_shards=n_shards,
+                          use_pallas=True)
+    _fuzz_against_oracle(pq, rng, steps=8)
+
+
+def test_pallas_and_xla_sharded_paths_agree():
+    """Same seed, same batches: the kernel path and the vmapped-XLA path
+    must produce identical heap layouts, not just equal multisets."""
+    rng = np.random.default_rng(17)
+    init = rng.uniform(0, 500, 40).astype(np.float32).tolist()
+    pq_x = ShardedBatchedPQ(512, c_max=C_MAX, n_shards=2, values=init)
+    pq_p = ShardedBatchedPQ(512, c_max=C_MAX, n_shards=2, values=init,
+                            use_pallas=True)
+    for _ in range(4):
+        ne = int(rng.integers(0, C_MAX + 1))
+        ni = int(rng.integers(0, C_MAX + 1))
+        ins = rng.uniform(0, 500, ni).astype(np.float32).tolist()
+        got_x = pq_x.apply(ne, ins)
+        got_p = pq_p.apply(ne, ins)
+        assert got_x == got_p
+        np.testing.assert_array_equal(np.asarray(pq_x.state.a),
+                                      np.asarray(pq_p.state.a))
+
+
+def test_donation_aliases_and_invalidates_heap_buffers():
+    """Zero-copy contract (DESIGN.md §10): the jitted batch apply donates
+    the heap state — the lowering reports input-output aliasing and the
+    old device buffers are actually freed after a dispatch (no stale
+    reuse is possible)."""
+    import jax.numpy as jnp
+
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=2, values=[1.0, 2.0])
+    lowered = sp.sharded_apply_batch.lower(
+        pq.state, jnp.int32(1), jnp.zeros(4), jnp.int32(0),
+        c_max=4, n_shards=2, key_range=None, use_pallas=False)
+    assert "tf.aliasing_output" in lowered.as_text()
+
+    old = pq.state
+    pq.apply(1, [3.0])
+    assert old.a.is_deleted() and old.size.is_deleted()
+    # the undonated ablation twin must NOT alias
+    pq2 = ShardedBatchedPQ(256, c_max=4, n_shards=2, values=[1.0, 2.0],
+                           donate=False)
+    lowered2 = sp.sharded_apply_batch_undonated.lower(
+        pq2.state, jnp.int32(1), jnp.zeros(4), jnp.int32(0),
+        c_max=4, n_shards=2, key_range=None, use_pallas=False)
+    assert "tf.aliasing_output" not in lowered2.as_text()
+    old2 = pq2.state
+    pq2.apply(1, [3.0])
+    assert not old2.a.is_deleted()
+
+
+def test_single_heap_apply_batch_donates():
+    import jax.numpy as jnp
+
+    pq = bpq.BatchedPriorityQueue(128, c_max=4, values=[5.0])
+    lowered = bpq.apply_batch.lower(
+        pq.state, jnp.int32(1), jnp.zeros(4), jnp.int32(0),
+        c_max=4, use_pallas=False)
+    assert "tf.aliasing_output" in lowered.as_text()
+    old = pq.state
+    pq.apply(1, [])
+    assert old.a.is_deleted()
+
+
+def test_at_most_one_blocking_sync_per_apply(monkeypatch):
+    """Sync-free slicing (DESIGN.md §10): a multi-slice apply() performs
+    exactly ONE blocking device→host transfer, at result consumption —
+    and an insert-only apply_async performs none."""
+    fetches = []
+    real_fetch = bpq._host_fetch
+
+    def counting_fetch(tree):
+        fetches.append(1)
+        return real_fetch(tree)
+
+    monkeypatch.setattr(bpq, "_host_fetch", counting_fetch)
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=2,
+                          values=[float(v) for v in range(20)])
+    got = pq.apply(10, [0.5, 1.5, 2.5, 3.5, 4.5])   # 3 slices of c_max=4
+    assert len(got) == 10 and got.count(None) == 0
+    assert len(fetches) == 1
+    # insert-only async publish: no blocking transfer at all
+    fetches.clear()
+    pq.apply_async(0, [7.0, 8.0])
+    assert len(fetches) == 0
+    # the queue stays coherent afterwards
+    assert len(pq) == 20 - 10 + 5 + 2
+
+
+def test_pipelined_consumption_keeps_occupancy_bounds_tight():
+    """Results consumed one pass behind (the scheduler's pipelined
+    pattern) must still re-tighten the host occupancy mirror: the sizes
+    are fetched at result() time, so a steady-state workload never
+    ratchets the bounds into a spurious capacity refusal."""
+    rng = np.random.default_rng(23)
+    pq = ShardedBatchedPQ(64, c_max=8, n_shards=2)
+    pq.apply(0, rng.uniform(0, 1000, 40).astype(np.float32).tolist())
+    prev = None
+    for _ in range(15):                      # 15×8 inserts >> capacity 64
+        ins = rng.uniform(0, 1000, 8).astype(np.float32).tolist()
+        cur = pq.apply_async(8, ins)         # extracts == inserts: size 40
+        if prev is not None:
+            assert prev.result().count(None) == 0
+        prev = cur
+    prev.result()
+    assert len(pq) == 40
+    np.testing.assert_array_equal(pq._sizes_ub,
+                                  np.asarray(pq.state.size, np.int64))
+
+
+def test_host_routing_matches_device():
+    """The sync-free overflow guard mirrors the device's insert routing on
+    the host — the numpy twins must agree bit-for-bit."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(5)
+    vals = np.concatenate([
+        rng.uniform(-1e6, 1e6, 256).astype(np.float32),
+        np.asarray([0.0, -0.0, 1e-39, -1e-39, 3.0e38, -3.0e38, 1.0, 0.1],
+                   np.float32),
+    ])
+    jv = sp._flush_subnormals(jnp.asarray(vals))
+    for K in (1, 2, 3, 8):
+        np.testing.assert_array_equal(
+            np.asarray(route_hash(jv, K)), sp.route_hash_host(vals, K))
+        np.testing.assert_array_equal(
+            np.asarray(route_range(jv, K, -1e6, 1e6)),
+            sp.route_range_host(vals, K, -1e6, 1e6))
 
 
 @pytest.mark.parametrize("n_shards", [2, 4])
