@@ -3,25 +3,49 @@
 Workloads (paper §5.1): *Tree* (one random spanning tree, half its edges
 prepopulated) and *Forest* (10 random trees); each thread applies
 AreConnected with probability c% and Insert/Delete of a tree edge with
-(100-c)/2% each, c ∈ {50, 80, 100}.
+(100-c)/2% each, c ∈ {50, 90, 100}.
 
-Implementations: PC (batched read combining — §3.3 TPU-native variant),
-Lock (global mutex), RW Lock, FC (flat combining).  The paper's claim:
-PC > {Lock, RW Lock, FC} and the gap grows with both thread count and
-read share, because the combined read batch costs ONE vectorized device
-call regardless of batch size.
+Implementations:
+
+* ``PC host`` — the PR-2-era host tier: ``DynamicGraph`` (Python edge set,
+  full O(E log V) XLA rebuild per update batch) under the §3.3 batched
+  read combining.  This is the baseline the device tier must beat.
+* ``PC-K{1,4,8}`` — the device-resident ``DeviceGraph`` (DESIGN.md §11):
+  donated edge-buffer passes, K-way sharded label propagation, and the
+  insert-only union-find fast path, under the same combining transform.
+* ``PC-K4 nodonate`` / ``PC-K4 pallas`` — ablation twins (EXPERIMENTS
+  §Ablations): copy-per-pass dispatch, and label rebuilds through the
+  ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
+* ``Lock`` (global mutex), ``RW Lock``, ``FC`` (flat combining) — the
+  paper's host baselines.
+
+The paper's claim: PC > {Lock, RW Lock, FC} and the gap grows with both
+thread count and read share, because the combined read batch costs ONE
+vectorized device call regardless of batch size.  The device tier's
+claim on top (BENCH_graph.json): at read share ≥ 90% the fast-path
+refresh + zero-copy edge passes beat the host tier's unconditional full
+rebuild.
 """
 from __future__ import annotations
 
 import argparse
 import numpy as np
 
+from repro.core.device_graph import DeviceGraph
 from repro.core.dynamic_graph import DynamicGraph
 from repro.core.flat_combining import flat_combining
 from repro.core.locks import LockDS, RWLockDS
 from repro.core.read_opt import batched_read_optimized
 
 from .common import save, throughput
+
+# update-slice width: combining passes carry ≤ threads updates, and the
+# presence test is an O(c_max · capacity) broadcast compare — keep it tight
+C_MAX = 16
+
+DEFAULT_IMPLS = ("PC host", "PC-K1", "PC-K4", "PC-K8",
+                 "PC-K4 nodonate", "PC-K4 pallas",
+                 "Lock", "RW Lock", "FC")
 
 
 def _random_tree(rng, n):
@@ -31,9 +55,39 @@ def _random_tree(rng, n):
             for i in range(1, n)]
 
 
+def _device_graph(n_vertices, edge_capacity, *, n_shards, use_pallas=False,
+                  donate=True):
+    return DeviceGraph(n_vertices, edge_capacity=edge_capacity,
+                       c_max=C_MAX, n_shards=n_shards,
+                       use_pallas=use_pallas, donate=donate)
+
+
+def _make_impl(name, n_vertices, edge_capacity):
+    """Returns (graph, execute) for one benchmark cell."""
+    if name == "PC host":
+        g = DynamicGraph(n_vertices)
+        return g, batched_read_optimized(g).execute
+    if name.startswith("PC-K"):
+        key = name.split()
+        K = int(key[0][len("PC-K"):])
+        flavor = key[1] if len(key) > 1 else ""
+        g = _device_graph(n_vertices, edge_capacity, n_shards=K,
+                          use_pallas=flavor == "pallas",
+                          donate=flavor != "nodonate")
+        return g, batched_read_optimized(g).execute
+    g = DynamicGraph(n_vertices)
+    if name == "Lock":
+        return g, LockDS(g).execute
+    if name == "RW Lock":
+        return g, RWLockDS(g, g.read_only).execute
+    if name == "FC":
+        return g, flat_combining(g).execute
+    raise ValueError(f"unknown impl {name!r}")
+
+
 def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
-                read_pcts=(50, 80, 100), threads=(1, 2, 4, 8),
-                ops=200, seed=0):
+                read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
+                ops=200, seed=0, impls=DEFAULT_IMPLS):
     results = []
     for wl in workloads:
         rng = np.random.default_rng(seed)
@@ -41,27 +95,45 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
             trees = [_random_tree(rng, n_vertices)]
         else:
             trees = [_random_tree(rng, n_vertices) for _ in range(10)]
+        # distinct tree edges bound the live set; the host guard is
+        # conservative (live + batch ≤ capacity), so add c_max headroom
+        distinct = {(min(u, v), max(u, v)) for t in trees for (u, v) in t}
+        edge_capacity = len(distinct) + 2 * C_MAX
 
-        def fresh_graph():
-            g = DynamicGraph(n_vertices)
+        def prepopulate(g):
             r = np.random.default_rng(seed + 1)
-            for t in trees:
-                for (u, v) in t:
-                    if r.random() < 0.5:
-                        g.insert(u, v)
+            batch = [e for t in trees for e in t if r.random() < 0.5]
+            if hasattr(g, "insert_batch"):
+                g.insert_batch(batch)
+            else:
+                for (u, v) in batch:
+                    g.insert(u, v)
             return g
+
+        def warmup(g, ex, e0, max_p):
+            """Exercise every op path (insert/delete pass, full rebuild,
+            fast-path merge, fused AND lean reads, every read-batch width
+            the combiner can produce with ≤ max_p threads) BEFORE the
+            timed section, restoring the edge set — jit compile time must
+            not pollute the rows."""
+            if ex("insert", e0):
+                ex("connected", (0, 1))
+                ex("delete", e0)
+            else:
+                ex("delete", e0)
+                ex("connected", (0, 1))
+                ex("insert", e0)
+            # read-batch widths 1..max_p (the first is the refresh path,
+            # the rest hit the labels-current lean path)
+            for k in range(1, max_p + 1):
+                g.read_batch(["connected"] * k, [(0, 1)] * k)
 
         for c in read_pcts:
             for P in threads:
-                impls = {
-                    "PC": lambda g: batched_read_optimized(g).execute,
-                    "Lock": lambda g: LockDS(g).execute,
-                    "RW Lock": lambda g: RWLockDS(g, g.read_only).execute,
-                    "FC": lambda g: flat_combining(g).execute,
-                }
-                for name, make in impls.items():
-                    g = fresh_graph()
-                    ex = make(g)
+                for name in impls:
+                    g, ex = _make_impl(name, n_vertices, edge_capacity)
+                    prepopulate(g)
+                    warmup(g, ex, trees[0][0], P)
 
                     def body(tid, ex=ex):
                         r = np.random.default_rng(1000 + tid)
@@ -83,7 +155,7 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                     results.append({"workload": wl, "read_pct": c,
                                     "threads": P, "impl": name,
                                     "ops_per_s": round(tput, 1)})
-                    print(f"[graph] {wl} c={c}% P={P} {name:8s}"
+                    print(f"[graph] {wl} c={c}% P={P} {name:16s}"
                           f" {tput:9.0f} ops/s")
     save("bench_graph", results)
     return results
@@ -94,10 +166,13 @@ def main(argv=None):
     ap.add_argument("--vertices", type=int, default=1000)
     ap.add_argument("--ops", type=int, default=200)
     ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
-    ap.add_argument("--reads", type=int, nargs="+", default=[50, 80, 100])
+    ap.add_argument("--reads", type=int, nargs="+", default=[50, 90, 100])
+    ap.add_argument("--workloads", nargs="+", default=["tree", "forest"])
+    ap.add_argument("--impls", nargs="+", default=list(DEFAULT_IMPLS))
     a = ap.parse_args(argv)
     bench_graph(n_vertices=a.vertices, ops=a.ops, threads=tuple(a.threads),
-                read_pcts=tuple(a.reads))
+                read_pcts=tuple(a.reads), workloads=tuple(a.workloads),
+                impls=tuple(a.impls))
 
 
 if __name__ == "__main__":

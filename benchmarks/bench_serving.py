@@ -11,6 +11,11 @@ pass — EXPERIMENTS §Ablations) over the reduced qwen2 model.  The
 "pc-pallas" mode (PQ through the shard-grid kernels, DESIGN.md §10) is
 opt-in via ``schedulers=``, not in the default run — Pallas interpret
 mode on a CPU backend is too slow for a benchmark row.
+
+``--workload graph`` serves the §5.1 dynamic-graph application through
+the same schedulers (``GraphExecutor`` over the device-resident
+``DeviceGraph``, DESIGN.md §11) with ``--read-pct`` read share; rows land
+in bench_serving_graph.json.
 """
 from __future__ import annotations
 
@@ -23,21 +28,25 @@ from .common import save
 
 def bench_serving(arch="qwen2_0_5b", session_counts=(1, 2, 4, 8),
                   requests=3, tokens=6, max_batch=8,
-                  schedulers=("serial", "pc", "pc-async", "pc-nodonate")):
+                  schedulers=("serial", "pc", "pc-async", "pc-nodonate"),
+                  workload="decode", read_pct=90):
     results = []
     for sched in schedulers:
         for s in session_counts:
             stats = run_serving(arch, sessions=s,
                                 requests_per_session=requests,
                                 n_tokens=tokens, max_batch=max_batch,
-                                scheduler=sched, seed=42)
+                                scheduler=sched, seed=42,
+                                workload=workload, read_pct=read_pct)
             stats["sessions"] = s
             results.append(stats)
-            print(f"[serving] {sched:8s} sessions={s}: "
+            print(f"[serving] {workload} {sched:8s} sessions={s}: "
                   f"{stats['req_per_s']:6.2f} req/s, "
                   f"{stats['device_steps']:4d} device steps, "
                   f"mean batch {stats['mean_batch']}")
-    save("bench_serving", results)
+    name = "bench_serving" if workload == "decode" \
+        else f"bench_serving_{workload}"
+    save(name, results)
     return results
 
 
@@ -45,8 +54,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--tokens", type=int, default=6)
+    ap.add_argument("--workload", choices=["decode", "graph"],
+                    default="decode")
+    ap.add_argument("--read-pct", type=int, default=90)
+    ap.add_argument("--requests", type=int, default=3)
     a = ap.parse_args(argv)
-    bench_serving(session_counts=tuple(a.sessions), tokens=a.tokens)
+    bench_serving(session_counts=tuple(a.sessions), tokens=a.tokens,
+                  workload=a.workload, read_pct=a.read_pct,
+                  requests=a.requests)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,23 @@
 """Fig.-1-style comparison on one workload: dynamic graph, 80% reads.
 
-Runs the same (tree workload, c=80%, P threads) cell against all four
-implementations and prints the throughput ranking the paper claims.
+Runs the same (tree workload, c=80%, P threads) cell against the paper's
+host implementations plus the device-resident tier (DESIGN.md §11) and
+prints the throughput ranking the paper claims.  The interpret-mode
+``PC-K4 pallas`` ablation row is deliberately NOT in the quick-start set
+(too slow off-TPU — see bench_graph.py / EXPERIMENTS.md); add it with
+``--impls``.
 
 Run:  PYTHONPATH=src python examples/graph_connectivity.py --threads 4
 """
 import argparse
+import os
+import sys
 
-from benchmarks.bench_graph import bench_graph
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.bench_graph import bench_graph  # noqa: E402
+
+QUICKSTART_IMPLS = ("PC host", "PC-K4", "Lock", "RW Lock", "FC")
 
 
 def main():
@@ -15,13 +25,15 @@ def main():
     ap.add_argument("--threads", type=int, default=4)
     ap.add_argument("--vertices", type=int, default=500)
     ap.add_argument("--ops", type=int, default=150)
+    ap.add_argument("--impls", nargs="+", default=list(QUICKSTART_IMPLS))
     a = ap.parse_args()
     rows = bench_graph(n_vertices=a.vertices, workloads=("tree",),
-                       read_pcts=(80,), threads=(a.threads,), ops=a.ops)
+                       read_pcts=(80,), threads=(a.threads,), ops=a.ops,
+                       impls=tuple(a.impls))
     rows.sort(key=lambda r: -r["ops_per_s"])
-    print("\nranking @ c=80%, P=%d:" % a.threads)
+    print(f"\nranking @ c=80%, P={a.threads}:")
     for r in rows:
-        print(f"  {r['impl']:8s} {r['ops_per_s']:9.0f} ops/s")
+        print(f"  {r['impl']:16s} {r['ops_per_s']:9.0f} ops/s")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ from .sharded_pq import (
 )
 from .read_opt import batched_read_optimized, read_optimized_combining
 from .dynamic_graph import DynamicGraph
+from .device_graph import DeviceGraph, GraphState
 
 __all__ = [
     "ParallelCombiner", "PublicationRecord", "Request", "Status",
@@ -28,5 +29,5 @@ __all__ = [
     "apply_batch_reference", "check_heap_property", "heap_init",
     "ShardedBatchedPQ", "ShardedHeapState", "sharded_apply_batch",
     "batched_read_optimized", "read_optimized_combining",
-    "DynamicGraph",
+    "DynamicGraph", "DeviceGraph", "GraphState",
 ]

@@ -1,0 +1,496 @@
+"""Device-resident batched dynamic graph (DESIGN.md §11) — the §5.1
+read-dominated application rebuilt to the sharded-PQ tier's standard.
+
+The host tier (``dynamic_graph.DynamicGraph``) keeps the edge set in a
+Python ``set`` and rebuilds the full component labeling in pure XLA after
+every update batch.  This engine moves the edges — and the refresh
+bookkeeping — onto the device, so one combining pass costs one fused
+update program plus one fused read program with a single blocking fetch,
+mirroring the batched-PQ architecture (``sharded_pq.py``, DESIGN.md §10):
+
+* **edge buffer** — a fixed-capacity endpoint-array pair plus a validity
+  mask (CSR-free: connectivity needs the edge multiset, not adjacency).
+  One ``update_pass`` applies ≤ ``c_max`` MIXED insert/delete requests
+  with sequential arrival-order semantics: per-lane results come from the
+  last-earlier-same-edge chain rule, while the buffer takes only the NET
+  effect per edge class (removals free slots, additions claim them by
+  prefix-sum rank; transient insert+delete pairs never touch memory).
+* **device-resident dirty tracking** — the state carries a pending-edge
+  buffer, a ``dirty_full`` flag and a rebuild counter.  The update pass
+  appends netted-in edges to the pending buffer and raises ``dirty_full``
+  when an edge is netted OUT (or the pending buffer overflows); the host
+  never has to look at the masks to decide how to refresh.
+* **fused read pass** — ``connected`` batches run refresh + gather/compare
+  as ONE program: a ``lax.cond`` picks the full scatter-min +
+  pointer-jumping rebuild (``kernels/label_prop``, over a ``grid=(K,)``
+  vertex partition when ``use_pallas=True``) when ``dirty_full``, the
+  contracted-graph **union-find fast path** (``merge_labels``, O(b log n)
+  for b pending inserts) when only inserts happened — the common case in
+  a read-dominated workload — and the identity when labels are current.
+* **sync-free update publishing** — ``update_batch_async`` leaves the
+  per-request result masks on device; they ride the next read's single
+  blocking fetch (or are fetched at ``result()``).  A combining pass of
+  updates + reads therefore costs one blocking transfer, the same
+  contract as the PQ's ``apply_async`` (regression-tested with the
+  ``_host_fetch`` counting hook).
+
+Every jitted pass **donates** the graph state, so the buffers update in
+place (zero-copy, DESIGN.md §10); ``donate=False`` is the copy-per-pass
+ablation twin.  The wrapper keeps a host mirror of the live edge count —
+exact after every resolved fetch, a conservative upper bound in between —
+for the capacity guard and the pow2 compaction bound of full rebuilds.
+The wrapper is not thread-safe; confine each instance to one thread at a
+time (the read-optimized combiner provides exactly that serialization).
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.label_prop import connected_components, merge_labels
+
+# All device→host transfers on the graph hot path route through this hook
+# so tests can count blocking syncs (same idiom as batched_pq._host_fetch).
+_host_fetch = jax.device_get
+
+
+class GraphState(NamedTuple):
+    """Device-resident dynamic graph: edge buffer + labels + dirty state.
+
+    The edge arrays and the pending buffer carry one extra SCRATCH slot at
+    index ``capacity`` (resp. ``pend_cap``) — the graph twin of the heap's
+    ``a[0]`` scratch: predicated scatters route every inactive lane there,
+    so an active lane can never collide with an inactive write-back
+    (duplicate scatter indices with different values are undefined)."""
+
+    eu: jax.Array          # (capacity+1,) int32 — endpoint min (junk if ~valid)
+    ev: jax.Array          # (capacity+1,) int32 — endpoint max
+    valid: jax.Array       # (capacity+1,) bool_ — [capacity] stays False
+    labels: jax.Array      # (n,) int32 — component-min labels (maybe stale)
+    pend: jax.Array        # (2, pend_cap+1) int32 — inserted, not yet merged
+    n_pend: jax.Array      # () int32
+    dirty_full: jax.Array  # () bool_ — labels need a full rebuild
+    n_full: jax.Array      # () int32 — full-rebuild counter (fast-path test)
+
+
+# ---------------------------------------------------------------------------
+# Jitted combining passes (donated state: zero-copy buffer updates)
+# ---------------------------------------------------------------------------
+def _update_impl(state: GraphState, buv: jax.Array, is_ins: jax.Array,
+                 nb: jax.Array) -> Tuple[GraphState, jax.Array]:
+    """Apply ≤ c_max MIXED insert/delete requests as ONE fused pass.
+
+    ``buv``: (2, c) endpoints; ``is_ins``: (c,) bool op selector; ``nb``:
+    live lane count.  Per-lane results follow sequential arrival-order
+    semantics: a lane's edge is "present before" iff the LAST earlier
+    lane touching the same edge was an insert (an op's outcome fully
+    determines presence regardless of its own success), falling back to
+    buffer presence for the class's first lane.  The buffer takes the NET
+    effect per edge class (the class's last lane decides final presence).
+
+    Dirty tracking is device-resident: netted-in edges append to the
+    pending buffer (the union-find fast path's work list); any netted-out
+    edge — or a pending-buffer overflow — raises ``dirty_full`` and
+    clears the pending list (the full rebuild covers the buffer anyway).
+
+    Returns ``(state, ok)`` — the per-request results stay on device
+    until fetched (see ``AsyncUpdateResult``)."""
+    eu, ev, valid, labels, pend, n_pend, dirty_full, n_full = state
+    cap = eu.shape[0] - 1                             # [cap] is scratch
+    c = buv.shape[1]
+    pend_cap = pend.shape[1] - 1                      # [:, pend_cap] scratch
+    lane = jnp.arange(c, dtype=jnp.int32)
+    u = jnp.minimum(buv[0], buv[1])
+    v = jnp.maximum(buv[0], buv[1])
+    act = (lane < nb) & (u != v)      # self-loops are never stored: insert
+    #                                   and delete of one both report False
+    match = (valid[None, :] & (eu[None, :] == u[:, None])
+             & (ev[None, :] == v[:, None]))           # (c, capacity+1)
+    in_buf = jnp.any(match, axis=1)
+    slot = jnp.argmax(match, axis=1)                  # unique if in_buf
+
+    same = (u[:, None] == u[None, :]) & (v[:, None] == v[None, :])
+    earlier = same & act[None, :] & (lane[None, :] < lane[:, None])
+    has_prev = jnp.any(earlier, axis=1)
+    prev_idx = jnp.argmax(jnp.where(earlier, lane[None, :], -1), axis=1)
+    present_before = jnp.where(has_prev, is_ins[prev_idx], in_buf)
+    ok = act & jnp.where(is_ins, ~present_before, present_before)
+
+    is_last = act & ~jnp.any(same & act[None, :]
+                             & (lane[None, :] > lane[:, None]), axis=1)
+    rem = is_last & ~is_ins & in_buf                  # netted out
+    add = is_last & is_ins & ~in_buf                  # netted in
+
+    # predicated scatters: inactive lanes write the scratch slot, so they
+    # can never collide with an active lane's target
+    tgt = jnp.where(rem, slot, cap)
+    valid = valid.at[tgt].set(jnp.where(rem, False, valid[tgt]))
+
+    free = ~valid & (jnp.arange(cap + 1) < cap)       # post-removal slots
+    rank = jnp.cumsum(add.astype(jnp.int32)) - 1
+    # device-side overflow clamp (the host guard refuses earlier; this
+    # keeps the scatter in-bounds even if the mirror were wrong)
+    add = add & (rank < jnp.sum(free.astype(jnp.int32)))
+    free_idx = jnp.nonzero(free, size=c, fill_value=cap)[0]
+    tgt = jnp.where(add, free_idx[jnp.clip(rank, 0, c - 1)], cap)
+    eu = eu.at[tgt].set(jnp.where(add, u, eu[tgt]))
+    ev = ev.at[tgt].set(jnp.where(add, v, ev[tgt]))
+    valid = valid.at[tgt].set(jnp.where(add, True, valid[tgt]))
+    valid = valid.at[cap].set(False)                  # scratch stays dead
+
+    # -- device-resident dirty tracking
+    n_add = jnp.sum(add.astype(jnp.int32))
+    go_full = dirty_full | jnp.any(rem) | (n_pend + n_add > pend_cap)
+    app = add & ~go_full
+    ptgt = jnp.where(app, jnp.clip(n_pend + rank, 0, pend_cap - 1),
+                     pend_cap)
+    pend = pend.at[0, ptgt].set(jnp.where(app, u, pend[0, ptgt]))
+    pend = pend.at[1, ptgt].set(jnp.where(app, v, pend[1, ptgt]))
+    n_pend = jnp.where(go_full, 0, n_pend + n_add)
+    state = GraphState(eu, ev, valid, labels, pend, n_pend, go_full, n_full)
+    return state, ok
+
+
+def _read_impl(state: GraphState, uv: jax.Array, *, n: int, e_bound: int,
+               n_shards: int, use_pallas: bool
+               ) -> Tuple[GraphState, jax.Array]:
+    """Fused refresh + gather/compare: ONE program per read batch.
+
+    A ``lax.cond`` tree picks the refresh: full rebuild when
+    ``dirty_full`` (edges compacted to the static pow2 ``e_bound`` ≥ the
+    live count — padding repeats slot 0, an invalid-slot self-loop or a
+    duplicate edge, both no-ops for scatter-min), the contracted-graph
+    merge when only pending inserts exist, identity otherwise.  The
+    rebuild counter increments exactly on the full branch."""
+    eu, ev, valid, labels, pend, n_pend, dirty_full, n_full = state
+    pend_w = pend.shape[1]                 # pend_cap + 1 (scratch included;
+    #                                        sanitized by the n_pend mask)
+
+    def full(labels):
+        idx = jnp.nonzero(valid, size=e_bound, fill_value=0)[0]
+        okslot = valid[idx]
+        seu = jnp.where(okslot, eu[idx], 0)
+        sev = jnp.where(okslot, ev[idx], 0)
+        return connected_components(seu, sev, n=n, n_shards=n_shards,
+                                    use_pallas=use_pallas)
+
+    def fast(labels):
+        lane = jnp.arange(pend_w, dtype=jnp.int32)
+        pu = jnp.where(lane < n_pend, pend[0], 0)
+        pv = jnp.where(lane < n_pend, pend[1], 0)
+        return merge_labels(labels, pu, pv, n=n)
+
+    labels = jax.lax.cond(
+        dirty_full, full,
+        lambda l: jax.lax.cond(n_pend > 0, fast, lambda x: x, l),
+        labels)
+    n_full = n_full + dirty_full.astype(jnp.int32)
+    state = GraphState(eu, ev, valid, labels, pend, jnp.int32(0),
+                       jnp.bool_(False), n_full)
+    return state, labels[uv[0]] == labels[uv[1]]
+
+
+# ``state`` is DONATED on every pass — the edge buffer, labels and dirty
+# state update in place (DESIGN.md §10/§11); the ``*_undonated`` twins are
+# the copy-per-pass ablation (EXPERIMENTS §Ablations).
+update_pass = jax.jit(_update_impl, donate_argnums=(0,))
+update_pass_undonated = jax.jit(_update_impl)
+_READ_STATIC = ("n", "e_bound", "n_shards", "use_pallas")
+read_pass = jax.jit(_read_impl, static_argnames=_READ_STATIC,
+                    donate_argnums=(0,))
+read_pass_undonated = jax.jit(_read_impl, static_argnames=_READ_STATIC)
+
+
+@jax.jit
+def _connected_pairs(labels: jax.Array, uv: jax.Array) -> jax.Array:
+    """Lean read: labels known-current, no refresh machinery dispatched."""
+    return labels[uv[0]] == labels[uv[1]]
+
+
+def _pow2(m: int) -> int:
+    return 1 << max(0, (m - 1).bit_length())
+
+
+class AsyncUpdateResult:
+    """Deferred host view of one update batch's per-request results.
+
+    The ok masks stay on device until the first :meth:`result` call — or,
+    cheaper, until the owning graph's next read pass fetches them inside
+    its single blocking transfer (``update masks ride the read fetch``,
+    the graph twin of the PQ's one-sync contract).  Resolution also
+    re-tightens the owner's live-edge-count mirror to the exact value.
+    """
+
+    def __init__(self, owner: "DeviceGraph", masks: List[jax.Array],
+                 arr: np.ndarray, is_ins: np.ndarray):
+        self._owner: Optional["DeviceGraph"] = owner
+        self.masks = masks
+        self._arr = arr
+        self._is_ins = is_ins
+        self._out: Optional[List[bool]] = None
+
+    def _resolve(self, masks_h) -> None:
+        """Apply fetched masks to the owner's mirrors (owner-ordered)."""
+        ne = self._arr.shape[1]
+        ok = (np.concatenate([np.asarray(m) for m in masks_h])[:ne]
+              if masks_h else np.zeros((0,), bool))
+        owner = self._owner
+        if owner is not None:
+            # exact net count change: ok inserts minus ok deletes equals
+            # adds minus removals (transient pairs cancel: their ok
+            # insert is matched by an ok delete in the same batch)
+            owner._n_edges += int(ok[self._is_ins].sum())
+            owner._n_edges -= int(ok[~self._is_ins].sum())
+            owner._outstanding_ins -= int(self._is_ins.sum())
+        self._out = ok.tolist()
+        self._owner = None
+        self.masks = []
+
+    def result(self) -> List[bool]:
+        """Per-request results in arrival order (cached after first call)."""
+        if self._out is None:
+            self._owner._resolve_through(self)
+        return self._out
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrapper
+# ---------------------------------------------------------------------------
+class DeviceGraph:
+    """Device-resident dynamic graph with batched combining passes.
+
+    Args:
+      n_vertices: vertex-set size (ids are [0, n)).
+      edge_capacity: fixed device edge-buffer capacity.  The host guard is
+        conservative: an update batch is refused when ``live-bound +
+        batch-inserts`` could exceed capacity even if duplicates would
+        dedup — size the buffer with ≥ c_max headroom over the expected
+        live edge count.
+      c_max: combined update-batch capacity per pass (compile-time
+        constant; larger batches are applied in c_max slices).
+      n_shards: vertex-partition shard count K of the label-propagation
+        kernel grid.
+      use_pallas: run full label rebuilds through the ``grid=(K,)``
+        Pallas kernel (DESIGN.md §11) instead of the XLA twin.
+      donate: zero-copy (donated) passes (default); False is the
+        copy-per-pass ablation twin.
+
+    Interface-compatible with ``DynamicGraph`` (``insert``/``delete``/
+    ``connected``/``read_batch``/``apply``) plus the batched entry points
+    (``insert_batch``/``delete_batch``/``update_batch``/
+    ``update_batch_async``/``connected_batch``) that the read-optimized
+    combiner uses: one fused pass per ≤ c_max update slice, one fused
+    refresh+read pass per read batch, one blocking fetch per pass.
+    """
+
+    read_only: Set[str] = {"connected"}
+
+    def __init__(self, n_vertices: int, *, edge_capacity: int = 4096,
+                 c_max: int = 64, n_shards: int = 1,
+                 use_pallas: bool = False, donate: bool = True):
+        if n_vertices < 1:
+            raise ValueError("n_vertices must be >= 1")
+        if c_max < 1:
+            raise ValueError("c_max must be >= 1")
+        if edge_capacity < c_max:
+            raise ValueError("edge_capacity must be >= c_max")
+        self.n = int(n_vertices)
+        self.capacity = int(edge_capacity)
+        self.c_max = int(c_max)
+        self.n_shards = int(n_shards)
+        self.use_pallas = bool(use_pallas)
+        self.donate = bool(donate)
+        pend_cap = 2 * self.c_max
+        # +1: the scratch slot for predicated scatters (see GraphState)
+        self.state = GraphState(
+            eu=jnp.zeros((self.capacity + 1,), jnp.int32),
+            ev=jnp.zeros((self.capacity + 1,), jnp.int32),
+            valid=jnp.zeros((self.capacity + 1,), jnp.bool_),
+            labels=jnp.arange(self.n, dtype=jnp.int32),
+            pend=jnp.zeros((2, pend_cap + 1), jnp.int32),
+            n_pend=jnp.int32(0),
+            dirty_full=jnp.bool_(False),
+            n_full=jnp.int32(0),
+        )
+        # live-edge-count mirror: exact after every resolved fetch; the
+        # bound adds inserts whose result masks are still on device
+        self._n_edges = 0
+        self._outstanding_ins = 0
+        self._unresolved: List[AsyncUpdateResult] = []
+        # True iff an update pass was dispatched since the last fused
+        # read — False means the device labels are known-current and a
+        # read can take the lean gather/compare dispatch
+        self._maybe_stale = False
+        # full-rebuild compaction bound: a pow2 ≥ the live count, with
+        # hysteresis (grow on demand, shrink only on a 4x drop) so a
+        # live count oscillating across a pow2 boundary doesn't recompile
+        # the fused read pass every few batches
+        self._e_bound = 1
+
+    def __len__(self) -> int:
+        """Live edge count (exact: resolves any outstanding updates)."""
+        self._resolve_through(None)
+        return self._n_edges
+
+    def _live_bound(self) -> int:
+        return self._n_edges + self._outstanding_ins
+
+    def _rebuild_bound(self) -> int:
+        """Static compaction bound for the fused read pass (hysteresis —
+        see ``_e_bound``); always ≥ the live-edge upper bound."""
+        lb = max(1, self._live_bound())
+        if lb > self._e_bound or 4 * lb <= self._e_bound:
+            self._e_bound = _pow2(lb)
+        return self._e_bound
+
+    # -- updates -------------------------------------------------------------
+    def _edge_array(self, edges) -> np.ndarray:
+        """(2, len) int32 endpoint array, vertex ids range-checked."""
+        arr = np.asarray(edges, np.int64).reshape(-1, 2).T
+        if arr.size and (arr.min() < 0 or arr.max() >= self.n):
+            raise ValueError("vertex id out of range")
+        return arr.astype(np.int32)
+
+    def update_batch_async(self, methods: Sequence[str],
+                           inputs: Sequence[Any]) -> AsyncUpdateResult:
+        """Apply a combined MIXED update batch — one fused device pass per
+        ≤ c_max slice, arrival order preserved (in-pass chain resolution,
+        see ``_update_impl``).  NO blocking transfer: the result masks
+        stay on device and ride the next read's fetch."""
+        for m in methods:
+            if m not in ("insert", "delete"):
+                raise ValueError(f"unknown update method {m!r}")
+        arr = self._edge_array(list(inputs))
+        is_ins = np.asarray([m == "insert" for m in methods], bool)
+        fn = update_pass if self.donate else update_pass_undonated
+        masks = []
+        ne = arr.shape[1]
+        if ne == 0:
+            # nothing dispatched: the labels stay known-current (keep the
+            # lean read path) and the handle resolves trivially
+            handle = AsyncUpdateResult(self, [], arr, is_ins)
+            handle._out = []
+            return handle
+        # guard the WHOLE batch before dispatching any slice: a mid-loop
+        # refusal would leave already-applied slices in the buffer with
+        # the host mirrors (and _maybe_stale) never updated
+        if self._live_bound() + int(is_ins.sum()) > self.capacity:
+            raise ValueError(
+                f"edge capacity {self.capacity} exceeded: "
+                f"≤{self._live_bound()} live edges "
+                f"+ {int(is_ins.sum())} inserts")
+        for i in range(0, ne, self.c_max):
+            nb = min(self.c_max, ne - i)
+            n_ins = int(is_ins[i : i + nb].sum())
+            buv = np.zeros((2, self.c_max), np.int32)
+            buv[:, :nb] = arr[:, i : i + nb]
+            sel = np.zeros((self.c_max,), bool)
+            sel[:nb] = is_ins[i : i + nb]
+            self.state, ok = fn(self.state, jnp.asarray(buv),
+                                jnp.asarray(sel), jnp.int32(nb))
+            masks.append(ok)
+            self._outstanding_ins += n_ins
+        self._maybe_stale = True
+        handle = AsyncUpdateResult(self, masks, arr, is_ins)
+        self._unresolved.append(handle)
+        return handle
+
+    def _resolve_through(self, handle: Optional[AsyncUpdateResult],
+                         extra=None):
+        """Fetch (once) the masks of EVERY unresolved update handle plus
+        ``extra``, then apply them to the mirrors in dispatch order.
+        Resolving one handle resolves all outstanding ones — their masks
+        are already determined on device, and one combined fetch is
+        exactly the sync the contract budgets.  ``handle`` only
+        distinguishes \"this handle was already resolved\" (no-op)."""
+        todo = list(self._unresolved)
+        if handle is not None and handle not in todo:
+            todo = []                      # already resolved
+        if not todo and extra is None:
+            return None
+        fetched = _host_fetch(([h.masks for h in todo], extra))
+        for h, masks_h in zip(todo, fetched[0]):
+            h._resolve(masks_h)
+            self._unresolved.remove(h)
+        return fetched[1]
+
+    def update_batch(self, methods: Sequence[str],
+                     inputs: Sequence[Any]) -> List[Any]:
+        """Blocking ``update_batch_async`` (one fetch, at return)."""
+        return self.update_batch_async(methods, inputs).result()
+
+    def insert_batch(self, edges: Sequence[Tuple[int, int]]) -> List[bool]:
+        """Insert a batch of edges; per-edge "was new" results."""
+        return self.update_batch(["insert"] * len(edges), edges)
+
+    def delete_batch(self, edges: Sequence[Tuple[int, int]]) -> List[bool]:
+        """Delete a batch of edges; per-edge "was present" results."""
+        return self.update_batch(["delete"] * len(edges), edges)
+
+    def insert(self, u: int, v: int) -> bool:
+        return self.insert_batch([(u, v)])[0]
+
+    def delete(self, u: int, v: int) -> bool:
+        return self.delete_batch([(u, v)])[0]
+
+    # -- reads ---------------------------------------------------------------
+    def connected_batch(self, pairs: Sequence[Tuple[int, int]]) -> List[bool]:
+        """Answer a batch of connectivity queries with ONE device program
+        and ONE blocking fetch: the fused refresh+gather pass when an
+        update was dispatched since the last read (its fetch also resolves
+        every outstanding update handle), the lean gather/compare dispatch
+        when the labels are known-current (queries padded to a power of
+        two to bound recompiles)."""
+        arr = self._edge_array(pairs)
+        npairs = arr.shape[1]
+        if not npairs:
+            return []
+        uv = np.zeros((2, _pow2(npairs)), np.int32)
+        uv[:, :npairs] = arr
+        if not (self._maybe_stale or self._unresolved):
+            ans = _connected_pairs(self.state.labels, jnp.asarray(uv))
+            return np.asarray(_host_fetch(ans))[:npairs].tolist()
+        # cleared BEFORE the dispatch: a reentrant update re-marks it
+        # (the lazy-but-correct refresh ordering, cf. DynamicGraph)
+        self._maybe_stale = False
+        fn = read_pass if self.donate else read_pass_undonated
+        self.state, ans = fn(self.state, jnp.asarray(uv), n=self.n,
+                             e_bound=self._rebuild_bound(),
+                             n_shards=self.n_shards,
+                             use_pallas=self.use_pallas)
+        got = self._resolve_through(None, extra=ans)
+        return np.asarray(got)[:npairs].tolist()
+
+    def connected(self, u: int, v: int) -> bool:
+        return self.connected_batch([(u, v)])[0]
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        assert all(m == "connected" for m in methods)
+        return self.connected_batch(inputs)
+
+    # -- generic apply (Lock / RW-Lock / FC wrappers) -------------------------
+    def apply(self, method: str, input: Any = None) -> Any:
+        if method == "insert":
+            return self.insert(*input)
+        if method == "delete":
+            return self.delete(*input)
+        if method == "connected":
+            return self.connected(*input)
+        raise ValueError(f"unknown method {method!r}")
+
+    # -- debug / test helpers -------------------------------------------------
+    def full_rebuilds(self) -> int:
+        """Device-side full-rebuild counter (the union-find fast-path
+        regression hook: insert-only traffic must not bump it)."""
+        return int(np.asarray(self.state.n_full))
+
+    def edges(self) -> Set[Tuple[int, int]]:
+        """Host copy of the live edge set (test/debug; one fetch)."""
+        eu, ev, valid = _host_fetch((self.state.eu, self.state.ev,
+                                     self.state.valid))
+        return {(int(u), int(v))
+                for u, v, ok in zip(eu, ev, valid) if ok}

@@ -11,6 +11,11 @@ rebuild, rebuilt lazily once per batch).  Reads are answered by ONE
 vectorized gather/compare over the label array — this is where parallel
 combining harvests its "free cycles" (the read batch costs one device call
 regardless of batch size, while a global lock pays one call per read).
+
+This is the HOST tier (and the benchmark baseline).  The device-resident
+tier — edges in a donated device buffer, shard-grid label-propagation
+kernels, an insert-only union-find fast path — is ``device_graph.py``
+(DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -77,16 +82,29 @@ class DynamicGraph:
 
     # -- reads ---------------------------------------------------------------
     def _refresh(self) -> None:
-        if not self._dirty:
-            return
-        m = max(1, len(self.edges))
-        pad = 1 << (m - 1).bit_length()        # pow2 padding limits recompiles
-        eu = np.zeros((pad,), np.int32)
-        ev = np.zeros((pad,), np.int32)
-        for i, (a, b) in enumerate(self.edges):
-            eu[i], ev[i] = a, b                # padding = (0,0) self-loops
-        self._labels = _components(jnp.asarray(eu), jnp.asarray(ev), n=self.n)
-        self._dirty = False
+        """Lazy-but-correct label rebuild.
+
+        ``insert``/``delete`` return before refreshing — the labels are
+        only rebuilt here, on the read path.  The dirty flag is cleared
+        BEFORE building from a snapshot of the edge set: an update that
+        lands mid-rebuild (a concurrent direct caller, or a reentrant
+        update from a monkeypatched device call) re-marks ``_dirty`` and
+        the loop rebuilds again.  The previous revision cleared the flag
+        AFTER the rebuild, silently losing such updates — ``connected()``
+        then read stale labels forever (regression-tested in
+        test_core_apps.py).
+        """
+        while self._dirty:
+            self._dirty = False
+            edges = list(self.edges)           # snapshot, pre-clear ordering
+            m = max(1, len(edges))
+            pad = 1 << (m - 1).bit_length()    # pow2 padding limits recompiles
+            eu = np.zeros((pad,), np.int32)
+            ev = np.zeros((pad,), np.int32)
+            for i, (a, b) in enumerate(edges):
+                eu[i], ev[i] = a, b            # padding = (0,0) self-loops
+            self._labels = _components(jnp.asarray(eu), jnp.asarray(ev),
+                                       n=self.n)
 
     def connected(self, u: int, v: int) -> bool:
         self._refresh()

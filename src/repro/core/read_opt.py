@@ -12,6 +12,11 @@ Two realizations:
   sequentially, then answers the whole read list with ONE vectorized device
   call (``read_batch``).  This is the variant the dynamic-graph benchmark
   uses: free cycles = XLA lanes instead of spinning threads.
+
+  Data structures that expose ``update_batch`` (the device-resident
+  ``DeviceGraph``, DESIGN.md §11) get their update list applied as batched
+  combining passes too — one fused device program per run of same-method
+  updates instead of one ``apply`` dispatch per request.
 """
 from __future__ import annotations
 
@@ -81,13 +86,26 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
     def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
         updates = [r for r in requests if is_update(r.method)]
         reads = [r for r in requests if not is_update(r.method)]
-        for r in updates:
-            r.res = ds.apply(r.method, r.input)
-            r.status = Status.FINISHED
+        handle = None
+        if updates and hasattr(ds, "update_batch_async"):
+            # device-resident tier (DESIGN.md §11): the whole update list
+            # is dispatched as fused combining passes (arrival order
+            # preserved) with the result masks left ON DEVICE — they ride
+            # the read batch's single blocking fetch below
+            handle = ds.update_batch_async([r.method for r in updates],
+                                           [r.input for r in updates])
+        else:
+            for r in updates:
+                r.res = ds.apply(r.method, r.input)
+                r.status = Status.FINISHED
         if reads:
             results = ds.read_batch([r.method for r in reads],
                                     [r.input for r in reads])
             for r, res in zip(reads, results):
+                r.res = res
+                r.status = Status.FINISHED
+        if handle is not None:
+            for r, res in zip(updates, handle.result()):
                 r.res = res
                 r.status = Status.FINISHED
 
@@ -95,3 +113,7 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
         return  # lanes did the work; nothing left for the thread
 
     return ParallelCombiner(combiner_code, client_code, **kw)
+
+
+# canonical name for the TPU-native tier (see module docstring)
+BatchedReadOptimized = batched_read_optimized

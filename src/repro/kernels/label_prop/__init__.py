@@ -1,0 +1,6 @@
+from .ops import (  # noqa: F401
+    connected_components,
+    label_step,
+    label_step_xla,
+    merge_labels,
+)

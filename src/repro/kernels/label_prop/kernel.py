@@ -1,0 +1,125 @@
+"""Connected-component label propagation as a shard-grid Pallas TPU kernel.
+
+The dynamic-graph application (paper §5.1, DESIGN.md §8.3/§11) answers
+``connected(u, v)`` by comparing component labels that are rebuilt from the
+device-resident edge buffer after update batches.  The rebuild is the
+classic scatter-min + pointer-jumping iteration (Shiloach–Vishkin style):
+
+    s   = scatter-min over edges of min(l[u], l[v])    (hooking)
+    l'  = min(s, l[s])                                 (pointer jump)
+
+iterated to a fixpoint.  One iteration is a pure, shard-count-independent
+function — the Pallas kernel below computes it over ``grid=(K,)`` with the
+vertex set partitioned into K contiguous blocks (DESIGN.md §10 shard-grid
+recipe, mirroring ``kernels/heap_kmin``): program ``k`` owns vertices
+``[k·B, (k+1)·B)`` and produces exactly that block of ``l'``.
+
+Key layout decisions:
+
+* the full label array and the full edge endpoint arrays are broadcast to
+  every program as whole-array VMEM inputs; only the OUTPUT is
+  block-partitioned, so no cross-program communication is needed.
+* gathers (``l[u]``) and the scatter-min both lower to broadcast-compare
+  reductions over a ``(e_chunk, ·)`` tile — VPU-friendly masked minima with
+  no data-dependent addressing, the portable TPU substitute for arbitrary
+  gather/scatter.  Edges stream through a ``fori_loop`` in chunks of
+  ``e_chunk``, so the live working set is O(e_chunk · n + B · n) i32 —
+  with e_chunk=256 that prices the compiled kernel at roughly n ≲ 8K
+  vertices per the ~16 MiB VMEM budget (the §5.1 workload scale).
+  Million-vertex graphs need a second tiling level over the vertex axis
+  of the masks (a future revision); the XLA twin has no such bound.
+* the pointer jump reads the OLD labels (``l[s]``, not ``s[s]``): ``s`` is
+  only materialized block-locally, while the old labels are a kernel input
+  every program holds.  Jumping through old labels preserves monotone
+  convergence (labels only decrease and ``l[x] ≤ x`` is invariant) and
+  makes the iteration identical for every K — load-bearing for the
+  kernel-vs-ref bit-exactness tests.
+
+Determinism: min-reductions are order-independent, so the kernel, the XLA
+twin (``ops.label_step_xla``) and the numpy oracle (``ref.py``) agree
+element-wise for every shard count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compat
+
+# larger than any vertex id (labels live in [0, n_pad) with n_pad < 2^30);
+# a plain Python int so the kernel closes over no traced constants
+BIG = 1 << 30
+
+
+def _gather_i32(table: jax.Array, idx: jax.Array, n_pad: int) -> jax.Array:
+    """table[idx] for i32 tables via broadcast-compare masked min.
+
+    ``idx`` values must lie in [0, n_pad).  Exactly one lane of the
+    ``(len(idx), n_pad)`` mask hits per row, so the row-min IS the gather —
+    no data-dependent addressing (TPU-portable, see module docstring).
+    """
+    vrow = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n_pad), 1)
+    return jnp.min(jnp.where(idx[:, None] == vrow, table[None, :], BIG),
+                   axis=1)
+
+
+def _label_step_kernel(labels_ref, eu_ref, ev_ref, out_ref,
+                       *, block: int, n_pad: int, e_cap: int, e_chunk: int):
+    k = pl.program_id(0)
+    base = k * block
+    labels = labels_ref[...]                       # (n_pad,) i32, full array
+    own = base + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)[:, 0]
+    s = labels_ref[pl.ds(base, block)]             # owned block of l
+
+    def chunk(c, s):
+        off = c * e_chunk
+        eu = eu_ref[pl.ds(off, e_chunk)]           # (EC,) i32
+        ev = ev_ref[pl.ds(off, e_chunk)]
+        m = jnp.minimum(_gather_i32(labels, eu, n_pad),
+                        _gather_i32(labels, ev, n_pad))
+        # scatter-min of m into the owned vertex block (masked row-min;
+        # padding edges are (0,0) self-loops — a no-op contribution)
+        cu = jnp.min(jnp.where(eu[None, :] == own[:, None],
+                               m[None, :], BIG), axis=1)
+        cv = jnp.min(jnp.where(ev[None, :] == own[:, None],
+                               m[None, :], BIG), axis=1)
+        return jnp.minimum(s, jnp.minimum(cu, cv))
+
+    s = jax.lax.fori_loop(0, e_cap // e_chunk, chunk, s)
+    # pointer jump through the OLD labels (see module docstring)
+    out_ref[...] = jnp.minimum(s, _gather_i32(labels, s, n_pad))
+
+
+def label_step_sharded_vmem(labels: jax.Array, eu: jax.Array, ev: jax.Array,
+                            *, n_shards: int, e_chunk: int,
+                            interpret: bool = False) -> jax.Array:
+    """One scatter-min + pointer-jump iteration as ONE ``grid=(K,)`` kernel.
+
+    labels: (n_pad,) i32 with n_pad divisible by ``n_shards``;
+    eu/ev: (e_cap,) i32 edge endpoints, (0, 0)-padded, e_cap divisible by
+    ``e_chunk``.  Returns the next label array, (n_pad,) i32.
+    """
+    (n_pad,) = labels.shape
+    (e_cap,) = eu.shape
+    assert n_pad % n_shards == 0 and e_cap % e_chunk == 0
+    block = n_pad // n_shards
+    kernel = functools.partial(_label_step_kernel, block=block, n_pad=n_pad,
+                               e_cap=e_cap, e_chunk=e_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_shards,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # labels (full)
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # eu (full)
+            pl.BlockSpec(memory_space=pltpu.VMEM),   # ev (full)
+        ],
+        out_specs=pl.BlockSpec((block,), lambda k: (k,),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        compiler_params=_compat.CompilerParams(has_side_effects=False),
+        interpret=interpret,
+    )(labels.astype(jnp.int32), eu.astype(jnp.int32), ev.astype(jnp.int32))

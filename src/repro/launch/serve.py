@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.device_graph import DeviceGraph
 from repro.models import lm, transformer
 from repro.serving import PCScheduler, SerialScheduler
 
@@ -73,10 +74,57 @@ class DecodeExecutor:
         return [out[i, : int(r["n_tokens"])] for i, r in enumerate(reqs)]
 
 
+class GraphExecutor:
+    """Graph-query executor — the scheduler's ``graph`` workload
+    (DESIGN.md §11), beside the decode workload above.
+
+    Each combined batch is a list of ``{'op': 'insert'|'delete'|
+    'connected', 'edge': (u, v)}`` requests.  Updates are applied first in
+    arrival order (ONE fused mixed-op device pass per ≤ c_max slice via
+    ``DeviceGraph.update_batch``), then ALL reads are answered with one
+    gather/compare device call — the §3.3 read-optimized transform with
+    the scheduler's combiner loop playing the combiner.
+    """
+
+    def __init__(self, n_vertices: int = 512, *, edge_capacity: int = 8192,
+                 c_max: int = 64, n_shards: int = 4,
+                 use_pallas: bool = False, donate: bool = True):
+        self.graph = DeviceGraph(n_vertices, edge_capacity=edge_capacity,
+                                 c_max=c_max, n_shards=n_shards,
+                                 use_pallas=use_pallas, donate=donate)
+        self.device_steps = 0
+
+    def __call__(self, reqs: List[Dict[str, Any]]) -> List[bool]:
+        methods = [r["op"] for r in reqs]
+        upd = [i for i, m in enumerate(methods) if m != "connected"]
+        reads = [i for i, m in enumerate(methods) if m == "connected"]
+        out: List[Any] = [None] * len(reqs)
+        handle = None
+        if upd:
+            # fused mixed-op passes; result masks ride the read fetch
+            handle = self.graph.update_batch_async(
+                [methods[i] for i in upd], [reqs[i]["edge"] for i in upd])
+            self.device_steps += -(-len(upd) // self.graph.c_max)
+        if reads:
+            res = self.graph.read_batch(
+                ["connected"] * len(reads),
+                [reqs[i]["edge"] for i in reads])
+            for i, r in zip(reads, res):
+                out[i] = r
+            self.device_steps += 1
+        if handle is not None:
+            for i, r in zip(upd, handle.result()):
+                out[i] = r
+        return out
+
+
 def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 requests_per_session: int = 4, n_tokens: int = 8,
                 prompt_len: int = 16, max_batch: int = 8,
-                scheduler: str = "pc", seed: int = 0) -> Dict[str, Any]:
+                scheduler: str = "pc", seed: int = 0,
+                workload: str = "decode", read_pct: int = 90,
+                n_vertices: int = 512,
+                graph_use_pallas: bool = False) -> Dict[str, Any]:
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
     ``scheduler``: "serial" (one dispatch per request), "pc" (async
@@ -87,10 +135,52 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     zero-copy donated dispatch, EXPERIMENTS §Ablations) or "pc-pallas"
     (the PQ's combining passes run as shard-grid Pallas kernels,
     DESIGN.md §10).
+
+    ``workload``: "decode" (LM decode batches over ``DecodeExecutor``) or
+    "graph" (dynamic-graph queries over ``GraphExecutor`` — the §5.1
+    read-dominated application served through the same scheduler;
+    ``read_pct`` sets each session's share of ``connected`` queries).
+    Under the graph workload the ablation scheduler modes apply to the
+    graph engine too: "pc-nodonate" un-donates its passes and
+    "pc-pallas" (or ``graph_use_pallas=True``) routes label rebuilds
+    through the shard-grid kernel (DESIGN.md §11).
     """
-    cfg = configs.get_reduced(arch_id)
-    ex = DecodeExecutor(cfg, max_batch=max_batch,
-                        max_len=prompt_len + n_tokens + 1, seed=seed)
+    rng = np.random.default_rng(seed)
+    if workload == "graph":
+        ex: Any = GraphExecutor(
+            n_vertices, n_shards=4,
+            use_pallas=graph_use_pallas or scheduler == "pc-pallas",
+            donate=scheduler != "pc-nodonate")
+        tree = [(int(i), int(rng.integers(0, max(1, i))))
+                for i in range(1, n_vertices)]
+        reqs_tab = []
+        for s in range(sessions):
+            row = []
+            for _ in range(requests_per_session):
+                p = rng.random() * 100
+                edge = tree[int(rng.integers(0, len(tree)))]
+                if p < read_pct:
+                    row.append({"op": "connected",
+                                "edge": (int(rng.integers(0, n_vertices)),
+                                         int(rng.integers(0, n_vertices)))})
+                elif p < read_pct + (100 - read_pct) / 2:
+                    row.append({"op": "insert", "edge": edge})
+                else:
+                    row.append({"op": "delete", "edge": edge})
+            reqs_tab.append(row)
+    elif workload == "decode":
+        cfg = configs.get_reduced(arch_id)
+        ex = DecodeExecutor(cfg, max_batch=max_batch,
+                            max_len=prompt_len + n_tokens + 1, seed=seed)
+        prompts = rng.integers(2, cfg.vocab,
+                               (sessions, requests_per_session,
+                                prompt_len)).astype(np.int32)
+        reqs_tab = [[{"prompt": prompts[s, j], "n_tokens": n_tokens}
+                     for j in range(requests_per_session)]
+                    for s in range(sessions)]
+    else:
+        raise ValueError(f"unknown workload {workload!r}")
+
     if scheduler in ("pc", "pc-async", "pc-nodonate", "pc-pallas"):
         sch = PCScheduler(ex, max_batch=max_batch, use_pq=True,
                           pq_donate=scheduler != "pc-nodonate",
@@ -100,14 +190,11 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     else:
         raise ValueError(f"unknown scheduler {scheduler!r}")
 
-    rng = np.random.default_rng(seed)
-    prompts = rng.integers(2, cfg.vocab, (sessions, requests_per_session,
-                                          prompt_len)).astype(np.int32)
     results: Dict[int, list] = {}
     t0 = time.time()
 
     def session(sid: int):
-        reqs = [({"prompt": prompts[sid, j], "n_tokens": n_tokens},
+        reqs = [(reqs_tab[sid][j],
                  float(sid * requests_per_session + j))
                 for j in range(requests_per_session)]
         if scheduler == "pc-async":
@@ -127,8 +214,9 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         sch.close()
 
     total_reqs = sessions * requests_per_session
-    total_toks = total_reqs * n_tokens
+    total_toks = total_reqs * (n_tokens if workload == "decode" else 1)
     stats = {
+        "workload": workload,
         "scheduler": scheduler,
         "requests": total_reqs,
         "wall_s": round(wall, 3),
@@ -153,11 +241,15 @@ def main():
                     choices=["pc", "pc-async", "pc-nodonate", "pc-pallas",
                              "serial"],
                     default="pc")
+    ap.add_argument("--workload", choices=["decode", "graph"],
+                    default="decode")
+    ap.add_argument("--read-pct", type=int, default=90)
     args = ap.parse_args()
     stats = run_serving(args.arch, sessions=args.sessions,
                         requests_per_session=args.requests,
                         n_tokens=args.tokens, max_batch=args.max_batch,
-                        scheduler=args.scheduler)
+                        scheduler=args.scheduler, workload=args.workload,
+                        read_pct=args.read_pct)
     print("[serve]", stats)
 
 

@@ -1,0 +1,276 @@
+"""Shared differential-fuzz harness for the repo's combined data
+structures (ISSUE 3 satellite): ONE oracle + fuzz-loop + hypothesis
+state-machine toolkit used by BOTH the sharded batched PQ and the dynamic
+graph engines, so every engine is exercised by the same adversarial
+schedules — interleaved op streams, duplicate ops inside one batch,
+delete-reinsert cycles, self-loops, empty batches.
+
+Three layers:
+
+* ``BFSOracle`` / ``SequentialHeap`` — pure-python semantic oracles.
+* ``fuzz_graph_vs_oracle`` / ``fuzz_pq_vs_oracle`` — deterministic
+  seeded fuzz loops (no hypothesis dependency) used by the tier-1 tests.
+* ``make_graph_machine`` / ``make_pq_machine`` — hypothesis rule-based
+  state machines (only available when hypothesis is installed; the
+  factories raise otherwise).  ``test_differential.py`` instantiates
+  them per engine.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Set, Tuple
+
+import numpy as np
+
+from repro.core.seq_pq import SequentialHeap
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, rule
+
+    HAVE_HYPOTHESIS = True
+except ImportError:          # tier-1 containers without the extra
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Oracles
+# ---------------------------------------------------------------------------
+class BFSOracle:
+    """Pure-python dynamic graph: edge set + BFS connectivity.
+
+    Mirrors the full engine contract, including the update RESULTS:
+    ``insert`` is True iff the edge was new (self-loops always False),
+    ``delete`` is True iff the edge was present.
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+        self.edges: Set[Tuple[int, int]] = set()
+
+    @staticmethod
+    def _norm(u: int, v: int) -> Tuple[int, int]:
+        return (min(u, v), max(u, v))
+
+    def insert(self, u: int, v: int) -> bool:
+        e = self._norm(u, v)
+        if u == v or e in self.edges:
+            return False
+        self.edges.add(e)
+        return True
+
+    def delete(self, u: int, v: int) -> bool:
+        e = self._norm(u, v)
+        if e not in self.edges:
+            return False
+        self.edges.remove(e)
+        return True
+
+    def connected(self, u: int, v: int) -> bool:
+        if u == v:
+            return True
+        adj: dict = {}
+        for (a, b) in self.edges:
+            adj.setdefault(a, []).append(b)
+            adj.setdefault(b, []).append(a)
+        seen = {u}
+        stack = [u]
+        while stack:
+            x = stack.pop()
+            for y in adj.get(x, ()):
+                if y == v:
+                    return True
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        return False
+
+    def apply(self, method: str, edge) -> bool:
+        return getattr(self, method)(*edge)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fuzz loops (tier-1: no hypothesis needed)
+# ---------------------------------------------------------------------------
+def _rand_edge(rng, n: int, pool: List[Tuple[int, int]]):
+    """Mostly-fresh edges, but revisit the pool often enough to generate
+    duplicate inserts, failed deletes and delete-reinsert cycles."""
+    if pool and rng.random() < 0.5:
+        return pool[int(rng.integers(0, len(pool)))]
+    e = (int(rng.integers(0, n)), int(rng.integers(0, n)))
+    pool.append(e)
+    return e
+
+
+def fuzz_graph_vs_oracle(graph, rng, steps: int, *, n: int,
+                         batch: bool = True) -> None:
+    """Interleaved insert/delete/connected fuzz against ``BFSOracle``.
+
+    Exercises single ops, duplicate-heavy mixed update batches (via
+    ``update_batch`` when the engine has one, else sequential ``apply``),
+    batched reads, self-loops, and delete-reinsert cycles — the schedules
+    the pre-harness oracle loop never generated."""
+    oracle = BFSOracle(n)
+    pool: List[Tuple[int, int]] = []
+    for step in range(steps):
+        kind = int(rng.integers(0, 5 if batch else 3))
+        if kind == 0:
+            u, v = _rand_edge(rng, n, pool)
+            assert graph.insert(u, v) == oracle.insert(u, v), \
+                (step, "insert", u, v)
+        elif kind == 1:
+            u, v = _rand_edge(rng, n, pool)
+            assert graph.delete(u, v) == oracle.delete(u, v), \
+                (step, "delete", u, v)
+        elif kind == 2:
+            u, v = _rand_edge(rng, n, pool)
+            assert graph.connected(u, v) == oracle.connected(u, v), \
+                (step, "connected", u, v)
+        elif kind == 3:
+            # mixed update batch, duplicates very likely (small pool slice)
+            k = int(rng.integers(1, 9))
+            methods = [("insert", "delete")[int(rng.integers(0, 2))]
+                       for _ in range(k)]
+            edges = [_rand_edge(rng, n, pool) for _ in range(k)]
+            if hasattr(graph, "update_batch"):
+                got = graph.update_batch(methods, edges)
+            else:
+                got = [graph.apply(m, e) for m, e in zip(methods, edges)]
+            want = [oracle.apply(m, e) for m, e in zip(methods, edges)]
+            assert got == want, (step, "update_batch", methods, edges,
+                                 got, want)
+        else:
+            k = int(rng.integers(1, 9))
+            queries = [(int(rng.integers(0, n)), int(rng.integers(0, n)))
+                       for _ in range(k)]
+            got = graph.read_batch(["connected"] * k, queries)
+            want = [oracle.connected(u, v) for (u, v) in queries]
+            assert got == want, (step, "read_batch", queries, got, want)
+
+
+def fuzz_pq_vs_oracle(pq, rng, steps: int, *, c_max: int,
+                      value_range: float = 1000.0) -> None:
+    """Combined extract/insert batches vs ``SequentialHeap`` (empty-queue
+    extracts included).  Engine contract: extracts see the pre-batch
+    multiset, answers ascending, None-padded."""
+    from repro.core.batched_pq import check_heap_property
+
+    oracle = SequentialHeap()
+    for v in pq.values():
+        oracle.insert(v)
+    for _ in range(steps):
+        ne = int(rng.integers(0, c_max + 1))
+        ni = int(rng.integers(0, c_max + 1))
+        ins = rng.uniform(0, value_range, ni).astype(np.float32).tolist()
+        got = pq.apply(ne, ins)
+        exp = [oracle.extract_min() for _ in range(ne)]
+        for x in ins:
+            oracle.insert(x)
+        got_real = sorted(g for g in got if g is not None)
+        exp_real = sorted(e for e in exp if e is not None)
+        assert got.count(None) == exp.count(None)
+        np.testing.assert_allclose(got_real, exp_real, rtol=1e-6)
+        np.testing.assert_allclose(pq.values(), oracle.values(), rtol=1e-6)
+        a = np.asarray(pq.state.a)
+        sizes = np.atleast_1d(np.asarray(pq.state.size))
+        for k in range(sizes.shape[0]):
+            row = a[k] if a.ndim == 2 else a
+            assert check_heap_property(row, int(sizes[k]))
+            assert row[0] == np.inf          # scratch slot invariant
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis rule-based state machines
+# ---------------------------------------------------------------------------
+def make_graph_machine(graph_factory: Callable[[], object], n: int):
+    """Rule-based state machine fuzzing a graph engine vs ``BFSOracle``.
+
+    Rules cover single ops on fresh and previously-touched edges
+    (delete-reinsert cycles), duplicate-edge mixed update batches, and
+    batched reads — shared by the host and device graph tiers.
+    """
+    if not HAVE_HYPOTHESIS:       # pragma: no cover
+        raise RuntimeError("hypothesis is not installed")
+
+    vertex = st.integers(0, n - 1)
+    method = st.sampled_from(["insert", "delete"])
+
+    class GraphMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.g = graph_factory()
+            self.o = BFSOracle(n)
+            self.pool: List[Tuple[int, int]] = [(0, 0)]
+
+        def _edge(self, data, fresh_uv):
+            if data.draw(st.booleans()):
+                return data.draw(st.sampled_from(self.pool))
+            self.pool.append(fresh_uv)
+            return fresh_uv
+
+        @rule(data=st.data(), u=vertex, v=vertex)
+        def single_insert(self, data, u, v):
+            e = self._edge(data, (u, v))
+            assert self.g.insert(*e) == self.o.insert(*e)
+
+        @rule(data=st.data(), u=vertex, v=vertex)
+        def single_delete(self, data, u, v):
+            e = self._edge(data, (u, v))
+            assert self.g.delete(*e) == self.o.delete(*e)
+
+        @rule(u=vertex, v=vertex)
+        def query(self, u, v):
+            assert self.g.connected(u, v) == self.o.connected(u, v)
+
+        @rule(data=st.data(),
+              ops=st.lists(method, min_size=1, max_size=8),
+              fresh=st.lists(st.tuples(vertex, vertex), min_size=8,
+                             max_size=8))
+        def mixed_batch(self, data, ops, fresh):
+            edges = [self._edge(data, fresh[i]) for i in range(len(ops))]
+            if hasattr(self.g, "update_batch"):
+                got = self.g.update_batch(ops, edges)
+            else:
+                got = [self.g.apply(m, e) for m, e in zip(ops, edges)]
+            want = [self.o.apply(m, e) for m, e in zip(ops, edges)]
+            assert got == want, (ops, edges, got, want)
+
+        @rule(queries=st.lists(st.tuples(vertex, vertex), min_size=1,
+                               max_size=8))
+        def batched_read(self, queries):
+            got = self.g.read_batch(["connected"] * len(queries), queries)
+            want = [self.o.connected(u, v) for (u, v) in queries]
+            assert got == want
+
+    return GraphMachine
+
+
+def make_pq_machine(pq_factory: Callable[[], object], c_max: int):
+    """Rule-based state machine fuzzing a batched PQ vs SequentialHeap."""
+    if not HAVE_HYPOTHESIS:       # pragma: no cover
+        raise RuntimeError("hypothesis is not installed")
+
+    class PQMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.pq = pq_factory()
+            self.o = SequentialHeap()
+            for v in self.pq.values():
+                self.o.insert(v)
+
+        @rule(ne=st.integers(0, 8),
+              ins=st.lists(st.floats(0, 1e6, width=32), max_size=8))
+        def combined_batch(self, ne, ins):
+            tiny = float(np.finfo(np.float32).tiny)
+            ins = [0.0 if abs(x) < tiny else x for x in ins]
+            got = self.pq.apply(ne, ins)
+            exp = [self.o.extract_min() for _ in range(ne)]
+            for x in ins:
+                self.o.insert(x)
+            assert got.count(None) == exp.count(None)
+            np.testing.assert_allclose(
+                sorted(g for g in got if g is not None),
+                sorted(e for e in exp if e is not None), rtol=1e-6)
+            np.testing.assert_allclose(self.pq.values(), self.o.values(),
+                                       rtol=1e-6)
+
+    return PQMachine

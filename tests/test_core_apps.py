@@ -1,43 +1,21 @@
-"""Dynamic-graph application (§5.1) + read-optimized combining integration."""
+"""Dynamic-graph application (§5.1) + read-optimized combining integration.
+
+The oracle and adversarial schedules live in the shared differential
+harness (tests/differential.py) — the same ``BFSOracle`` fuzzes the host
+tier here, the device tier in test_device_graph.py, and both under
+hypothesis in test_differential.py.
+"""
 import threading
 
 import numpy as np
 import pytest
 
+from differential import BFSOracle, fuzz_graph_vs_oracle
+
+import repro.core.dynamic_graph as dyng
 from repro.core.dynamic_graph import DynamicGraph
 from repro.core.locks import LockDS, RWLockDS
 from repro.core.read_opt import batched_read_optimized
-
-
-class NaiveGraph:
-    """Oracle: adjacency sets + BFS connectivity."""
-
-    def __init__(self, n):
-        self.n = n
-        self.adj = {i: set() for i in range(n)}
-
-    def insert(self, u, v):
-        self.adj[u].add(v)
-        self.adj[v].add(u)
-
-    def delete(self, u, v):
-        self.adj[u].discard(v)
-        self.adj[v].discard(u)
-
-    def connected(self, u, v):
-        if u == v:
-            return True
-        seen = {u}
-        stack = [u]
-        while stack:
-            x = stack.pop()
-            for y in self.adj[x]:
-                if y == v:
-                    return True
-                if y not in seen:
-                    seen.add(y)
-                    stack.append(y)
-        return False
 
 
 @pytest.mark.parametrize("trial", range(5))
@@ -45,7 +23,7 @@ def test_dynamic_graph_vs_bfs_oracle(trial):
     rng = np.random.default_rng(trial)
     n = 40
     g = DynamicGraph(n)
-    oracle = NaiveGraph(n)
+    oracle = BFSOracle(n)
     for step in range(120):
         op = rng.integers(0, 3)
         u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
@@ -58,6 +36,51 @@ def test_dynamic_graph_vs_bfs_oracle(trial):
         else:
             assert g.connected(u, v) == oracle.connected(u, v), \
                 (trial, step, u, v)
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_dynamic_graph_shared_harness_fuzz(trial):
+    """Harness schedules the old oracle loop never generated: duplicate
+    edges inside one batch, delete-reinsert cycles, self-loops, batched
+    reads — via the SAME fuzz loop the device engine runs."""
+    rng = np.random.default_rng(40 + trial)
+    fuzz_graph_vs_oracle(DynamicGraph(25), rng, steps=60, n=25)
+
+
+def test_insert_delete_results_match_oracle():
+    """insert/delete RESULTS (was-new / was-present) against the shared
+    oracle — duplicate and self-loop edges included."""
+    g = DynamicGraph(10)
+    o = BFSOracle(10)
+    for (m, e) in [("insert", (1, 2)), ("insert", (2, 1)),
+                   ("insert", (3, 3)), ("delete", (1, 2)),
+                   ("delete", (1, 2)), ("insert", (1, 2))]:
+        assert g.apply(m, e) == o.apply(m, e), (m, e)
+
+
+def test_refresh_not_lost_when_update_lands_mid_rebuild(monkeypatch):
+    """The return-before-refresh staleness fix: an update that lands
+    while a rebuild is in flight must not be clobbered by the rebuild's
+    flag bookkeeping.  The old code cleared ``_dirty`` AFTER the rebuild,
+    so the mid-rebuild insert below was lost and ``connected`` read stale
+    labels forever; the fixed ``_refresh`` clears the flag BEFORE
+    building from a snapshot and loops while re-marked."""
+    g = DynamicGraph(12)
+    g.insert(0, 1)
+    real = dyng._components
+    fired = []
+
+    def components_with_reentrant_insert(eu, ev, n):
+        if not fired:
+            fired.append(1)
+            g.insert(2, 3)       # lands mid-rebuild (sets _dirty again)
+        return real(eu, ev, n=n)
+
+    monkeypatch.setattr(dyng, "_components",
+                        components_with_reentrant_insert)
+    assert g.connected(0, 1) is True
+    # the mid-rebuild edge must be visible without any further update
+    assert g.connected(2, 3) is True, "mid-rebuild insert was lost"
 
 
 def test_read_batch_matches_single_reads(rng):
@@ -77,7 +100,7 @@ def test_pc_graph_concurrent_sessions():
     n = 50
     g = DynamicGraph(n)
     eng = batched_read_optimized(g)
-    oracle = NaiveGraph(n)
+    oracle = BFSOracle(n)
     oracle_lock = threading.Lock()
     errors = []
 

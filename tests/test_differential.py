@@ -1,0 +1,51 @@
+"""Hypothesis rule-based differential fuzz (ISSUE 3 satellite): the SAME
+state-machine harness (tests/differential.py) drives the host dynamic
+graph, the device-resident graph engine, and the sharded batched PQ
+against pure-python oracles — interleaved ops, duplicate-edge batches and
+delete-reinsert cycles included.
+
+Marked ``slow`` + ``fuzz``: the tier-1 CI job deselects them
+(``-m "not slow"``); the dedicated fuzz job runs ``-m fuzz``.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="state-machine fuzz needs hypothesis (pip install -e .[test])")
+from hypothesis import HealthCheck, settings  # noqa: E402
+
+from differential import make_graph_machine, make_pq_machine  # noqa: E402
+
+from repro.core.device_graph import DeviceGraph  # noqa: E402
+from repro.core.dynamic_graph import DynamicGraph  # noqa: E402
+from repro.core.sharded_pq import ShardedBatchedPQ  # noqa: E402
+
+pytestmark = [pytest.mark.slow, pytest.mark.fuzz]
+
+N = 24
+_SETTINGS = settings(max_examples=12, stateful_step_count=24,
+                     deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow,
+                                            HealthCheck.data_too_large])
+
+
+def _machine_case(machine_cls):
+    machine_cls.TestCase.settings = _SETTINGS
+    return machine_cls.TestCase
+
+
+TestHostGraphMachine = _machine_case(
+    make_graph_machine(lambda: DynamicGraph(N), N))
+
+TestDeviceGraphMachine = _machine_case(
+    make_graph_machine(
+        lambda: DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2), N))
+
+TestDeviceGraphNoDonateMachine = _machine_case(
+    make_graph_machine(
+        lambda: DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2,
+                            donate=False), N))
+
+TestShardedPQMachine = _machine_case(
+    make_pq_machine(lambda: ShardedBatchedPQ(512, c_max=8, n_shards=2),
+                    c_max=8))
