@@ -1,0 +1,60 @@
+"""Shared timing discipline for the benchmark modules (ISSUE 4 satellite).
+
+The trajectory entries in BENCH_pq.json / BENCH_graph.json record 2–3×
+run-to-run swings on the 2-core CPU container (EXPERIMENTS §Ablations) —
+single-shot timings made every cross-PR comparison a coin flip.  Every
+bench row now goes through :func:`measure`:
+
+* one untimed **warmup** run (jit compilation + cache warm — the bench
+  modules keep their own op-path warmups on top);
+* ``repeats`` timed runs (default 5);
+* the row reports the **median** ops/s plus the **IQR** (quartile spread,
+  same unit) — a cheap robust dispersion that flags noisy cells without
+  pretending the container can produce clean confidence intervals.
+
+Rows keep ``ops_per_s`` as the median so downstream tooling (the CI
+regression gate, the trajectory JSONs) needs no schema change; ``iqr``
+rides along as a new field.
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Callable, Dict
+
+from .common import throughput
+
+
+def median_iqr(samples) -> Dict[str, float]:
+    """Robust summary of repeated samples: ``{"median", "iqr"}``.
+
+    One sample degrades to ``iqr`` 0.0 (the quick-smoke escape hatch).
+    The single source of the discipline — bench_serving shares it, so a
+    change here cannot desynchronize the rows the CI gate compares.
+    """
+    samples = sorted(samples)
+    if not samples:
+        raise ValueError("need at least one sample")
+    median = statistics.median(samples)
+    if len(samples) >= 2:
+        q = statistics.quantiles(samples, n=4, method="inclusive")
+        iqr = q[2] - q[0]
+    else:
+        iqr = 0.0
+    return {"median": median, "iqr": iqr}
+
+
+def measure(n_threads: int, ops_per_thread: int,
+            body: Callable[[int], None], *, repeats: int = 5,
+            warmup: bool = True) -> Dict[str, float]:
+    """Median-of-``repeats`` throughput of ``body`` across a thread group.
+
+    Returns ``{"ops_per_s": median, "iqr": iqr}`` (both rounded to 0.1).
+    """
+    if repeats < 1:
+        raise ValueError("repeats must be >= 1")
+    if warmup:
+        throughput(n_threads, ops_per_thread, body)
+    stats = median_iqr(throughput(n_threads, ops_per_thread, body)
+                       for _ in range(repeats))
+    return {"ops_per_s": round(stats["median"], 1),
+            "iqr": round(stats["iqr"], 1)}

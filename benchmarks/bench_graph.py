@@ -37,7 +37,8 @@ from repro.core.flat_combining import flat_combining
 from repro.core.locks import LockDS, RWLockDS
 from repro.core.read_opt import batched_read_optimized
 
-from .common import save, throughput
+from ._timing import measure
+from .common import save
 
 # update-slice width: combining passes carry ≤ threads updates, and the
 # presence test is an O(c_max · capacity) broadcast compare — keep it tight
@@ -87,7 +88,7 @@ def _make_impl(name, n_vertices, edge_capacity):
 
 def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                 read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
-                ops=200, seed=0, impls=DEFAULT_IMPLS):
+                ops=200, seed=0, impls=DEFAULT_IMPLS, repeats=5):
     results = []
     for wl in workloads:
         rng = np.random.default_rng(seed)
@@ -151,12 +152,13 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                                 else:
                                     ex("delete", e)
 
-                    tput = throughput(P, ops, body)
-                    results.append({"workload": wl, "read_pct": c,
-                                    "threads": P, "impl": name,
-                                    "ops_per_s": round(tput, 1)})
+                    row = measure(P, ops, body, repeats=repeats)
+                    row.update({"workload": wl, "read_pct": c,
+                                "threads": P, "impl": name})
+                    results.append(row)
                     print(f"[graph] {wl} c={c}% P={P} {name:16s}"
-                          f" {tput:9.0f} ops/s")
+                          f" {row['ops_per_s']:9.0f} ops/s "
+                          f"(iqr {row['iqr']:.0f})")
     save("bench_graph", results)
     return results
 
@@ -169,10 +171,12 @@ def main(argv=None):
     ap.add_argument("--reads", type=int, nargs="+", default=[50, 90, 100])
     ap.add_argument("--workloads", nargs="+", default=["tree", "forest"])
     ap.add_argument("--impls", nargs="+", default=list(DEFAULT_IMPLS))
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed repeats per row (median + IQR reported)")
     a = ap.parse_args(argv)
     bench_graph(n_vertices=a.vertices, ops=a.ops, threads=tuple(a.threads),
                 read_pcts=tuple(a.reads), workloads=tuple(a.workloads),
-                impls=tuple(a.impls))
+                impls=tuple(a.impls), repeats=a.repeats)
 
 
 if __name__ == "__main__":

@@ -8,12 +8,25 @@ Implementations (paper's rivals adapted per DESIGN.md §8.4):
   Lock      — global mutex over the sequential heap
   Lock SL   — global mutex over the skip-list PQ (fine-grained stand-in)
 
-Ablation rows (EXPERIMENTS §Ablations; DESIGN.md §10):
+Ablation rows (EXPERIMENTS §Ablations; DESIGN.md §10, §12):
   PC-K{K} nodonate — same program, donation off: XLA copies the
               (K, capacity) heap buffers every combining pass
   PC-K{K} pallas   — phases 1/3/4 as shard-grid Pallas kernels
               (grid=(K,)); on a CPU backend these run in interpret mode
               (slow — enable with --ablate-pallas; on-by-default on TPU)
+  PC-K{K} rounds   — the §12 fused multi-round path: async clients
+              publish ops to an ``AsyncRoundsPQ`` combiner that packs up
+              to R (--rounds-cap) combining rounds into ONE donated
+              ``apply_rounds`` dispatch, with the host elimination
+              pre-pass in front.  Threads issue their op stream
+              non-blockingly and drain their extract futures at the end
+              of the run (the async-session client model of the
+              serving scheduler), so the row measures the amortized
+              dispatch claim rather than per-op round-trip latency.
+
+Every row reports median-of-N (default 5) with IQR via
+``benchmarks._timing.measure`` — single-shot rows swung 2–3× run-to-run
+on the CI container (EXPERIMENTS §Ablations).
 
 Workload (paper §5.2): prepopulate with S values from range R; each thread
 alternates 50/50 Insert(random)/ExtractMin.
@@ -37,12 +50,15 @@ import numpy as np
 
 from repro.core.batched_pq import BatchedPriorityQueue
 from repro.core.locks import LockDS
-from repro.core.pc_pq import (fc_priority_queue, pc_priority_queue,
+from repro.core.pc_pq import (AsyncRoundsPQ, fc_priority_queue,
+                              pc_priority_queue,
                               pc_sharded_priority_queue)
 from repro.core.seq_pq import SequentialHeap
+from repro.core.sharded_pq import ShardedBatchedPQ
 from repro.core.skiplist_pq import SkipListPQ
 
-from .common import save, throughput
+from ._timing import measure
+from .common import save
 
 C_MAX = 16
 
@@ -69,7 +85,8 @@ def shard_capacity(n_keys: int, n_shards: int, c_max: int = C_MAX,
 
 def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
              value_range=2 ** 31 - 1, seed=0, shard_counts=(1, 4, 8),
-             ablate_donation=True, ablate_pallas=None):
+             ablate_donation=True, ablate_pallas=None, ablate_rounds=True,
+             rounds_cap=4, repeats=5):
     if ablate_pallas is None:
         import jax
         ablate_pallas = jax.default_backend() == "tpu"
@@ -97,12 +114,14 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                 "Lock": LockDS(heap2).execute,
                 "Lock SL": LockDS(sl).execute,
             }
-            # binomial-tail shard sizing: the run inserts at most P*ops
-            # keys on top of the S initial ones (+ the 2-op jit warmup)
-            n_keys = S + P * ops + 2
+            # binomial-tail shard sizing: warmup + repeats timed runs
+            # insert at most (repeats+1)·P·ops keys on top of the S
+            # initial ones (+ the 2-op jit warmup)
+            n_keys = S + (repeats + 1) * P * ops + 2
             # sharded vs single-heap (DESIGN.md §9): same PC engine, the
             # K-shard queue applies the combined batch as ONE device
             # program — K=1 isolates the sharding overhead vs plain "PC"
+            rounds_impls = {}
             for K in shard_counts:
                 cap_k = shard_capacity(n_keys, K)
                 impls[f"PC-K{K}"] = pc_sharded_priority_queue(
@@ -115,10 +134,17 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                     impls[f"PC-K{K} pallas"] = pc_sharded_priority_queue(
                         cap_k, c_max=C_MAX, n_shards=K, values=init,
                         use_pallas=True).execute
-            return impls
+                if ablate_rounds:
+                    # §12 fused multi-round path: async clients, up to
+                    # rounds_cap combining rounds per donated dispatch
+                    rounds_impls[f"PC-K{K} rounds"] = AsyncRoundsPQ(
+                        ShardedBatchedPQ(cap_k, c_max=C_MAX, n_shards=K,
+                                         values=init),
+                        rounds_cap=rounds_cap)
+            return impls, rounds_impls
 
         for P in threads:
-            impls = make_impls(P)
+            impls, rounds_impls = make_impls(P)
             for name, ex in impls.items():
                 # warm the jit caches outside the timed window
                 ex("insert", 0.5)
@@ -133,10 +159,38 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                         else:
                             ex("extract_min")
 
-                tput = throughput(P, ops, body)
-                results.append({"impl": name, "size": S, "threads": P,
-                                "ops_per_s": round(tput, 1)})
-                print(f"[pq] S={S} P={P} {name:18s} {tput:10.0f} ops/s")
+                row = measure(P, ops, body, repeats=repeats)
+                row.update({"impl": name, "size": S, "threads": P})
+                results.append(row)
+                print(f"[pq] S={S} P={P} {name:18s} "
+                      f"{row['ops_per_s']:10.0f} ops/s "
+                      f"(iqr {row['iqr']:.0f})")
+            for name, eng in rounds_impls.items():
+                eng.insert(0.5)
+                eng.extract_async().result()      # jit warmup
+                vals = rng.uniform(0, value_range, ops).astype(np.float32)
+
+                def body(tid, eng=eng, vals=vals):
+                    # async-session client: publish the op stream, drain
+                    # the extract futures at the end of the run
+                    r = np.random.default_rng(tid)
+                    futs = []
+                    for i in range(ops):
+                        if r.integers(2) == 0:
+                            eng.insert(float(vals[i]))
+                        else:
+                            futs.append(eng.extract_async())
+                    for f in futs:
+                        f.result()
+
+                row = measure(P, ops, body, repeats=repeats)
+                row.update({"impl": name, "size": S, "threads": P,
+                            "rounds_cap": rounds_cap})
+                results.append(row)
+                print(f"[pq] S={S} P={P} {name:18s} "
+                      f"{row['ops_per_s']:10.0f} ops/s "
+                      f"(iqr {row['iqr']:.0f})")
+                eng.close()
     save("bench_pq", results)
     return results
 
@@ -173,11 +227,19 @@ def main(argv=None):
                     help="force the 'PC-K{K} pallas' ablation rows on/off "
                          "(default: on only on a TPU backend — interpret "
                          "mode on CPU is orders of magnitude slower)")
+    ap.add_argument("--no-ablate-rounds", action="store_true",
+                    help="skip the 'PC-K{K} rounds' fused multi-round rows")
+    ap.add_argument("--rounds-cap", type=int, default=4,
+                    help="R cap for the fused multi-round rows")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed repeats per row (median + IQR reported)")
     a = ap.parse_args(argv)
     bench_pq(sizes=(a.size,), threads=tuple(a.threads), ops=a.ops,
              shard_counts=tuple(a.shards),
              ablate_donation=not a.no_ablate_donation,
-             ablate_pallas=a.ablate_pallas)
+             ablate_pallas=a.ablate_pallas,
+             ablate_rounds=not a.no_ablate_rounds,
+             rounds_cap=a.rounds_cap, repeats=a.repeats)
 
 
 if __name__ == "__main__":

@@ -23,25 +23,41 @@ import argparse
 
 from repro.launch.serve import run_serving
 
+from ._timing import median_iqr
 from .common import save
 
 
 def bench_serving(arch="qwen2_0_5b", session_counts=(1, 2, 4, 8),
                   requests=3, tokens=6, max_batch=8,
                   schedulers=("serial", "pc", "pc-async", "pc-nodonate"),
-                  workload="decode", read_pct=90):
+                  workload="decode", read_pct=90, repeats=5):
+    """Each cell runs ``repeats`` times after one warmup run; the row is
+    the median-``req_per_s`` sample with the IQR attached (the
+    ``benchmarks._timing`` discipline — ``run_serving`` owns its own wall
+    clock, so the median is taken over whole serving runs)."""
     results = []
     for sched in schedulers:
         for s in session_counts:
-            stats = run_serving(arch, sessions=s,
-                                requests_per_session=requests,
-                                n_tokens=tokens, max_batch=max_batch,
-                                scheduler=sched, seed=42,
-                                workload=workload, read_pct=read_pct)
+            def cell():
+                return run_serving(arch, sessions=s,
+                                   requests_per_session=requests,
+                                   n_tokens=tokens, max_batch=max_batch,
+                                   scheduler=sched, seed=42,
+                                   workload=workload, read_pct=read_pct)
+
+            cell()                                    # warmup
+            samples = sorted((cell() for _ in range(repeats)),
+                             key=lambda st: st["req_per_s"])
+            # lower-middle sample: with an even count the upper-middle
+            # would systematically report the better run as "median"
+            stats = samples[(len(samples) - 1) // 2]
+            spread = median_iqr(st["req_per_s"] for st in samples)
+            stats["iqr"] = round(spread["iqr"], 2)
             stats["sessions"] = s
             results.append(stats)
             print(f"[serving] {workload} {sched:8s} sessions={s}: "
-                  f"{stats['req_per_s']:6.2f} req/s, "
+                  f"{stats['req_per_s']:6.2f} req/s "
+                  f"(iqr {stats['iqr']}), "
                   f"{stats['device_steps']:4d} device steps, "
                   f"mean batch {stats['mean_batch']}")
     name = "bench_serving" if workload == "decode" \
@@ -58,10 +74,12 @@ def main(argv=None):
                     default="decode")
     ap.add_argument("--read-pct", type=int, default=90)
     ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed repeats per cell (median + IQR reported)")
     a = ap.parse_args(argv)
     bench_serving(session_counts=tuple(a.sessions), tokens=a.tokens,
                   workload=a.workload, read_pct=a.read_pct,
-                  requests=a.requests)
+                  requests=a.requests, repeats=a.repeats)
 
 
 if __name__ == "__main__":

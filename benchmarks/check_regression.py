@@ -1,0 +1,121 @@
+"""CI perf-smoke regression gate (ISSUE 4 satellite).
+
+Compares a fresh perf-smoke run (``experiments/bench/bench_<name>.json``,
+written by the bench module that just ran in CI) against the LAST
+trajectory entry recorded in the repo-root ``BENCH_<name>.json`` and fails
+when any parallel-combining row's median throughput dropped by more than
+``--threshold`` (default 50%).
+
+Only device-tier ``PC*`` rows gate — the host-native calibration rows
+(FC/Lock, and the graph bench's ``PC host`` tier) track the runner's
+CPU, not this repo's hot path.  Rows whose recorded baseline IQR reaches
+their median are skipped as unstable (the gate would only measure
+container noise there — this PR's own trajectory entries document such
+cells).  Rows present in only one side (a new ablation, a renamed impl)
+are reported and skipped.  ``--warn-only`` turns failures into warnings
+— CI passes it on forks, whose runners have no comparable perf history.
+
+Usage:  PYTHONPATH=src python -m benchmarks.check_regression --bench pq
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# row-identity fields per benchmark (ops_per_s is the compared value)
+KEYS = {
+    "pq": ("impl", "size", "threads"),
+    "graph": ("impl", "workload", "read_pct", "threads"),
+}
+
+
+def _gates(impl: str) -> bool:
+    """Device-tier PC rows only: 'PC host' is the graph bench's
+    host-tier calibration row, not a hot-path row."""
+    return impl.startswith("PC") and impl != "PC host"
+
+
+def _index(rows, keys):
+    """key -> (median, iqr_or_None) for every gating row."""
+    return {tuple(r.get(k) for k in keys):
+            (float(r["ops_per_s"]),
+             float(r["iqr"]) if "iqr" in r else None)
+            for r in rows if _gates(str(r.get("impl", "")))}
+
+
+def check(bench: str, threshold: float = 0.5, warn_only: bool = False,
+          fresh_path: str = None, baseline_path: str = None) -> int:
+    keys = KEYS[bench]
+    fresh_path = fresh_path or os.path.join(
+        ROOT, "experiments", "bench", f"bench_{bench}.json")
+    baseline_path = baseline_path or os.path.join(
+        ROOT, f"BENCH_{bench}.json")
+    fresh = _index(json.load(open(fresh_path)), keys)
+    traj = json.load(open(baseline_path))["trajectory"]
+    base = _index(traj[-1]["rows"], keys)
+    print(f"[perf-gate] bench_{bench}: {len(fresh)} fresh PC rows vs "
+          f"trajectory entry pr={traj[-1].get('pr')} "
+          f"({len(base)} baseline rows)")
+    failures = []
+    for key, (old, old_iqr) in sorted(base.items()):
+        got = fresh.get(key)
+        if got is None:
+            print(f"[perf-gate]   skip (no fresh row): {key}")
+            continue
+        new = got[0]
+        if old_iqr is not None and old > 0 and old_iqr >= old:
+            # baseline spread reaches the median: the cell measures
+            # container noise, not the hot path — don't gate on it
+            print(f"[perf-gate]   skip (unstable baseline, iqr "
+                  f"{old_iqr:.0f} >= median {old:.0f}): {key}")
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        flag = "REGRESSION" if ratio < (1.0 - threshold) else "ok"
+        print(f"[perf-gate]   {flag:10s} {key}: {old:.0f} -> {new:.0f} "
+              f"ops/s ({ratio:.2f}x)")
+        if flag == "REGRESSION":
+            failures.append((key, old, new))
+    for key in sorted(set(fresh) - set(base)):
+        print(f"[perf-gate]   new row (no baseline): {key}")
+    compared = len(set(fresh) & set(base))
+    if compared == 0:
+        # a silent no-op gate is worse than a failing one: this happens
+        # when the CI smoke config drifts from the recorded trajectory
+        msg = (f"no comparable rows between the fresh run and "
+               f"BENCH_{bench}.json — regenerate the trajectory entry "
+               f"with the CI smoke config")
+        if warn_only:
+            print(f"[perf-gate] WARNING (warn-only): {msg}")
+            return 0
+        print(f"[perf-gate] FAIL: {msg}")
+        return 1
+    if failures:
+        msg = (f"{len(failures)} PC row(s) regressed >"
+               f"{threshold:.0%} vs BENCH_{bench}.json")
+        if warn_only:
+            print(f"[perf-gate] WARNING (warn-only): {msg}")
+            return 0
+        print(f"[perf-gate] FAIL: {msg}")
+        return 1
+    print("[perf-gate] pass")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", choices=sorted(KEYS), required=True)
+    ap.add_argument("--threshold", type=float, default=0.5,
+                    help="fail when median drops by more than this "
+                         "fraction (default 0.5 = 50%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (forks)")
+    a = ap.parse_args(argv)
+    return check(a.bench, threshold=a.threshold, warn_only=a.warn_only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

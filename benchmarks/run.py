@@ -16,14 +16,14 @@ def main() -> None:
     print("[1/5] Fig.2 — priority queue throughput (PC vs FC vs Lock)")
     print("=" * 70)
     from .bench_pq import bench_pq
-    bench_pq(sizes=(20_000,), threads=(1, 2, 4), ops=150)
+    bench_pq(sizes=(20_000,), threads=(1, 2, 4), ops=150, repeats=2)
 
     print("=" * 70)
     print("[2/5] Fig.1 — dynamic graph throughput (PC vs Lock vs RW vs FC)")
     print("=" * 70)
     from .bench_graph import bench_graph
     bench_graph(n_vertices=300, read_pcts=(50, 100), threads=(1, 4),
-                ops=60)
+                ops=60, repeats=2)
 
     print("=" * 70)
     print("[3/5] Thm.4 — batched heap cost scaling O(c log c + log n)")
@@ -36,7 +36,7 @@ def main() -> None:
     print("[4/5] Serving — PC scheduler vs serial dispatch")
     print("=" * 70)
     from .bench_serving import bench_serving
-    bench_serving(session_counts=(1, 4), requests=2, tokens=4)
+    bench_serving(session_counts=(1, 4), requests=2, tokens=4, repeats=2)
 
     print("=" * 70)
     print("[5/5] Roofline — 3-term analysis over the dry-run artifacts")

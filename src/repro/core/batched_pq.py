@@ -495,6 +495,42 @@ apply_batch_undonated = jax.jit(_apply_batch,
 
 
 # ---------------------------------------------------------------------------
+# Device command queue: fused multi-round application (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _rounds_impl(state: HeapState, n_extracts: jax.Array,
+                 insert_rows: jax.Array, n_inserts: jax.Array,
+                 *, c_max: int, use_pallas: bool = False,
+                 ) -> Tuple[HeapState, jax.Array, jax.Array]:
+    """R combining rounds as ONE program: ``lax.scan`` over the round axis.
+
+    ``n_extracts``: (R,) int32; ``insert_rows``: (R, c_max) float32;
+    ``n_inserts``: (R,) int32 — a padded command queue of R sequential
+    combined batches.  Each scan step runs the full phase-1..4 pipeline of
+    :func:`apply_batch_impl` (the Pallas kernels compose unchanged — the
+    scan body is exactly the single-round trace), so R rounds cost one
+    dispatch instead of R.  Returns ``(state, outs (R, c_max), k_effs
+    (R,))`` with per-round extracted values ascending, +inf padded.
+    """
+
+    def body(st, rnd):
+        ne, vals, ni = rnd
+        st, out, k_eff = apply_batch_impl(st, ne, vals, ni, c_max=c_max,
+                                          use_pallas=use_pallas)
+        return st, (out, k_eff)
+
+    state, (outs, k_effs) = jax.lax.scan(
+        body, state, (n_extracts, insert_rows, n_inserts))
+    return state, outs, k_effs
+
+
+# Donated like apply_batch: the heap updates in place across all R rounds.
+apply_rounds = jax.jit(_rounds_impl, static_argnames=("c_max", "use_pallas"),
+                       donate_argnums=(0,))
+apply_rounds_undonated = jax.jit(_rounds_impl,
+                                 static_argnames=("c_max", "use_pallas"))
+
+
+# ---------------------------------------------------------------------------
 # Reference oracle (paper batch semantics, sequential numpy)
 # ---------------------------------------------------------------------------
 def apply_batch_reference(values, n_extract, insert_vals):
@@ -604,6 +640,110 @@ def apply_sliced(step, c_max: int, extracts: int, inserts) -> list:
     return apply_sliced_async(step, c_max, extracts, inserts).result()
 
 
+# ---------------------------------------------------------------------------
+# Multi-round host plumbing (DESIGN.md §12): one dispatch, per-round handles
+# ---------------------------------------------------------------------------
+class _RoundsFetch:
+    """ONE blocking transfer shared by every round of a fused dispatch.
+
+    Holds the (R, c_max) device output of an ``apply_rounds`` program (plus
+    an optional ``extra`` thunk, e.g. the shard sizes) and fetches it once,
+    at the first consuming :meth:`rows` call — so R consumed rounds cost at
+    most one host sync between them (the per-consumer budget stays ≤ 1)."""
+
+    def __init__(self, vals_dev, extra: Optional[Callable[[], object]] = None,
+                 on_fetch: Optional[Callable[[object], None]] = None):
+        self._vals = vals_dev
+        self._extra = extra
+        self._on_fetch = on_fetch
+        self._host: Optional[np.ndarray] = None
+
+    def rows(self) -> np.ndarray:
+        if self._host is None:
+            extra_dev = self._extra() if self._extra is not None else None
+            vals_h, extra_h = _host_fetch((self._vals, extra_dev))
+            if self._on_fetch is not None:
+                self._on_fetch(extra_h)
+            self._host = np.asarray(vals_h)
+            self._vals = self._extra = self._on_fetch = None
+        return self._host
+
+
+class RoundResult:
+    """Deferred host view of ONE round of a fused multi-round dispatch.
+
+    Same consumer contract as :class:`AsyncBatchResult` — ``result()``
+    returns the round's extracted values ascending, ``None``-padded for
+    empty-queue extracts — but the blocking transfer is shared across all
+    rounds of the dispatch (:class:`_RoundsFetch`): the first consumed
+    round pays the one sync, later rounds read the cached host array."""
+
+    def __init__(self, slice_ne: List[int], row_ids: List[int],
+                 shared: Optional[_RoundsFetch]):
+        self._ne = slice_ne
+        self._rows = row_ids
+        self._shared = shared
+        self._out: Optional[list] = None
+
+    def result(self) -> list:
+        if self._out is None:
+            rows = self._shared.rows() if self._shared is not None else None
+            out: list = []
+            for ne, i in zip(self._ne, self._rows):
+                vals = np.asarray(rows[i])
+                k = int(np.isfinite(vals[:ne]).sum())
+                out.extend(vals[:k].tolist())
+                out.extend([None] * (ne - k))      # empty-queue extracts
+            self._out = out
+            self._shared = None
+        return self._out
+
+
+def expand_rounds(rounds, c_max: int):
+    """Lower consumer rounds onto ≤ c_max scan rows (host-side, sync-free).
+
+    ``rounds``: sequence of ``(extracts, inserts)`` pairs, one per
+    consumer round.  Oversized rounds are sliced exactly like
+    :func:`apply_sliced_async` (ne/ni ≤ c_max per row, extracts and
+    inserts advancing together), so every row is a valid single-batch
+    application and the scan preserves round order.  Returns
+    ``(specs, layout)``: ``specs`` is the flat row list ``[(ne, buf,
+    ni)]``; ``layout[r]`` is ``(slice_ne, row_ids)`` — the extract counts
+    and row indices that reassemble round ``r``'s answer."""
+    specs: List[Tuple[int, np.ndarray, int]] = []
+    layout: List[Tuple[List[int], List[int]]] = []
+    for extracts, inserts in rounds:
+        inserts = list(inserts)
+        require_finite_keys(inserts)
+        extracts = int(extracts)
+        if extracts < 0:
+            raise ValueError("extracts must be >= 0")
+        slice_ne: List[int] = []
+        row_ids: List[int] = []
+        while extracts > 0 or inserts:
+            ne = min(extracts, c_max)
+            ni = min(len(inserts), c_max)
+            buf = np.full((c_max,), np.inf, np.float32)
+            buf[:ni] = inserts[:ni]
+            if ne:
+                slice_ne.append(ne)
+                row_ids.append(len(specs))
+            specs.append((ne, buf, ni))
+            extracts -= ne
+            inserts = inserts[ni:]
+        layout.append((slice_ne, row_ids))
+    # pad the row count to the next power of two with no-op rows: the
+    # scan program recompiles per distinct leading dim, and callers feed
+    # burst-sized queues — pow2 bucketing bounds the jit-cache variants
+    # to log2(R_max) at ≤ 2× masked body work in the worst case
+    if specs:
+        target = 1 << (len(specs) - 1).bit_length()
+        pad = np.full((c_max,), np.inf, np.float32)
+        while len(specs) < target:
+            specs.append((0, pad, 0))
+    return specs, layout
+
+
 class BatchedPriorityQueue:
     """Device-resident PQ with batch application (the §4 data structure).
 
@@ -643,6 +783,30 @@ class BatchedPriorityQueue:
     def apply(self, extracts: int, inserts) -> list:
         """Apply a combined batch; returns the extracted values (floats)."""
         return self.apply_async(extracts, inserts).result()
+
+    def apply_rounds_async(self, rounds) -> List[RoundResult]:
+        """Apply R sequential combined batches with ONE device dispatch
+        (the §12 command queue: a padded (R, c_max) request tensor executed
+        by a donated ``lax.scan``).  ``rounds``: [(extracts, inserts)] —
+        oversized rounds are sliced onto extra scan rows.  Returns one
+        :class:`RoundResult` per round; all rounds share one blocking
+        fetch, paid by the first consumed round."""
+        specs, layout = expand_rounds(rounds, self.c_max)
+        if not specs:
+            return [RoundResult(sn, ri, None) for sn, ri in layout]
+        ne_arr = jnp.asarray(np.array([s[0] for s in specs], np.int32))
+        bufs = jnp.asarray(np.stack([s[1] for s in specs]))
+        ni_arr = jnp.asarray(np.array([s[2] for s in specs], np.int32))
+        fn = apply_rounds if self.donate else apply_rounds_undonated
+        self.state, outs, _k = fn(self.state, ne_arr, bufs, ni_arr,
+                                  c_max=self.c_max,
+                                  use_pallas=self.use_pallas)
+        shared = _RoundsFetch(outs)
+        return [RoundResult(sn, ri, shared) for sn, ri in layout]
+
+    def apply_rounds(self, rounds) -> List[list]:
+        """Blocking :meth:`apply_rounds_async`: per-round answer lists."""
+        return [h.result() for h in self.apply_rounds_async(rounds)]
 
     def values(self) -> list:
         a = np.asarray(self.state.a)

@@ -20,11 +20,12 @@ via ``time.sleep(0)`` so the host tier stays live on a single core.
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass
 from enum import IntEnum
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 
 class Status(IntEnum):
@@ -187,3 +188,61 @@ class ParallelCombiner:
     def wait_while(request: Request, status: Status) -> None:
         while request.status == status:
             time.sleep(0)
+
+
+# ---------------------------------------------------------------------------
+# Elimination pre-pass (DESIGN.md §12) — host-side insert/extract matching
+# ---------------------------------------------------------------------------
+def eliminate_pq_pairs(extracts: int, inserts: List[float],
+                       min_lb: float) -> Tuple[List[float], List[float], int]:
+    """Match Insert/ExtractMin pairs that never need to touch the queue.
+
+    All requests of one combining pass are concurrent, so the combiner may
+    pick ANY linearization.  An ``insert(v)`` with ``v ≤ min_lb`` (a host
+    lower bound on the queue's current minimum, ``min_lb ≤ true min``) can
+    be linearized immediately before an ``extractMin``: the extract then
+    returns exactly ``v`` and the queue is untouched — the pair is
+    *eliminated* (Calciu et al.'s elimination rule, adapted to batch
+    combining).  Chained pairs stay valid because each pair leaves the
+    queue, and hence its minimum, unchanged.
+
+    The remaining requests keep the engine's standard batch order (all
+    surviving extracts see the pre-batch multiset, then the surviving
+    inserts enter), giving the full linearization
+    ``pair_1 … pair_e, extract^(E-e), insert^(I-e)``.
+
+    Returns ``(served, rest_inserts, rest_extracts)``: the eliminated
+    pair values ascending (one per matched extract), the surviving insert
+    values, and the surviving extract count.
+    """
+    vals = sorted(inserts)
+    e = 0
+    while e < extracts and e < len(vals) and vals[e] <= min_lb:
+        e += 1
+    return vals[:e], vals[e:], extracts - e
+
+
+def track_pq_batch(track: dict, res: List, ne: int,
+                   inserts: List[float]) -> None:
+    """Update a ``{"n_live", "min_lb"}`` mirror after one applied batch.
+
+    The single source of the bound-maintenance rule shared by the
+    combiner engines (``pc_priority_queue`` and ``AsyncRoundsPQ``) — the
+    elimination precondition ``min_lb ≤ true min`` lives or dies here.
+    After a batch: remaining = (old \\ extracted) ∪ inserts, so its min
+    is ≥ min(max(extracted), min(inserts)) — and just min(inserts) when
+    an extract came back ``None`` (the old multiset was exhausted).
+    ``inserts`` MUST already be device-quantized keys (``host_key``):
+    the device stores f32 — feeding a raw f64 here can place ``min_lb``
+    above the stored key and break the elimination precondition.
+    """
+    k = sum(1 for v in res if v is not None)
+    track["n_live"] += len(inserts) - k
+    ins_min = min(inserts) if inserts else math.inf
+    if k < ne:                           # queue emptied mid-batch
+        track["min_lb"] = ins_min
+    elif ne > 0:
+        track["min_lb"] = min(max(v for v in res if v is not None),
+                              ins_min)
+    else:
+        track["min_lb"] = min(track["min_lb"], ins_min)

@@ -44,7 +44,8 @@ time (the read-optimized combiner provides exactly that serialization).
 """
 from __future__ import annotations
 
-from typing import Any, List, NamedTuple, Optional, Sequence, Set, Tuple
+from typing import (Any, Dict, List, NamedTuple, Optional, Sequence, Set,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -198,6 +199,26 @@ def _read_impl(state: GraphState, uv: jax.Array, *, n: int, e_bound: int,
 # the copy-per-pass ablation (EXPERIMENTS §Ablations).
 update_pass = jax.jit(_update_impl, donate_argnums=(0,))
 update_pass_undonated = jax.jit(_update_impl)
+
+
+def _update_rounds_impl(state: GraphState, buv: jax.Array, is_ins: jax.Array,
+                        nb: jax.Array) -> Tuple[GraphState, jax.Array]:
+    """R sequential ≤ c_max update slices as ONE ``lax.scan`` program
+    (DESIGN.md §12): ``buv`` (R, 2, c), ``is_ins`` (R, c), ``nb`` (R,).
+    Each scan step is the full fused mixed-op pass, so a batch spanning R
+    slices costs one dispatch instead of R.  Returns ``(state, oks
+    (R, c))``."""
+
+    def body(st, rnd):
+        st, ok = _update_impl(st, rnd[0], rnd[1], rnd[2])
+        return st, ok
+
+    state, oks = jax.lax.scan(body, state, (buv, is_ins, nb))
+    return state, oks
+
+
+update_rounds = jax.jit(_update_rounds_impl, donate_argnums=(0,))
+update_rounds_undonated = jax.jit(_update_rounds_impl)
 _READ_STATIC = ("n", "e_bound", "n_shards", "use_pallas")
 read_pass = jax.jit(_read_impl, static_argnames=_READ_STATIC,
                     donate_argnums=(0,))
@@ -222,30 +243,58 @@ class AsyncUpdateResult:
     its single blocking transfer (``update masks ride the read fetch``,
     the graph twin of the PQ's one-sync contract).  Resolution also
     re-tightens the owner's live-edge-count mirror to the exact value.
+
+    Elimination bookkeeping (DESIGN.md §12): the dispatch carries ONE lane
+    per distinct edge class (the class's LAST op); every other op's result
+    is reconstructed host-side at resolve time from the device lane's
+    answer via the arrival-order chain rule.  The lane's answer encodes
+    buffer presence (``present = ok XOR is_ins``), the chain walks the
+    class's ops in arrival order (an op's outcome fully determines
+    presence for the next), and self-loop lanes were answered ``False``
+    at dispatch without any device work.
     """
 
     def __init__(self, owner: "DeviceGraph", masks: List[jax.Array],
-                 arr: np.ndarray, is_ins: np.ndarray):
+                 n_ops: int, classes: List[List[Tuple[int, bool]]],
+                 lane_counts: List[int], c_max: int):
         self._owner: Optional["DeviceGraph"] = owner
         self.masks = masks
-        self._arr = arr
-        self._is_ins = is_ins
+        self._n_ops = n_ops
+        self._classes = classes          # per device lane, dispatch order
+        self._lane_counts = lane_counts  # live lanes per dispatched row
+        self._c_max = c_max
         self._out: Optional[List[bool]] = None
 
     def _resolve(self, masks_h) -> None:
-        """Apply fetched masks to the owner's mirrors (owner-ordered)."""
-        ne = self._arr.shape[1]
-        ok = (np.concatenate([np.asarray(m) for m in masks_h])[:ne]
-              if masks_h else np.zeros((0,), bool))
+        """Apply fetched masks to the owner's mirrors (owner-ordered) and
+        chain-reconstruct every op's arrival-order result."""
+        if masks_h:
+            rows = np.concatenate(
+                [np.asarray(m).reshape(-1, self._c_max) for m in masks_h],
+                axis=0)
+            ok_dev = np.concatenate(
+                [rows[r, :nb] for r, nb in enumerate(self._lane_counts)]) \
+                if self._lane_counts else np.zeros((0,), bool)
+        else:
+            ok_dev = np.zeros((0,), bool)
+        out = np.zeros((self._n_ops,), bool)    # self-loops stay False
+        adds = removals = lane_inserts = 0
+        for lane, ops in enumerate(self._classes):
+            is_ins_last = ops[-1][1]
+            okl = bool(ok_dev[lane])
+            adds += okl and is_ins_last
+            removals += okl and not is_ins_last
+            lane_inserts += is_ins_last
+            # lane answer -> buffer presence before the class's first op
+            present = (not okl) if is_ins_last else okl
+            for idx, ins in ops:
+                out[idx] = (not present) if ins else present
+                present = ins            # outcome determines presence
         owner = self._owner
         if owner is not None:
-            # exact net count change: ok inserts minus ok deletes equals
-            # adds minus removals (transient pairs cancel: their ok
-            # insert is matched by an ok delete in the same batch)
-            owner._n_edges += int(ok[self._is_ins].sum())
-            owner._n_edges -= int(ok[~self._is_ins].sum())
-            owner._outstanding_ins -= int(self._is_ins.sum())
-        self._out = ok.tolist()
+            owner._n_edges += adds - removals
+            owner._outstanding_ins -= lane_inserts
+        self._out = out.tolist()
         self._owner = None
         self.masks = []
 
@@ -319,6 +368,9 @@ class DeviceGraph:
         # bound adds inserts whose result masks are still on device
         self._n_edges = 0
         self._outstanding_ins = 0
+        # elimination instrumentation (DESIGN.md §12): ops answered by the
+        # host chain rule instead of a device lane
+        self.eliminated_ops = 0
         self._unresolved: List[AsyncUpdateResult] = []
         # True iff an update pass was dispatched since the last fused
         # read — False means the device labels are known-current and a
@@ -356,45 +408,83 @@ class DeviceGraph:
 
     def update_batch_async(self, methods: Sequence[str],
                            inputs: Sequence[Any]) -> AsyncUpdateResult:
-        """Apply a combined MIXED update batch — one fused device pass per
-        ≤ c_max slice, arrival order preserved (in-pass chain resolution,
-        see ``_update_impl``).  NO blocking transfer: the result masks
-        stay on device and ride the next read's fetch."""
+        """Apply a combined MIXED update batch, arrival order preserved.
+
+        Elimination pre-pass (DESIGN.md §12): the host nets the batch down
+        to ONE op per distinct edge class — the class's LAST op, which
+        alone decides the buffer's net effect — and answers every other op
+        at resolve time via the arrival-order chain rule (self-loops never
+        dispatch at all).  The surviving lanes go to the device as ONE
+        fused pass when they fit a single ≤ c_max slice, or ONE
+        ``update_rounds`` scan program over all R slices otherwise — a
+        duplicate-heavy contended batch costs one short dispatch either
+        way.  NO blocking transfer: the result masks stay on device and
+        ride the next read's fetch."""
         for m in methods:
             if m not in ("insert", "delete"):
                 raise ValueError(f"unknown update method {m!r}")
         arr = self._edge_array(list(inputs))
-        is_ins = np.asarray([m == "insert" for m in methods], bool)
-        fn = update_pass if self.donate else update_pass_undonated
-        masks = []
-        ne = arr.shape[1]
-        if ne == 0:
+        n_ops = arr.shape[1]
+        if n_ops == 0:
             # nothing dispatched: the labels stay known-current (keep the
             # lean read path) and the handle resolves trivially
-            handle = AsyncUpdateResult(self, [], arr, is_ins)
+            handle = AsyncUpdateResult(self, [], 0, [], [], self.c_max)
             handle._out = []
             return handle
+        # -- elimination pre-pass: group ops by normalized edge class
+        by_edge: Dict[Tuple[int, int], List[Tuple[int, bool]]] = {}
+        for i in range(n_ops):
+            u, v = int(arr[0, i]), int(arr[1, i])
+            if u == v:
+                continue                 # self-loop: always False, no lane
+            by_edge.setdefault((min(u, v), max(u, v)), []).append(
+                (i, methods[i] == "insert"))
+        classes = list(by_edge.values())   # first-touch (arrival) order
+        d = len(classes)
+        self.eliminated_ops += n_ops - d
+        if d == 0:                         # all self-loops: pure host
+            handle = AsyncUpdateResult(self, [], n_ops, [], [], self.c_max)
+            handle._resolve([])
+            return handle
+        lane_ins = sum(ops[-1][1] for ops in classes)
         # guard the WHOLE batch before dispatching any slice: a mid-loop
         # refusal would leave already-applied slices in the buffer with
         # the host mirrors (and _maybe_stale) never updated
-        if self._live_bound() + int(is_ins.sum()) > self.capacity:
+        if self._live_bound() + lane_ins > self.capacity:
             raise ValueError(
                 f"edge capacity {self.capacity} exceeded: "
                 f"≤{self._live_bound()} live edges "
-                f"+ {int(is_ins.sum())} inserts")
-        for i in range(0, ne, self.c_max):
-            nb = min(self.c_max, ne - i)
-            n_ins = int(is_ins[i : i + nb].sum())
-            buv = np.zeros((2, self.c_max), np.int32)
-            buv[:, :nb] = arr[:, i : i + nb]
-            sel = np.zeros((self.c_max,), bool)
-            sel[:nb] = is_ins[i : i + nb]
-            self.state, ok = fn(self.state, jnp.asarray(buv),
-                                jnp.asarray(sel), jnp.int32(nb))
-            masks.append(ok)
-            self._outstanding_ins += n_ins
+                f"+ {lane_ins} distinct-edge inserts")
+        # pow2-pad the round count (no-op rows, nb=0): the scan program
+        # recompiles per distinct leading dim and batch sizes are
+        # workload-driven — bucketing bounds the jit-cache variants
+        n_live_rounds = -(-d // self.c_max)
+        n_rounds = 1 << (n_live_rounds - 1).bit_length()
+        buv = np.zeros((n_rounds, 2, self.c_max), np.int32)
+        sel = np.zeros((n_rounds, self.c_max), bool)
+        lane_counts: List[int] = []
+        for r in range(n_rounds):
+            chunk = classes[r * self.c_max : (r + 1) * self.c_max]
+            for j, ops in enumerate(chunk):
+                i_last = ops[-1][0]
+                buv[r, :, j] = arr[:, i_last]
+                sel[r, j] = ops[-1][1]
+            lane_counts.append(len(chunk))
+        if n_rounds == 1:
+            fn = update_pass if self.donate else update_pass_undonated
+            self.state, ok = fn(self.state, jnp.asarray(buv[0]),
+                                jnp.asarray(sel[0]), jnp.int32(d))
+            masks = [ok]
+        else:
+            fn = update_rounds if self.donate else update_rounds_undonated
+            nb = np.asarray(lane_counts, np.int32)
+            self.state, oks = fn(self.state, jnp.asarray(buv),
+                                 jnp.asarray(sel), jnp.asarray(nb))
+            masks = [oks]
+        self._outstanding_ins += lane_ins
         self._maybe_stale = True
-        handle = AsyncUpdateResult(self, masks, arr, is_ins)
+        handle = AsyncUpdateResult(self, masks, n_ops, classes,
+                                   lane_counts, self.c_max)
         self._unresolved.append(handle)
         return handle
 

@@ -6,6 +6,15 @@ program (`BatchedPriorityQueue.apply`) — phases 1-4 of the paper run inside
 it, with device lanes playing the clients.  CLIENT_CODE is empty on the
 host: the lanes already did the sift/insert work.
 
+Elimination pre-pass (DESIGN.md §12): before dispatching, the combiner
+matches Insert/ExtractMin pairs whose insert value provably undercuts the
+queue's current minimum (`eliminate_pq_pairs`) and answers them host-side —
+matched pairs never touch the device.  The bound it needs (`min_lb ≤ true
+queue min`) is tracked for free from the combiner's own op stream: the
+combiner is the queue's only writer, extraction answers are ascending, and
+conservation gives the live count (an empty queue makes EVERY pair
+eliminable — the high-hit-rate regime).
+
 The paper's `|A| > size/4 → classic combining` rule was a performance
 heuristic for the 64-thread host; our batched implementation is correct for
 any batch/size ratio (fuzzed including batch > size), so the fallback is
@@ -13,19 +22,48 @@ kept only as an optional policy knob.
 """
 from __future__ import annotations
 
+import math
 from typing import List, Union
 
+import numpy as np
+
 from .batched_pq import BatchedPriorityQueue
-from .combining import ParallelCombiner, Request, Status
+from .combining import (ParallelCombiner, Request, Status,
+                        eliminate_pq_pairs, track_pq_batch)
 from .seq_pq import SequentialHeap
-from .sharded_pq import ShardedBatchedPQ
+from .sharded_pq import ShardedBatchedPQ, host_key
 
 AnyBatchedPQ = Union[BatchedPriorityQueue, ShardedBatchedPQ]
 
 
+def _quantize_key(x: float) -> float:
+    """The exact f32 key the device heap will store, keeping the PQ
+    engines' finite-keys contract (±inf raises here where the
+    scheduler's deadline path clamps — the quantization core itself is
+    ``host_key``, one source of the f32 + flush-to-zero rule).
+
+    Load-bearing for elimination: the min tracking must see the STORED
+    key — a raw f64 fed to the bound could sit above its f32 image and
+    let an insert eliminate against a stale-high minimum."""
+    k = float(np.float32(x))
+    if math.isnan(k) or math.isinf(k):
+        raise ValueError(
+            "keys must be finite f32: ±inf is the heap's empty-slot "
+            "sentinel and NaN breaks the frontier search")
+    return host_key(k)
+
+
 def pc_priority_queue(pq: AnyBatchedPQ, *,
                       sequential_fallback: bool = False,
+                      eliminate: bool = True,
                       **kw) -> ParallelCombiner:
+    # host min-tracking state for the elimination pre-pass: n_live by
+    # conservation, min_lb from the ascending extraction answers.  One
+    # device sync here, at engine construction, never on the hot path.
+    n_live = len(pq)
+    track = {"n_live": n_live,
+             "min_lb": math.inf if n_live == 0 else -math.inf}
+
     def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
         extracts = [r for r in requests if r.method == "extract_min"]
         inserts = [r for r in requests if r.method == "insert"]
@@ -34,13 +72,34 @@ def pc_priority_queue(pq: AnyBatchedPQ, *,
             for r in requests:
                 if r.method == "insert":
                     pq.apply(0, [r.input])
+                    track["n_live"] += 1
                 else:
                     out = pq.apply(1, [])
                     r.res = out[0]
+                    track["n_live"] -= out[0] is not None
                 r.status = Status.FINISHED
+            track["min_lb"] = (math.inf if track["n_live"] == 0
+                               else -math.inf)
             return
-        res = pq.apply(len(extracts), [r.input for r in inserts])
-        for r, v in zip(extracts, res):
+        # elimination pre-pass (DESIGN.md §12): matched pairs are served
+        # host-side; the device only sees the survivors.  Keys quantize
+        # to their stored f32 image first (see _quantize_key).
+        ins_vals = [_quantize_key(r.input) for r in inserts]
+        if eliminate:
+            served, rest_ins, rest_ne = eliminate_pq_pairs(
+                len(extracts), ins_vals, track["min_lb"])
+        else:
+            served, rest_ins, rest_ne = [], sorted(ins_vals), len(extracts)
+        engine.eliminated += len(served)
+        for r, v in zip(extracts, served):
+            r.res = v
+            r.status = Status.FINISHED
+        if rest_ne or rest_ins:
+            res = pq.apply(rest_ne, rest_ins)
+            track_pq_batch(track, res, rest_ne, rest_ins)
+        else:
+            res = []    # fully eliminated: zero device work, not even a sync
+        for r, v in zip(extracts[len(served):], res):
             r.res = v
             r.status = Status.FINISHED
         for r in inserts:
@@ -50,7 +109,168 @@ def pc_priority_queue(pq: AnyBatchedPQ, *,
     def client_code(engine: ParallelCombiner, r: Request) -> None:
         return
 
-    return ParallelCombiner(combiner_code, client_code, **kw)
+    engine = ParallelCombiner(combiner_code, client_code, **kw)
+    engine.eliminated = 0        # elimination hit counter (instrumentation)
+    return engine
+
+
+class AsyncRoundsPQ:
+    """Async parallel-combining PQ with fused multi-round dispatch
+    (DESIGN.md §12) — the command-queue counterpart of the spin-engine
+    :func:`pc_priority_queue`.
+
+    Clients publish ops non-blockingly: :meth:`insert` is fire-and-forget,
+    :meth:`extract_async` returns a ``concurrent.futures`` future.  A
+    dedicated combiner thread drains the publication buffer, runs the
+    elimination pre-pass (matched Insert/ExtractMin pairs are answered
+    host-side), packs the survivors into up to ``rounds_cap`` sequential
+    rounds of ≤ c_max ops each — R adaptive from the backlog — and applies
+    them with ONE donated ``apply_rounds`` program + one blocking fetch,
+    resolving the extract futures round by round.  Linearization: ops in
+    one round are concurrent (their combining pass), rounds are sequential.
+
+    Instrumentation: ``dispatches`` (fused device programs), ``rounds``
+    (combining rounds executed), ``eliminated`` (pairs served host-side).
+    """
+
+    def __init__(self, pq: AnyBatchedPQ, *, rounds_cap: int = 4,
+                 eliminate: bool = True):
+        import threading
+        from collections import deque
+
+        self.pq = pq
+        self.rounds_cap = max(1, int(rounds_cap))
+        self.eliminate = bool(eliminate)
+        n_live = len(pq)
+        self._track = {"n_live": n_live,
+                       "min_lb": math.inf if n_live == 0 else -math.inf}
+        self._ops = deque()            # (is_insert, value_or_future)
+        self._cond = threading.Condition()
+        self._closed = False
+        self.dispatches = 0
+        self.rounds = 0
+        self.eliminated = 0
+        self.last_window_pairs: list = []
+        self._thread = threading.Thread(target=self._loop,
+                                        name="pc-rounds", daemon=True)
+        self._thread.start()
+
+    # -- client side --------------------------------------------------------
+    def insert(self, value: float) -> None:
+        """Publish an Insert (non-blocking, nothing to wait for).  The
+        key quantizes to its stored f32 image at this boundary so the
+        elimination bound only ever sees device-exact keys."""
+        value = _quantize_key(value)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("combiner is closed")
+            self._ops.append((True, value))
+            self._cond.notify()
+
+    def extract_async(self):
+        """Publish an ExtractMin; returns a future for its answer."""
+        from concurrent.futures import Future
+
+        f: "Future" = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("combiner is closed")
+            self._ops.append((False, f))
+            self._cond.notify()
+        return f
+
+    def close(self) -> None:
+        """Drain every published op, then stop the combiner thread."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "AsyncRoundsPQ":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- combiner side ------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._closed and not self._ops:
+                    self._cond.wait()
+                if self._closed and not self._ops:
+                    return
+                ops = self._ops
+                budget = self.rounds_cap
+                window = []
+                ne = ni = 0
+                rounds_ops = []
+                while ops and len(rounds_ops) < budget:
+                    is_ins, payload = ops[0]
+                    if (ni + is_ins > self.pq.c_max
+                            or ne + (not is_ins) > self.pq.c_max):
+                        rounds_ops.append(window)
+                        window, ne, ni = [], 0, 0
+                        continue
+                    ops.popleft()
+                    window.append((is_ins, payload))
+                    ni += is_ins
+                    ne += not is_ins
+                if window and len(rounds_ops) < budget:
+                    rounds_ops.append(window)
+            try:
+                self._apply_rounds(rounds_ops)
+            except BaseException as exc:
+                for w in rounds_ops:
+                    for is_ins, payload in w:
+                        if not is_ins and not payload.done():
+                            payload.set_exception(exc)
+
+    def _apply_rounds(self, rounds_ops) -> None:
+        """Eliminate, pack, ONE fused dispatch, resolve per round."""
+        track = self._track
+        rounds = []
+        futures = []                   # per round: surviving extract futs
+        served = []                    # per round: (future, value) pairs
+        min_lb = track["min_lb"]
+        for window in rounds_ops:
+            ext = [p for ins, p in window if not ins]
+            vals = [p for ins, p in window if ins]
+            if self.eliminate:
+                pair_vals, rest_ins, rest_ne = eliminate_pq_pairs(
+                    len(ext), vals, min_lb)
+            else:
+                pair_vals, rest_ins, rest_ne = [], sorted(vals), len(ext)
+            served.append(list(zip(ext, pair_vals)))
+            futures.append(ext[len(pair_vals):])
+            rounds.append((rest_ne, rest_ins))
+            # pessimistic in-flight bound: inserts can only lower the min,
+            # extraction only raises it — keeping the old lb stays valid
+            if rest_ins:
+                min_lb = min(min_lb, rest_ins[0])
+        self.eliminated += sum(len(s) for s in served)
+        # per-window pair counts of the last call (test instrumentation:
+        # lets the linearizability replay know the claimed matching)
+        self.last_window_pairs = [len(s) for s in served]
+        if any(ne or ins for ne, ins in rounds):
+            handles = self.pq.apply_rounds_async(rounds)
+            self.dispatches += 1
+        else:
+            handles = [None] * len(rounds)
+        self.rounds += len(rounds)
+        for (ne, ins), handle, fs, sv in zip(rounds, handles, futures,
+                                             served):
+            for f, v in sv:
+                if not f.done():
+                    f.set_result(v)
+            res = handle.result() if handle is not None and ne else []
+            # exact tracking per consumed round (the shared rule)
+            track_pq_batch(track, res, ne, ins)
+            for f, v in zip(fs, res):
+                if not f.done():
+                    f.set_result(v)
 
 
 def pc_sharded_priority_queue(capacity: int, c_max: int,

@@ -56,6 +56,8 @@ from .batched_pq import (
     INF,
     _TINY,
     AsyncBatchResult,
+    RoundResult,
+    _RoundsFetch,
     _chunk_len,
     _flush_subnormals,
     _k_smallest,
@@ -63,6 +65,7 @@ from .batched_pq import (
     _phases12,
     _sift_wavefront,
     apply_sliced_async,
+    expand_rounds,
     require_finite_keys,
 )
 
@@ -273,6 +276,42 @@ sharded_apply_batch_undonated = jax.jit(_sharded_apply_batch,
 
 
 # ---------------------------------------------------------------------------
+# Device command queue (DESIGN.md §12): R rounds, ONE dispatch
+# ---------------------------------------------------------------------------
+def _sharded_rounds_impl(
+    state: ShardedHeapState, n_extracts: jax.Array,
+    insert_rows: jax.Array, n_inserts: jax.Array,
+    *, c_max: int, n_shards: int,
+    key_range: Optional[Tuple[float, float]] = None,
+    use_pallas: bool = False,
+) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
+    """R sequential K-shard combined batches as ONE ``lax.scan`` program.
+
+    Each scan step is the full :func:`_sharded_apply_batch` trace (route →
+    frontier merge → phases 1–4 on all K shards → answer merge); the
+    shard-grid Pallas kernels compose under the scan unchanged.  Returns
+    ``(state, outs (R, c_max), k_effs (R,))``.
+    """
+
+    def body(st, rnd):
+        ne, vals, ni = rnd
+        st, out, k_eff = _sharded_apply_batch(
+            st, ne, vals, ni, c_max=c_max, n_shards=n_shards,
+            key_range=key_range, use_pallas=use_pallas)
+        return st, (out, k_eff)
+
+    state, (outs, k_effs) = jax.lax.scan(
+        body, state, (n_extracts, insert_rows, n_inserts))
+    return state, outs, k_effs
+
+
+sharded_apply_rounds = jax.jit(_sharded_rounds_impl, static_argnames=_STATIC,
+                               donate_argnums=(0,))
+sharded_apply_rounds_undonated = jax.jit(_sharded_rounds_impl,
+                                         static_argnames=_STATIC)
+
+
+# ---------------------------------------------------------------------------
 # Host-facing wrapper (same interface as BatchedPriorityQueue)
 # ---------------------------------------------------------------------------
 class ShardedBatchedPQ:
@@ -402,6 +441,44 @@ class ShardedBatchedPQ:
     def apply(self, extracts: int, inserts) -> list:
         """Apply a combined batch; returns extracted values (None-padded)."""
         return self.apply_async(extracts, inserts).result()
+
+    def apply_rounds_async(self, rounds) -> list:
+        """Apply R sequential combined batches with ONE K-shard device
+        dispatch (DESIGN.md §12): the rounds are lowered onto ≤ c_max scan
+        rows, the sync-free occupancy guard runs per row on the host (in
+        scan order — the mirror sees exactly the sequence the device will
+        execute), and the donated ``lax.scan`` program applies them all.
+        Returns one ``RoundResult`` per round; every round shares the one
+        blocking fetch, which also re-tightens the occupancy mirror."""
+        specs, layout = expand_rounds(rounds, self.c_max)
+        if not specs:
+            return [RoundResult(sn, ri, None) for sn, ri in layout]
+        # guard the WHOLE command queue before dispatching anything: a
+        # refusal must leave the mirror exactly as it was (atomic — no
+        # row of a refused queue ever reaches the device)
+        saved = (self._sizes_ub.copy(), self._total)
+        try:
+            for ne, buf, ni in specs:
+                self._guard_and_account(ne, buf, ni)
+        except ValueError:
+            self._sizes_ub, self._total = saved
+            raise
+        ne_arr = jnp.asarray(np.array([s[0] for s in specs], np.int32))
+        bufs = jnp.asarray(np.stack([s[1] for s in specs]))
+        ni_arr = jnp.asarray(np.array([s[2] for s in specs], np.int32))
+        fn = sharded_apply_rounds if self.donate \
+            else sharded_apply_rounds_undonated
+        self.state, outs, _k = fn(
+            self.state, ne_arr, bufs, ni_arr, c_max=self.c_max,
+            n_shards=self.n_shards, key_range=self.key_range,
+            use_pallas=self.use_pallas)
+        shared = _RoundsFetch(outs, extra=lambda: self.state.size + 0,
+                              on_fetch=self._refresh_sizes)
+        return [RoundResult(sn, ri, shared) for sn, ri in layout]
+
+    def apply_rounds(self, rounds) -> list:
+        """Blocking :meth:`apply_rounds_async`: per-round answer lists."""
+        return [h.result() for h in self.apply_rounds_async(rounds)]
 
     def values(self) -> list:
         a = np.asarray(self.state.a)

@@ -101,10 +101,11 @@ class GraphExecutor:
         out: List[Any] = [None] * len(reqs)
         handle = None
         if upd:
-            # fused mixed-op passes; result masks ride the read fetch
+            # ONE fused mixed-op program (update_rounds scans the ≤ c_max
+            # slices, DESIGN.md §12); result masks ride the read fetch
             handle = self.graph.update_batch_async(
                 [methods[i] for i in upd], [reqs[i]["edge"] for i in upd])
-            self.device_steps += -(-len(upd) // self.graph.c_max)
+            self.device_steps += 1
         if reads:
             res = self.graph.read_batch(
                 ["connected"] * len(reads),
@@ -124,7 +125,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 scheduler: str = "pc", seed: int = 0,
                 workload: str = "decode", read_pct: int = 90,
                 n_vertices: int = 512,
-                graph_use_pallas: bool = False) -> Dict[str, Any]:
+                graph_use_pallas: bool = False,
+                rounds_cap: int = 4) -> Dict[str, Any]:
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
     ``scheduler``: "serial" (one dispatch per request), "pc" (async
@@ -184,7 +186,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     if scheduler in ("pc", "pc-async", "pc-nodonate", "pc-pallas"):
         sch = PCScheduler(ex, max_batch=max_batch, use_pq=True,
                           pq_donate=scheduler != "pc-nodonate",
-                          pq_use_pallas=scheduler == "pc-pallas")
+                          pq_use_pallas=scheduler == "pc-pallas",
+                          rounds_cap=rounds_cap)
     elif scheduler == "serial":
         sch = SerialScheduler(ex)
     else:
@@ -244,12 +247,16 @@ def main():
     ap.add_argument("--workload", choices=["decode", "graph"],
                     default="decode")
     ap.add_argument("--read-pct", type=int, default=90)
+    ap.add_argument("--rounds-cap", type=int, default=4,
+                    help="cap R on the scheduler's adaptive multi-round "
+                         "fused PQ dispatch (DESIGN.md §12)")
     args = ap.parse_args()
     stats = run_serving(args.arch, sessions=args.sessions,
                         requests_per_session=args.requests,
                         n_tokens=args.tokens, max_batch=args.max_batch,
                         scheduler=args.scheduler, workload=args.workload,
-                        read_pct=args.read_pct)
+                        read_pct=args.read_pct,
+                        rounds_cap=args.rounds_cap)
     print("[serve]", stats)
 
 

@@ -32,7 +32,17 @@ production async engine:
   requests simply *stay* in the device-resident PQ across passes (the
   previous revision cleared and re-inserted every pending key each pass —
   ``O(pending)`` device work per pass; now each key is inserted once and
-  extracted once).
+  extracted once);
+* an **elimination pre-pass** (DESIGN.md §12) serves new requests that
+  provably undercut every resident key straight from the host — the
+  publish (insert) and the pick (extractMin) annihilate before touching
+  the device, so a drained queue costs ZERO PQ device programs;
+* **adaptive round batching** (DESIGN.md §12): when the backlog exceeds
+  one device batch, the combiner asks the PQ for R = ⌈backlog/max_batch⌉
+  (capped at ``rounds_cap``) extraction rounds in ONE fused
+  ``apply_rounds`` dispatch — publish round + R extract rounds all run
+  inside a single donated ``lax.scan`` program, and the R chosen batches
+  are handed to the device loop back-to-back.
 
 ``SerialScheduler`` is the fine-grained baseline: every request dispatches
 its own device program under a plain mutex (the "single global lock, no
@@ -40,6 +50,7 @@ combining" analogue) — the benchmark compares the two (EXPERIMENTS §Paper).
 """
 from __future__ import annotations
 
+import heapq
 import queue
 import threading
 import time
@@ -94,17 +105,24 @@ class PCScheduler:
         shard-grid Pallas kernels (DESIGN.md §10).
       pq_donate: zero-copy (donated) PQ dispatch (default); False is the
         copy-per-pass ablation twin (EXPERIMENTS §Ablations).
+      rounds_cap: cap R on the adaptive multi-round fused dispatch
+        (DESIGN.md §12) — one ordering pass may choose up to
+        ``rounds_cap · max_batch`` requests (eliminated + extracted) and
+        hand them off as up to ``rounds_cap`` device batches; it also
+        bounds the priority-inversion window (requests arriving while the
+        chosen batches drain cannot preempt them).
     """
 
     def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]],
                  max_batch: int = 16, use_pq: bool = True,
                  pq_capacity: int = 1 << 16, n_shards: int = 4,
                  pipeline: bool = True, pq_use_pallas: bool = False,
-                 pq_donate: bool = True):
+                 pq_donate: bool = True, rounds_cap: int = 4):
         self.step_fn = step_fn
         self.max_batch = max_batch
         self.use_pq = use_pq
         self.pipeline = pipeline
+        self.rounds_cap = max(1, int(rounds_cap))
         if use_pq:
             self._pq_ctor = dict(capacity=pq_capacity,
                                  c_max=min(max_batch, 64),
@@ -116,6 +134,7 @@ class PCScheduler:
             # device PQ exactly once and stays there until extracted
             self._table: Dict[float, Deque[_Entry]] = {}
             self._queued = 0           # keys currently resident in the PQ
+            self._resident: List[float] = []   # lazy min-heap of PQ keys
         self._backlog: Deque[_Entry] = deque()   # FIFO-mode leftovers
         self._pending: Deque[_Entry] = deque()   # publication buffer
         self._cond = threading.Condition()
@@ -123,6 +142,8 @@ class PCScheduler:
         # instrumentation
         self.batches: List[int] = []
         self.passes = 0
+        self.eliminated = 0            # requests served without PQ work
+        self.pq_dispatches = 0         # fused PQ programs dispatched
 
         self._handoff: "queue.Queue[Any]" = queue.Queue(maxsize=1)
         self._combiner = threading.Thread(
@@ -190,21 +211,20 @@ class PCScheduler:
                 new = list(self._pending)
                 self._pending.clear()
             try:
-                chosen = self._order(new)
+                chosen_rounds = self._order(new)
             except BaseException as exc:
                 # ordering failure must not kill the combiner silently:
                 # fail every affected future (ordering state may be
                 # inconsistent, so flush leftovers too) and keep serving
                 self._abort_pending(new, exc)
                 continue
-            if not chosen:
-                continue
-            self.passes += 1
-            self.batches.append(len(chosen))
-            if self.pipeline:
-                self._handoff.put(chosen)   # blocks at pipeline depth 1
-            else:
-                self._run_batch(chosen)
+            for chosen in chosen_rounds:
+                self.passes += 1
+                self.batches.append(len(chosen))
+                if self.pipeline:
+                    self._handoff.put(chosen)  # blocks at pipeline depth 1
+                else:
+                    self._run_batch(chosen)
 
     def _abort_pending(self, new: List[_Entry], exc: BaseException) -> None:
         doomed = list(new) + list(self._backlog)
@@ -214,6 +234,7 @@ class PCScheduler:
                 doomed.extend(bucket)
             self._table.clear()
             self._queued = 0
+            self._resident = []
             # the device PQ may hold keys for the doomed requests (and be
             # mid-batch inconsistent) — rebuild it from scratch
             self._pq = ShardedBatchedPQ(**self._pq_ctor)
@@ -221,52 +242,96 @@ class PCScheduler:
             if not ent.future.done():
                 ent.future.set_exception(exc)
 
-    def _order(self, new: List[_Entry]) -> List[_Entry]:
-        """Pick ≤ max_batch most-urgent requests; leftovers stay queued."""
+    def _peek_resident(self) -> Optional[float]:
+        """Smallest key still resident in the device PQ (lazy min-heap:
+        keys whose table bucket drained are popped on the way)."""
+        h = self._resident
+        while h and h[0] not in self._table:
+            heapq.heappop(h)
+        return h[0] if h else None
+
+    def _order(self, new: List[_Entry]) -> List[List[_Entry]]:
+        """One ordering pass: up to ``rounds_cap`` most-urgent device
+        batches (each ≤ max_batch), leftovers stay queued.
+
+        Elimination pre-pass + fused rounds (DESIGN.md §12): new keys that
+        undercut every resident key are chosen straight from the host —
+        their insert and their extract annihilate, zero PQ device work
+        (with nothing resident that is EVERY new request, the drained-
+        queue steady state).  Whatever survives goes to the device as ONE
+        ``apply_rounds`` dispatch: a publish round for the surviving new
+        keys plus ⌈want/max_batch⌉ extraction rounds, all inside a single
+        donated scan program with one blocking fetch."""
         if not self.use_pq:
             self._backlog.extend(new)
             n = min(self.max_batch, len(self._backlog))
-            return [self._backlog.popleft() for _ in range(n)]
-        if self._queued == 0 and len(new) <= 1:
-            # nothing resident and ≤1 new: ordering is a no-op, skip the
-            # two PQ device programs on the low-concurrency hot path
-            return list(new)
-        # publish the NEW keys only — everything already in the device PQ
-        # stays there (persistent table; no clear-and-reinsert churn).
+            return [[self._backlog.popleft() for _ in range(n)]] if n \
+                else []
+        budget = self.rounds_cap * self.max_batch
         # host_key applies the device's full key quantization (f32 +
         # flush-to-zero + finite clamp) so extracted keys hit the table.
         for ent in new:
             ent.key = host_key(ent.req.deadline)
-            self._table.setdefault(ent.key, deque()).append(ent)
-        if new:
-            # insert-only pass: nothing to read back — apply_async leaves
-            # the dispatch on device with NO blocking host round-trip
-            self._pq.apply_async(0, [e.key for e in new])
-            self._queued += len(new)
-        want = min(self.max_batch, self._queued)
-        chosen: List[_Entry] = []
-        if want:
-            for k in self._pq.apply(want, []):
-                if k is None:
-                    # the device PQ is empty though bookkeeping says
-                    # otherwise — reconcile instead of livelocking, and
-                    # fail any requests whose keys were lost
-                    self._queued = 0
-                    stranded = [e for b in self._table.values() for e in b]
-                    self._table.clear()
-                    for ent in stranded:
-                        if not ent.future.done():
-                            ent.future.set_exception(RuntimeError(
-                                "deadline key lost from the device PQ"))
+        new = sorted(new, key=lambda e: e.key)
+        min_res = self._peek_resident()
+        n_elim = 0
+        while (n_elim < len(new) and n_elim < budget
+               and (min_res is None or new[n_elim].key <= min_res)):
+            n_elim += 1
+        elim, rest = new[:n_elim], new[n_elim:]
+        self.eliminated += n_elim
+        chosen: List[_Entry] = list(elim)
+        want = min(self._queued + len(rest), budget - n_elim)
+        if rest or want:
+            # publish the surviving NEW keys only — everything already in
+            # the device PQ stays there (persistent table; no re-insert
+            # churn) — and extract the `want` most urgent, all in ONE
+            # fused multi-round dispatch.
+            for ent in rest:
+                self._table.setdefault(ent.key, deque()).append(ent)
+                heapq.heappush(self._resident, ent.key)
+            self._queued += len(rest)
+            rounds: List = [(0, [e.key for e in rest])] if rest else []
+            n_ins_rounds = len(rounds)
+            left = want
+            while left > 0:
+                ne = min(left, self.max_batch)
+                rounds.append((ne, []))
+                left -= ne
+            handles = self._pq.apply_rounds_async(rounds)
+            self.pq_dispatches += 1
+            lost = False
+            for h in handles[n_ins_rounds:]:
+                for k in h.result():    # first consume pays the one fetch
+                    if k is None:
+                        # the device PQ is empty though bookkeeping says
+                        # otherwise — reconcile instead of livelocking,
+                        # and fail any requests whose keys were lost
+                        self._queued = 0
+                        self._resident = []
+                        stranded = [e for b in self._table.values()
+                                    for e in b]
+                        self._table.clear()
+                        for ent in stranded:
+                            if not ent.future.done():
+                                ent.future.set_exception(RuntimeError(
+                                    "deadline key lost from the device "
+                                    "PQ"))
+                        lost = True
+                        break
+                    self._queued -= 1
+                    bucket = self._table.get(float(k))
+                    if bucket is None:
+                        continue    # stale key flushed by an abort
+                    chosen.append(bucket.popleft())
+                    if not bucket:
+                        del self._table[float(k)]
+                if lost:
                     break
-                self._queued -= 1
-                bucket = self._table.get(float(k))
-                if bucket is None:
-                    continue    # stale key flushed by an ordering abort
-                chosen.append(bucket.popleft())
-                if not bucket:
-                    del self._table[float(k)]
-        return chosen
+        # eliminated keys undercut every resident key and both streams
+        # are ascending — the concatenation is globally urgency-ordered
+        return [chosen[i : i + self.max_batch]
+                for i in range(0, len(chosen), self.max_batch)]
 
     # -- device side ---------------------------------------------------------
     def _device_loop(self) -> None:

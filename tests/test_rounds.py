@@ -1,0 +1,213 @@
+"""Fused multi-round dispatch (DESIGN.md §12): counting-hook contracts.
+
+The command-queue acceptance criteria: R combining rounds cost exactly
+ONE device dispatch (a donated ``lax.scan`` over the round axis), and
+consuming the R per-round results costs at most one blocking fetch per
+consumed round — one total, shared by all rounds of a dispatch.  The
+scan path must also be observationally identical to R sequential
+single-batch applies, on both the vmapped-XLA and the shard-grid Pallas
+paths, and donation must hold for the rounds program exactly as for the
+single-batch program.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched_pq as bpq
+from repro.core import device_graph as dg
+from repro.core import sharded_pq as sp
+from repro.core.batched_pq import BatchedPriorityQueue
+from repro.core.sharded_pq import ShardedBatchedPQ
+
+
+def test_r_rounds_one_dispatch_one_shared_fetch(monkeypatch):
+    """R rounds ⇒ exactly 1 dispatch; all R consumed results share ONE
+    blocking fetch (≤ 1 per consumed round, paid by the first)."""
+    dispatches = []
+    orig = sp.sharded_apply_rounds
+
+    def counting_dispatch(*a, **kw):
+        dispatches.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(sp, "sharded_apply_rounds", counting_dispatch)
+    fetches = []
+    real_fetch = bpq._host_fetch
+
+    def counting_fetch(tree):
+        fetches.append(1)
+        return real_fetch(tree)
+
+    monkeypatch.setattr(bpq, "_host_fetch", counting_fetch)
+    pq = ShardedBatchedPQ(512, c_max=8, n_shards=2,
+                          values=[float(v) for v in range(40)])
+    R = 5
+    handles = pq.apply_rounds_async(
+        [(3, [1000.0 + r]) for r in range(R)])
+    assert len(handles) == R
+    assert dispatches == [1]          # R rounds ⇒ exactly ONE dispatch
+    assert fetches == []              # nothing fetched before consumption
+    first = handles[0].result()
+    assert len(first) == 3 and first == sorted(first)
+    assert len(fetches) == 1          # the first consumed round pays it
+    for h in handles[1:]:
+        assert len(h.result()) == 3
+    assert len(fetches) == 1          # later rounds ride the cached fetch
+    # the occupancy mirror re-tightened from the same fetch
+    np.testing.assert_array_equal(pq._sizes_ub,
+                                  np.asarray(pq.state.size, np.int64))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_rounds_equal_sequential_applies_sharded(use_pallas):
+    """apply_rounds ≡ R sequential apply() calls — identical answers AND
+    identical heap layout (the Pallas kernels compose under the scan
+    unchanged)."""
+    rng = np.random.default_rng(11)
+    init = rng.uniform(0, 500, 50).astype(np.float32).tolist()
+    pq_r = ShardedBatchedPQ(512, c_max=8, n_shards=2, values=init,
+                            use_pallas=use_pallas)
+    pq_s = ShardedBatchedPQ(512, c_max=8, n_shards=2, values=init,
+                            use_pallas=use_pallas)
+    rounds = []
+    for _ in range(4):
+        ne = int(rng.integers(0, 9))
+        ni = int(rng.integers(0, 9))
+        rounds.append(
+            (ne, rng.uniform(0, 500, ni).astype(np.float32).tolist()))
+    got_r = pq_r.apply_rounds(rounds)
+    got_s = [pq_s.apply(ne, ins) for ne, ins in rounds]
+    assert got_r == got_s
+    np.testing.assert_array_equal(np.asarray(pq_r.state.a),
+                                  np.asarray(pq_s.state.a))
+    np.testing.assert_array_equal(np.asarray(pq_r.state.size),
+                                  np.asarray(pq_s.state.size))
+
+
+def test_rounds_equal_sequential_applies_single_heap():
+    rng = np.random.default_rng(13)
+    init = rng.uniform(0, 500, 30).astype(np.float32).tolist()
+    pq_r = BatchedPriorityQueue(512, c_max=8, values=init)
+    pq_s = BatchedPriorityQueue(512, c_max=8, values=init)
+    rounds = [(int(rng.integers(0, 9)),
+               rng.uniform(0, 500,
+                           int(rng.integers(0, 9))).astype(np.float32)
+               .tolist())
+              for _ in range(4)]
+    assert pq_r.apply_rounds(rounds) == [pq_s.apply(ne, ins)
+                                         for ne, ins in rounds]
+    np.testing.assert_array_equal(np.asarray(pq_r.state.a),
+                                  np.asarray(pq_s.state.a))
+
+
+def test_oversized_rounds_slice_and_conserve():
+    """A round with ne/ni > c_max spans extra scan rows (same slicing
+    contract as apply()); conservation and per-shard invariants hold."""
+    from repro.core.batched_pq import check_heap_property
+
+    rng = np.random.default_rng(7)
+    init = rng.uniform(0, 100, 20).astype(np.float32).tolist()
+    pq = ShardedBatchedPQ(512, c_max=4, n_shards=2, values=init)
+    ins = rng.uniform(0, 100, 11).astype(np.float32).tolist()
+    got = pq.apply_rounds([(10, ins), (3, [])])
+    assert len(got[0]) == 10 and len(got[1]) == 3
+    taken = sum(1 for g in got[0] + got[1] if g is not None)
+    assert len(pq.values()) == 20 + 11 - taken
+    a = np.asarray(pq.state.a)
+    sizes = np.asarray(pq.state.size)
+    for k in range(2):
+        assert check_heap_property(a[k], int(sizes[k]))
+
+
+def test_rounds_donation_aliases_and_frees():
+    """The rounds program donates the heap state exactly like the
+    single-batch program (zero-copy across all R rounds)."""
+    pq = ShardedBatchedPQ(256, c_max=4, n_shards=2, values=[1.0, 2.0])
+    lowered = sp.sharded_apply_rounds.lower(
+        pq.state, jnp.zeros((3,), jnp.int32),
+        jnp.full((3, 4), jnp.inf, jnp.float32), jnp.zeros((3,), jnp.int32),
+        c_max=4, n_shards=2, key_range=None, use_pallas=False)
+    assert "tf.aliasing_output" in lowered.as_text()
+    old = pq.state
+    pq.apply_rounds([(1, []), (0, [5.0]), (1, [])])
+    assert old.a.is_deleted() and old.size.is_deleted()
+    # the undonated twin copies instead
+    pq2 = ShardedBatchedPQ(256, c_max=4, n_shards=2, values=[1.0, 2.0],
+                           donate=False)
+    old2 = pq2.state
+    pq2.apply_rounds([(1, [])])
+    assert not old2.a.is_deleted()
+
+
+def test_rounds_overflow_refusal_is_atomic():
+    """A refused command queue dispatches NOTHING and leaves the
+    occupancy mirror untouched."""
+    pq = ShardedBatchedPQ(8, c_max=4, n_shards=2, key_range=(0.0, 1.0))
+    saved_ub = pq._sizes_ub.copy()
+    saved_total = pq._total
+    with pytest.raises(ValueError, match="capacity"):
+        # all keys route to shard 0 → round 3 overflows it
+        pq.apply_rounds([(0, [0.1, 0.1, 0.1])] * 4)
+    np.testing.assert_array_equal(pq._sizes_ub, saved_ub)
+    assert pq._total == saved_total
+    assert len(pq) == 0
+
+
+# ---------------------------------------------------------------------------
+# graph tier: update_rounds
+# ---------------------------------------------------------------------------
+def test_graph_multi_slice_batch_is_one_dispatch(monkeypatch):
+    calls = {"rounds": 0, "single": 0}
+    orig_r, orig_s = dg.update_rounds, dg.update_pass
+
+    def counting_rounds(*a, **kw):
+        calls["rounds"] += 1
+        return orig_r(*a, **kw)
+
+    def counting_single(*a, **kw):
+        calls["single"] += 1
+        return orig_s(*a, **kw)
+
+    monkeypatch.setattr(dg, "update_rounds", counting_rounds)
+    monkeypatch.setattr(dg, "update_pass", counting_single)
+    g = dg.DeviceGraph(40, edge_capacity=64, c_max=4)
+    edges = [(i, i + 1) for i in range(10)]        # 10 classes → 3 slices
+    assert g.insert_batch(edges) == [True] * 10
+    assert calls == {"rounds": 1, "single": 0}     # ONE scan dispatch
+    assert g.connected(0, 10) is True
+    # a single-slice batch stays on the lean single-pass program
+    assert g.delete_batch(edges[:3]) == [True] * 3
+    assert calls == {"rounds": 1, "single": 1}
+
+
+def test_scheduler_adaptive_rounds_and_elimination():
+    """Backlog > max_batch: the scheduler serves it as up to rounds_cap
+    urgency-ordered batches per ordering pass — host-eliminated requests
+    cost zero PQ programs, the leftovers exactly one fused dispatch."""
+    from repro.serving import PCScheduler
+
+    gate = threading.Event()
+    started = threading.Event()
+
+    def step(rows):
+        started.set()
+        gate.wait(10)
+        return rows
+
+    sch = PCScheduler(step, max_batch=2, rounds_cap=4, pipeline=False)
+    f0 = sch.submit_async(0, deadline=0.0)
+    assert started.wait(10)
+    # 10 requests accumulate while the inline step blocks
+    futs = [sch.submit_async(i, deadline=float(i)) for i in range(1, 11)]
+    gate.set()
+    assert [f.result(timeout=30) for f in [f0] + futs] == list(range(11))
+    sch.close()
+    # pass 1 eliminated f0; pass 2 eliminated budget (8) of the 10 and
+    # published the 2 leftovers (1 dispatch); pass 3 extracted them
+    # (1 dispatch)
+    assert sch.eliminated == 9
+    assert sch.pq_dispatches == 2
+    assert all(b <= 2 for b in sch.batches)
+    assert sum(sch.batches) == 11

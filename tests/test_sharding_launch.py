@@ -1,4 +1,5 @@
 """Sharding plans + launch-layer logic (spec-level, no 512-device mesh)."""
+import os
 import subprocess
 import sys
 
@@ -131,6 +132,13 @@ def test_skip_accounting_matches_design():
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    jax.default_backend() == "cpu"
+    and not os.environ.get("RUN_DRYRUN_COMPILE"),
+    reason="256-device lower+compile routinely exceeds the CPU-container "
+           "budget (the known dryrun timeout — it hung tier-1 on slow "
+           "hosts); run on an accelerator host or opt in with "
+           "RUN_DRYRUN_COMPILE=1")
 def test_dryrun_single_cell_subprocess():
     """End-to-end: one real 256-device lower+compile in a subprocess."""
     code = (

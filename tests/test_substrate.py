@@ -247,12 +247,19 @@ def test_persistent_pq_table_no_reinsert_churn():
     sch = PCScheduler(lambda rows: (time.sleep(0.002), rows)[1],
                       max_batch=2)
     orig_apply = sch._pq.apply
+    orig_rounds = sch._pq.apply_rounds_async
 
     def counting_apply(extracts, inserts):
         inserted.extend(inserts)
         return orig_apply(extracts, inserts)
 
+    def counting_rounds(rounds):
+        for _ne, ins in rounds:
+            inserted.extend(ins)
+        return orig_rounds(rounds)
+
     sch._pq.apply = counting_apply
+    sch._pq.apply_rounds_async = counting_rounds
     gate = threading.Event()
 
     def sess(tid):
@@ -338,20 +345,20 @@ def test_ordering_failure_fails_futures_not_silence():
         time.sleep(0.15)
         return rows
 
-    sch = PCScheduler(slow, max_batch=4, pipeline=False)
+    sch = PCScheduler(slow, max_batch=4, pipeline=False, rounds_cap=1)
 
-    def boom(extracts, inserts):
+    def boom(rounds):
         raise RuntimeError("device fell over")
 
     orig_pq = sch._pq
-    f0 = sch.submit_async(0, deadline=0.0)   # single → fast path, no PQ
+    f0 = sch.submit_async(0, deadline=0.0)   # single → eliminated, no PQ
     assert started.wait(10)
-    sch._pq.apply = boom
-    # two requests accumulate while the inline step sleeps → the next
-    # pass has len(new) == 2 and must go through the (broken) device PQ
-    f1 = sch.submit_async(1, deadline=1.0)
-    f2 = sch.submit_async(2, deadline=2.0)
-    for f in (f1, f2):
+    sch._pq.apply_rounds_async = boom
+    # six requests accumulate while the inline step sleeps → the next
+    # pass overflows the elimination budget (rounds_cap·max_batch = 4)
+    # and must publish the leftovers through the (broken) device PQ
+    futs = [sch.submit_async(i, deadline=float(i)) for i in range(1, 7)]
+    for f in futs:
         with pytest.raises(RuntimeError, match="device fell over"):
             f.result(timeout=10)
     assert f0.result(timeout=10) == 0
