@@ -1,0 +1,167 @@
+"""Batched ordered map throughput — the third workload (DESIGN.md §13).
+
+Workload: prepopulate S random key→value pairs from a fixed key range;
+each thread issues reads with probability c% — an even mix of ``lookup``,
+``range_count``, ``range_sum`` and ``kth_smallest`` — and updates with
+(100-c)/3% each of ``insert`` (fresh key), ``assign`` and ``delete``
+(known key).  The read-fraction sweep c ∈ {50, 90, 100} probes the
+paper's §5.1 read-dominated setting, where the §3.3 transform answers the
+whole combined read list with ONE vectorized device program.
+
+Implementations:
+
+* ``FC host`` — flat combining over the sequential sorted map
+  (``core/seq_map.py``): the host baseline the device tier must beat on
+  the read-dominated mix (EXPERIMENTS §Map).
+* ``Lock`` — global mutex over the same host map (calibration row).
+* ``PC-K{1,4,8}`` — ``batched_read_optimized`` over the K-sharded
+  device-resident ``ShardedMap`` (key-range routed): fused mixed-op
+  update passes (net-effect sort-merge), one read program per combined
+  read batch, one blocking fetch per pass.
+* ``PC-K4 nodonate`` / ``PC-K4 pallas`` — ablation twins (EXPERIMENTS
+  §Ablations): copy-per-pass dispatch, and the merge-compact through the
+  ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
+
+Every row reports median-of-N (default 5) with IQR via
+``benchmarks._timing.measure``; rows are keyed (impl, read_pct, threads)
+for the CI regression gate (``check_regression.py --bench map``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.batched_map import ShardedMap
+from repro.core.locks import LockDS
+from repro.core.pc_map import fc_map, pc_map
+from repro.core.seq_map import SequentialSortedMap
+
+from ._timing import measure
+from .bench_pq import shard_capacity
+from .common import save
+
+C_MAX = 16
+KEY_RANGE = (0.0, 1000.0)
+
+DEFAULT_IMPLS = ("FC host", "Lock", "PC-K1", "PC-K4", "PC-K8",
+                 "PC-K4 nodonate", "PC-K4 pallas")
+
+
+def _items(rng, n_keys):
+    """n_keys distinct f32 keys from KEY_RANGE with random values."""
+    grid = np.linspace(KEY_RANGE[0], KEY_RANGE[1], 8 * n_keys,
+                       endpoint=False).astype(np.float32)
+    keys = rng.choice(grid, n_keys, replace=False)
+    return [(float(k), float(np.float32(rng.uniform(0, 10))))
+            for k in keys]
+
+
+def _make_impl(name, items, capacity):
+    if name == "FC host":
+        return fc_map(items).execute
+    if name == "Lock":
+        return LockDS(SequentialSortedMap(items)).execute
+    if name.startswith("PC-K"):
+        parts = name.split()
+        K = int(parts[0][len("PC-K"):])
+        flavor = parts[1] if len(parts) > 1 else ""
+        # key-range routing of near-uniform keys is i.i.d. per shard, so
+        # the binomial-tail sizing of bench_pq.shard_capacity applies
+        m = ShardedMap(shard_capacity(capacity, K, c_max=C_MAX),
+                       c_max=C_MAX, n_shards=K, key_range=KEY_RANGE,
+                       items=items, use_pallas=flavor == "pallas",
+                       donate=flavor != "nodonate")
+        return pc_map(m).execute
+    raise ValueError(f"unknown impl {name!r}")
+
+
+def bench_map(n_keys=2000, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
+              ops=200, seed=0, impls=DEFAULT_IMPLS, repeats=5):
+    results = []
+    rng = np.random.default_rng(seed)
+    items = _items(rng, n_keys)
+    known = np.asarray([k for k, _ in items], np.float32)
+
+    def warmup(ex):
+        """Exercise every op path (fused update pass, every read kind,
+        both the update+read and read-only combiner passes) before the
+        timed section — jit compile time must not pollute the rows."""
+        ex("insert", (KEY_RANGE[1] - 1.0, 0.0))
+        ex("lookup", KEY_RANGE[1] - 1.0)
+        ex("range_count", (0.0, 10.0))
+        ex("range_sum", (0.0, 10.0))
+        ex("kth_smallest", 1)
+        ex("assign", (KEY_RANGE[1] - 1.0, 1.0))
+        ex("delete", KEY_RANGE[1] - 1.0)
+
+    for c in read_pcts:
+        for P in threads:
+            for name in impls:
+                # bound the live set: warmup + repeats timed runs insert
+                # at most (repeats+2)·P·ops fresh keys on top of the S
+                # initial ones (+ the op-path warmup)
+                cap = n_keys + (repeats + 2) * P * ops + 2
+                ex = _make_impl(name, items, cap)
+                warmup(ex)
+
+                def body(tid, ex=ex):
+                    r = np.random.default_rng(1000 + tid)
+                    for _ in range(ops):
+                        p = r.random() * 100
+                        if p < c:
+                            q = int(r.integers(0, 4))
+                            if q == 0:
+                                ex("lookup",
+                                   float(known[r.integers(len(known))]))
+                            elif q == 1:
+                                ex("kth_smallest",
+                                   int(r.integers(1, n_keys)))
+                            else:
+                                lo = float(np.float32(
+                                    r.uniform(0, KEY_RANGE[1] - 50)))
+                                ex("range_count" if q == 2 else
+                                   "range_sum", (lo, lo + 50.0))
+                        else:
+                            q = int(r.integers(0, 3))
+                            if q == 0:
+                                ex("insert",
+                                   (float(np.float32(r.uniform(
+                                       *KEY_RANGE))),
+                                    float(np.float32(r.uniform(0, 10)))))
+                            elif q == 1:
+                                ex("assign",
+                                   (float(known[r.integers(len(known))]),
+                                    float(np.float32(r.uniform(0, 10)))))
+                            else:
+                                ex("delete",
+                                   float(known[r.integers(len(known))]))
+
+                row = measure(P, ops, body, repeats=repeats)
+                row.update({"read_pct": c, "threads": P, "impl": name,
+                            "n_keys": n_keys})
+                results.append(row)
+                print(f"[map] c={c}% P={P} {name:16s}"
+                      f" {row['ops_per_s']:9.0f} ops/s "
+                      f"(iqr {row['iqr']:.0f})")
+    save("bench_map", results)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--keys", type=int, default=2000)
+    ap.add_argument("--ops", type=int, default=200)
+    ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--reads", type=int, nargs="+", default=[50, 90, 100])
+    ap.add_argument("--impls", nargs="+", default=list(DEFAULT_IMPLS))
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed repeats per row (median + IQR reported)")
+    a = ap.parse_args(argv)
+    bench_map(n_keys=a.keys, ops=a.ops, threads=tuple(a.threads),
+              read_pcts=tuple(a.reads), impls=tuple(a.impls),
+              repeats=a.repeats)
+
+
+if __name__ == "__main__":
+    main()

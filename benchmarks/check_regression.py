@@ -30,32 +30,53 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 KEYS = {
     "pq": ("impl", "size", "threads"),
     "graph": ("impl", "workload", "read_pct", "threads"),
+    "map": ("impl", "read_pct", "threads"),
 }
 
 
 def _gates(impl: str) -> bool:
-    """Device-tier PC rows only: 'PC host' is the graph bench's
-    host-tier calibration row, not a hot-path row."""
+    """Device-tier PC rows only: 'PC host'/'FC host' are host-tier
+    calibration rows, not hot-path rows."""
     return impl.startswith("PC") and impl != "PC host"
 
 
 def _index(rows, keys):
-    """key -> (median, iqr_or_None) for every gating row."""
-    return {tuple(r.get(k) for k in keys):
-            (float(r["ops_per_s"]),
-             float(r["iqr"]) if "iqr" in r else None)
-            for r in rows if _gates(str(r.get("impl", "")))}
+    """key -> (median, iqr_or_None) for every gating row.  Rows without
+    an ``ops_per_s`` are skipped, never a KeyError — a malformed or
+    informational row must not crash the gate."""
+    out = {}
+    for r in rows:
+        if not _gates(str(r.get("impl", ""))) or "ops_per_s" not in r:
+            continue
+        out[tuple(r.get(k) for k in keys)] = (
+            float(r["ops_per_s"]),
+            float(r["iqr"]) if "iqr" in r else None)
+    return out
 
 
 def check(bench: str, threshold: float = 0.5, warn_only: bool = False,
           fresh_path: str = None, baseline_path: str = None) -> int:
+    if bench not in KEYS:
+        raise ValueError(f"unknown bench {bench!r} (have {sorted(KEYS)})")
     keys = KEYS[bench]
     fresh_path = fresh_path or os.path.join(
         ROOT, "experiments", "bench", f"bench_{bench}.json")
     baseline_path = baseline_path or os.path.join(
         ROOT, f"BENCH_{bench}.json")
     fresh = _index(json.load(open(fresh_path)), keys)
-    traj = json.load(open(baseline_path))["trajectory"]
+    try:
+        traj = json.load(open(baseline_path))["trajectory"]
+    except (FileNotFoundError, KeyError):
+        traj = []
+    if not traj:
+        # a brand-new benchmark has no recorded history yet: its rows
+        # are informational on their first run, not a hard failure
+        print(f"[perf-gate] bench_{bench}: no baseline trajectory at "
+              f"{baseline_path} — {len(fresh)} fresh PC row(s) recorded "
+              f"informationally, nothing to gate")
+        for key in sorted(fresh):
+            print(f"[perf-gate]   new row (no baseline): {key}")
+        return 0
     base = _index(traj[-1]["rows"], keys)
     print(f"[perf-gate] bench_{bench}: {len(fresh)} fresh PC rows vs "
           f"trajectory entry pr={traj[-1].get('pr')} "
@@ -82,6 +103,12 @@ def check(bench: str, threshold: float = 0.5, warn_only: bool = False,
     for key in sorted(set(fresh) - set(base)):
         print(f"[perf-gate]   new row (no baseline): {key}")
     compared = len(set(fresh) & set(base))
+    if compared == 0 and not base:
+        # the recorded entry has no gating rows at all (host-only or
+        # informational first entry): nothing to compare, nothing broken
+        print(f"[perf-gate] pass (baseline entry has no PC rows — "
+              f"{len(fresh)} fresh row(s) informational)")
+        return 0
     if compared == 0:
         # a silent no-op gate is worse than a failing one: this happens
         # when the CI smoke config drifts from the recorded trajectory

@@ -20,6 +20,8 @@ from .sharded_pq import (
 from .read_opt import batched_read_optimized, read_optimized_combining
 from .dynamic_graph import DynamicGraph
 from .device_graph import DeviceGraph, GraphState
+from .seq_map import SequentialSortedMap
+from .batched_map import BatchedMap, MapState, ShardedMap
 
 __all__ = [
     "ParallelCombiner", "PublicationRecord", "Request", "Status",
@@ -30,4 +32,5 @@ __all__ = [
     "ShardedBatchedPQ", "ShardedHeapState", "sharded_apply_batch",
     "batched_read_optimized", "read_optimized_combining",
     "DynamicGraph", "DeviceGraph", "GraphState",
+    "SequentialSortedMap", "BatchedMap", "MapState", "ShardedMap",
 ]

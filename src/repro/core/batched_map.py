@@ -1,0 +1,665 @@
+"""Device-resident batched ordered map (DESIGN.md §13) — the flagship
+structure of the batch-parallel literature (Lim's 2-3 trees), rebuilt to
+the sharded-PQ / device-graph tier's standard.
+
+Each shard is a **flat 2-3 tree**: a fixed-capacity sorted unique-key
+array (keys ascending in ``[0, size)``, ``(+inf, +inf)`` padding beyond,
+one scratch slot for predicated scatters).  Sorted order makes every read
+a vectorized search — no pointers, no rebalancing — and makes one
+combining pass of mixed updates a **sort-merge**:
+
+* **fused apply pass** — ONE donated program applies a ≤ ``c_max`` MIXED
+  insert/delete/assign batch with sequential arrival-order semantics.
+  Per-lane results follow the last-earlier-same-key chain rule (an op's
+  outcome fully determines presence for the next op on that key, exactly
+  the device graph's rule); the array takes only the NET effect per key
+  class: deletions become a ``keep`` mask, insertions become a short
+  sorted run, in-place value writes scatter at their slot, and one
+  **merge-compact** (``kernels/sorted_merge``) rebuilds the sorted array
+  — rank arithmetic + scatter in the XLA twin, a ``grid=(K,)``
+  broadcast-compare kernel under ``use_pallas=True``.
+* **vectorized batched reads** — ``lookup``, ``range_count``,
+  ``range_sum`` (closed interval [lo, hi]) and ``kth_smallest`` are ONE
+  fused program per read batch: masked binary search (``searchsorted``
+  against the sorted body), prefix sums for range aggregation, and a
+  shard-size cumsum for the global k-th — reads never mutate state, so
+  the read pass is never donated and a read-only workload never copies
+  the map (the §5.1 read-dominated setting this structure targets).
+* **multi-round scan path** (DESIGN.md §12) — update batches wider than
+  ``c_max`` lower onto pow2-padded rows of ONE donated ``lax.scan``
+  program (``apply_rounds``), the PR-4 command-queue recipe; result
+  masks stay on device and ride the next read's single blocking fetch
+  (``update_batch_async`` — the PQ/graph one-sync contract).
+* **key-range sharding** — ``ShardedMap`` stacks K shards on a leading
+  axis and routes every op by the Lim-style key-range partition
+  (``sharded_pq.route_range`` and its bit-exact host twin), so shard
+  concatenation stays globally sorted: range queries sum per-shard
+  answers, the k-th key is found by a cumulative-size search, and the
+  sync-free host occupancy guard refuses overflowing batches
+  **atomically** — a refused batch leaves the device buffers and the
+  host mirror untouched (the sharded-PQ guard pattern, hardened per the
+  ISSUE-5 overflow audit).
+
+Everything is shape-static (``c_max`` lanes, pow2-padded read widths and
+scan rows) so each pass jits to a single XLA program; the apply passes
+**donate** the map state (``donate=False`` is the copy-per-pass ablation
+twin, EXPERIMENTS §Ablations).  The wrapper is not thread-safe; confine
+each instance to one thread (the read-optimized combiner does).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sorted_merge import (merge_compact_sharded,
+                                        merge_compact_xla)
+
+from .batched_pq import INF, _flush_subnormals
+from .sharded_pq import _flush_host, _route, _route_host, host_key
+
+# All device→host transfers on the map hot path route through this hook
+# so tests can count blocking syncs (same idiom as batched_pq._host_fetch).
+_host_fetch = jax.device_get
+
+OP_INSERT, OP_DELETE, OP_ASSIGN = 0, 1, 2
+RD_LOOKUP, RD_COUNT, RD_SUM, RD_KTH = 0, 1, 2, 3
+
+_UPDATE_CODE = {"insert": OP_INSERT, "delete": OP_DELETE,
+                "assign": OP_ASSIGN}
+_READ_CODE = {"lookup": RD_LOOKUP, "range_count": RD_COUNT,
+              "range_sum": RD_SUM, "kth_smallest": RD_KTH}
+
+
+def _qkey(x: float) -> float:
+    """The exact f32 key the device map stores (f32 + flush-to-zero,
+    DESIGN.md §7).  ±inf is the padding sentinel and NaN breaks the
+    binary search, so both are rejected at this host boundary."""
+    k = float(np.float32(x))
+    if math.isnan(k) or math.isinf(k):
+        raise ValueError("map keys must be finite f32: ±inf is the "
+                         "padding sentinel and NaN breaks the search")
+    return host_key(k)
+
+
+def _qval(x: float) -> float:
+    """Values are stored as f32; NaN is rejected (the merge kernel's
+    masked-min materialization is undefined for NaN payloads)."""
+    v = float(np.float32(x))
+    if math.isnan(v):
+        raise ValueError("map values must not be NaN")
+    return v
+
+
+class MapState(NamedTuple):
+    """K sorted-array shards stacked on the leading axis.
+
+    Index ``capacity`` of every row is the SCRATCH slot for predicated
+    scatters (the graph/heap idiom): inactive lanes write there with one
+    fixed payload, so they can never collide with an active write."""
+
+    keys: jax.Array   # (K, capacity+1) f32 ascending in [0,size), +inf pad
+    vals: jax.Array   # (K, capacity+1) f32, +inf past size
+    size: jax.Array   # (K,) int32
+
+
+def _pow2(m: int) -> int:
+    return 1 << max(0, (m - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# Fused mixed-op apply pass (donated) — net-effect sort-merge
+# ---------------------------------------------------------------------------
+def _prep_one(keys1, vals1, size1, k1, v1, code1, nb1, *, c_max: int):
+    """Net a shard's ≤ c_max op row down to merge-compact inputs.
+
+    Returns ``(keys1, vals1, keep, b_keys, b_vals, b_count, new_size,
+    ok)``: the value-updated arrays, the survivor mask over the body, the
+    sorted run of netted-in pairs, and the per-lane arrival-order results
+    (the chain rule, see module docstring).  Pure XLA, vmapped over the
+    shard axis by :func:`_apply_impl`.
+    """
+    cap = keys1.shape[0] - 1
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+    active = lane < nb1
+    is_ins = active & (code1 == OP_INSERT)
+    is_del = active & (code1 == OP_DELETE)
+    is_asn = active & (code1 == OP_ASSIGN)
+
+    body = keys1[:cap]
+    pos = jnp.searchsorted(body, k1, side="left").astype(jnp.int32)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    in_map0 = (pos < size1) & (body[pos_c] == k1)
+    stored = vals1[pos_c]                     # junk unless in_map0
+
+    # arrival-order chain rule: a lane's key is "present before" iff the
+    # LAST earlier presence-changing lane on the same key was an insert
+    same = ((k1[:, None] == k1[None, :])
+            & active[:, None] & active[None, :])          # (c, c)
+    pchg = is_ins | is_del
+    earlier_p = same & pchg[None, :] & (lane[None, :] < lane[:, None])
+    has_prev = jnp.any(earlier_p, axis=1)
+    prev = jnp.argmax(jnp.where(earlier_p, lane[None, :], -1), axis=1)
+    present_before = jnp.where(has_prev, is_ins[prev], in_map0)
+    ok = active & jnp.where(is_ins, ~present_before, present_before)
+
+    # net effect per key class: the last presence-changing lane decides
+    # final presence; the last EFFECTIVE write decides the final value
+    has_pchg = jnp.any(same & pchg[None, :], axis=1)
+    last_p = jnp.argmax(jnp.where(same & pchg[None, :], lane[None, :],
+                                  -1), axis=1)
+    final_present = jnp.where(has_pchg, is_ins[last_p], in_map0)
+    wr = (is_ins & ~present_before) | (is_asn & present_before)
+    has_wr = jnp.any(same & wr[None, :], axis=1)
+    last_wr = jnp.argmax(jnp.where(same & wr[None, :], lane[None, :],
+                                   -1), axis=1)
+    final_val = jnp.where(has_wr, v1[last_wr], stored)
+
+    # one representative lane per class carries the buffer effect
+    is_rep = active & ~jnp.any(same & (lane[None, :] < lane[:, None]),
+                               axis=1)
+    rem = is_rep & in_map0 & ~final_present               # netted out
+    upd = is_rep & in_map0 & final_present & has_wr       # value rewrite
+    add = is_rep & ~in_map0 & final_present               # netted in
+
+    # in-place value rewrites at the exact slot (predicated scatter)
+    tgt = jnp.where(upd, pos, cap)
+    vals1 = vals1.at[tgt].set(jnp.where(upd, final_val, vals1[tgt]))
+    vals1 = vals1.at[cap].set(INF)                        # scratch stays pad
+
+    # deletions become the merge's keep mask
+    rflag = jnp.zeros((cap + 1,), jnp.bool_)
+    rflag = rflag.at[jnp.where(rem, pos, cap)].set(rem)
+    keep = (jnp.arange(cap) < size1) & ~rflag[:cap]
+
+    # insertions become the sorted b-run (stable argsort; distinct keys)
+    bkey_raw = jnp.where(add, k1, INF)
+    order = jnp.argsort(bkey_raw)
+    b_keys = bkey_raw[order]
+    b_vals = jnp.where(add, final_val, INF)[order]
+    b_count = jnp.sum(add.astype(jnp.int32))
+    new_size = size1 - jnp.sum(rem.astype(jnp.int32)) + b_count
+    return keys1, vals1, keep, b_keys, b_vals, b_count, new_size, ok
+
+
+def _apply_impl(state: MapState, op_keys: jax.Array, op_vals: jax.Array,
+                op_code: jax.Array, nb: jax.Array, *,
+                key_range: Optional[Tuple[float, float]] = None,
+                use_pallas: bool = False) -> Tuple[MapState, jax.Array]:
+    """Apply ≤ c_max MIXED insert/delete/assign ops as ONE fused pass.
+
+    ``op_keys``/``op_vals``: (c,) f32; ``op_code``: (c,) int32
+    (0=insert, 1=delete, 2=assign); ``nb``: () int32 live lane count.
+    Returns ``(state, ok)`` with per-lane arrival-order results — the
+    results stay on device until fetched (``AsyncMapUpdate``)."""
+    keys, vals, size = state
+    K = keys.shape[0]
+    cap = keys.shape[1] - 1
+    c = op_keys.shape[0]
+    lane = jnp.arange(c, dtype=jnp.int32)
+    k = _flush_subnormals(op_keys.astype(jnp.float32))
+    v = op_vals.astype(jnp.float32)
+    active = lane < nb
+
+    # route ops to shards (key-range partition), preserving lane order
+    # within each shard row — load-bearing for the chain rule
+    shard_of = jnp.where(active, _route(k, K, key_range), 0)
+    one_hot = ((shard_of[None, :] == jnp.arange(K)[:, None])
+               & active[None, :])                         # (K, c)
+    rank = jnp.cumsum(one_hot, axis=1) - 1                # (K, c)
+    counts = jnp.sum(one_hot, axis=1).astype(jnp.int32)
+
+    def scatter_row(dest, payload, fill):
+        row = jnp.full((c + 1,), fill, payload.dtype)
+        return row.at[dest].set(payload)[:c]
+
+    dest = jnp.where(one_hot, rank, c)                    # scratch col c
+    rows_k = jax.vmap(scatter_row, in_axes=(0, 0, None))(
+        dest, jnp.where(one_hot, k[None, :], INF), INF)
+    rows_v = jax.vmap(scatter_row, in_axes=(0, 0, None))(
+        dest, jnp.where(one_hot, v[None, :], jnp.float32(0)),
+        jnp.float32(0))
+    rows_c = jax.vmap(scatter_row, in_axes=(0, 0, None))(
+        dest, jnp.where(one_hot, op_code[None, :], 0), 0)
+
+    keys2, vals2, keep, b_keys, b_vals, b_count, new_size, ok_rows = \
+        jax.vmap(lambda a, b, s, rk, rv, rc, n: _prep_one(
+            a, b, s, rk, rv, rc, n, c_max=c))(
+            keys, vals, size, rows_k, rows_v, rows_c, counts)
+
+    # merge-compact every shard: ONE grid=(K,) kernel or the vmapped twin
+    if use_pallas:
+        mk, mv = merge_compact_sharded(keys2[:, :cap], vals2[:, :cap],
+                                       keep, b_keys, b_vals, b_count)
+    else:
+        mk, mv = jax.vmap(merge_compact_xla)(
+            keys2[:, :cap], vals2[:, :cap], keep, b_keys, b_vals,
+            b_count)
+    pad = jnp.full((K, 1), INF, jnp.float32)
+    state = MapState(jnp.concatenate([mk, pad], axis=1),
+                     jnp.concatenate([mv, pad], axis=1), new_size)
+
+    # gather per-lane results back into arrival order
+    ok = active & ok_rows[shard_of, jnp.clip(rank[shard_of, lane],
+                                             0, c - 1)]
+    return state, ok
+
+
+def _rounds_impl(state: MapState, op_keys: jax.Array, op_vals: jax.Array,
+                 op_code: jax.Array, nb: jax.Array, *,
+                 key_range: Optional[Tuple[float, float]] = None,
+                 use_pallas: bool = False) -> Tuple[MapState, jax.Array]:
+    """R sequential ≤ c_max slices as ONE ``lax.scan`` program
+    (DESIGN.md §12): ``op_keys``/``op_vals`` (R, c), ``op_code`` (R, c),
+    ``nb`` (R,).  Each scan step is the full fused mixed-op pass, so a
+    batch spanning R slices costs one dispatch.  Returns (state, oks)."""
+
+    def body(st, rnd):
+        st, ok = _apply_impl(st, rnd[0], rnd[1], rnd[2], rnd[3],
+                             key_range=key_range, use_pallas=use_pallas)
+        return st, ok
+
+    state, oks = jax.lax.scan(body, state, (op_keys, op_vals, op_code, nb))
+    return state, oks
+
+
+_STATIC = ("key_range", "use_pallas")
+# ``state`` is DONATED on every apply pass — the sorted arrays update in
+# place (DESIGN.md §10/§13); the ``*_undonated`` twins are the
+# copy-per-pass ablation (EXPERIMENTS §Ablations).
+apply_pass = jax.jit(_apply_impl, static_argnames=_STATIC,
+                     donate_argnums=(0,))
+apply_pass_undonated = jax.jit(_apply_impl, static_argnames=_STATIC)
+apply_rounds = jax.jit(_rounds_impl, static_argnames=_STATIC,
+                       donate_argnums=(0,))
+apply_rounds_undonated = jax.jit(_rounds_impl, static_argnames=_STATIC)
+
+
+# ---------------------------------------------------------------------------
+# Fused vectorized read pass (never donated — reads copy nothing)
+# ---------------------------------------------------------------------------
+def _read_impl(state: MapState, qa: jax.Array, qb: jax.Array,
+               qkind: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Answer a mixed read batch with ONE program.
+
+    ``qa``/``qb``: (q,) f32 — the key (lookup), [lo, hi] bounds
+    (range_count / range_sum) or k (kth_smallest, in ``qa``);
+    ``qkind``: (q,) int32.  Returns ``(res (q,) f32, ok (q,) bool)`` —
+    ``ok`` is the found/in-range flag for lookup and kth_smallest.
+    """
+    keys, vals, size = state
+    K = keys.shape[0]
+    cap = keys.shape[1] - 1
+    qa = _flush_subnormals(qa.astype(jnp.float32))
+    qb = _flush_subnormals(qb.astype(jnp.float32))
+
+    def per_shard(bk, bv, sz):
+        body = bk[:cap]
+        # masked binary search: the +inf padding keeps searchsorted exact
+        pos = jnp.searchsorted(body, qa, side="left").astype(jnp.int32)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        found = (pos < sz) & (body[pos_c] == qa)
+        lval = jnp.where(found, bv[pos_c], INF)
+        # closed-interval rank bounds
+        lo = jnp.minimum(jnp.searchsorted(body, qa, side="left"), sz)
+        hi = jnp.minimum(jnp.searchsorted(body, qb, side="right"), sz)
+        cnt = jnp.maximum(hi - lo, 0).astype(jnp.int32)
+        # prefix sums of the live values for range aggregation
+        live = jnp.where(jnp.arange(cap) < sz, bv[:cap], 0.0)
+        ps = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                              jnp.cumsum(live)])
+        rsum = jnp.where(hi > lo, ps[hi] - ps[lo], 0.0)
+        return found, lval, cnt, rsum
+
+    found, lval, cnt, rsum = jax.vmap(per_shard)(keys, vals, size)
+    any_found = jnp.any(found, axis=0)
+    # exactly one shard can hold the key (routing) — masked min IS select
+    look_val = jnp.min(jnp.where(found, lval, INF), axis=0)
+    total_cnt = jnp.sum(cnt, axis=0).astype(jnp.float32)
+    total_sum = jnp.sum(rsum, axis=0)
+
+    # global k-th: key-range routing keeps the shard concatenation
+    # globally sorted, so a cumulative-size search finds the owner shard
+    ccum = jnp.cumsum(size)
+    kq = qa.astype(jnp.int32)
+    sh = jnp.sum((ccum[:, None] < kq[None, :]).astype(jnp.int32), axis=0)
+    sh_c = jnp.clip(sh, 0, K - 1)
+    prior = jnp.where(sh > 0, ccum[jnp.clip(sh - 1, 0, K - 1)], 0)
+    loc = kq - prior
+    kth_ok = (kq >= 1) & (kq <= ccum[K - 1])
+    kth_val = keys[sh_c, jnp.clip(loc - 1, 0, cap - 1)]
+
+    res = jnp.select(
+        [qkind == RD_LOOKUP, qkind == RD_COUNT, qkind == RD_SUM],
+        [look_val, total_cnt, total_sum], kth_val)
+    ok = jnp.select([qkind == RD_LOOKUP, qkind == RD_KTH],
+                    [any_found, kth_ok], jnp.bool_(True))
+    return res, ok
+
+
+read_pass = jax.jit(_read_impl)
+
+
+# ---------------------------------------------------------------------------
+# Deferred update results (the one-sync contract, DESIGN.md §10/§11)
+# ---------------------------------------------------------------------------
+class AsyncMapUpdate:
+    """Deferred host view of one update batch's per-op results.
+
+    The ok masks stay on device until the first :meth:`result` call — or,
+    cheaper, until the owning map's next ``read_batch`` fetches them
+    inside its single blocking transfer.  Resolution also re-tightens the
+    owner's occupancy mirror to the exact shard sizes."""
+
+    def __init__(self, owner: "ShardedMap", masks: List[jax.Array],
+                 lane_counts: List[int], c_max: int):
+        self._owner: Optional["ShardedMap"] = owner
+        self.masks = masks
+        self._lane_counts = lane_counts
+        self._c_max = c_max
+        self._out: Optional[List[bool]] = None
+
+    def _resolve(self, masks_h) -> None:
+        if masks_h:
+            rows = np.concatenate(
+                [np.asarray(m).reshape(-1, self._c_max) for m in masks_h],
+                axis=0)
+            out = np.concatenate(
+                [rows[r, :nc] for r, nc in enumerate(self._lane_counts)]) \
+                if self._lane_counts else np.zeros((0,), bool)
+        else:
+            out = np.zeros((0,), bool)
+        self._out = [bool(x) for x in out]
+        self._owner = None
+        self.masks = []
+
+    def result(self) -> List[bool]:
+        """Per-op results in arrival order (cached after first call)."""
+        if self._out is None:
+            self._owner._resolve_through(self)
+        return self._out
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrappers
+# ---------------------------------------------------------------------------
+class ShardedMap:
+    """K-sharded device-resident ordered map with combining passes.
+
+    Args:
+      capacity: per-shard slot capacity (plus one scratch slot).
+      c_max: combined update-batch capacity per pass (compile-time
+        constant; larger batches lower onto one ``lax.scan`` program).
+      n_shards: shard count K.  K > 1 requires ``key_range``.
+      key_range: (lo, hi) — the Lim-style key-range partition
+        (``sharded_pq.route_range``); keys outside clamp to the edge
+        shards, so the shard concatenation stays globally sorted.
+      items: optional initial (key, value) pairs.
+      use_pallas: run the merge-compact through the ``grid=(K,)`` Pallas
+        kernel (``kernels/sorted_merge``) instead of the XLA twin.
+      donate: zero-copy (donated) apply passes (default); ``False`` is
+        the copy-per-pass ablation twin.
+
+    Sync-free occupancy guard (DESIGN.md §10): the wrapper mirrors the
+    device's key-range routing on the host (``route_range_host``, bit
+    exact) and keeps per-shard occupancy upper bounds — inserts grow the
+    bound at dispatch, the bound re-tightens to the true sizes at every
+    consumed fetch.  The guard is ATOMIC across the slices of one batch:
+    a refused batch leaves the device buffers and the mirror exactly as
+    they were (regression-tested; the sharded-PQ overflow audit).
+    """
+
+    read_only: Set[str] = {"lookup", "range_count", "range_sum",
+                           "kth_smallest"}
+
+    def __init__(self, capacity: int, c_max: int, n_shards: int = 1,
+                 key_range: Optional[Tuple[float, float]] = None,
+                 items=None, use_pallas: bool = False,
+                 donate: bool = True):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if c_max < 1:
+            raise ValueError("c_max must be >= 1")
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if n_shards > 1 and key_range is None:
+            raise ValueError(
+                "n_shards > 1 requires key_range: the ordered reads "
+                "(kth_smallest) need the key-range partition")
+        self.capacity = int(capacity)
+        self.c_max = int(c_max)
+        self.n_shards = int(n_shards)
+        self.use_pallas = bool(use_pallas)
+        self.donate = bool(donate)
+        self.key_range = ((float(key_range[0]), float(key_range[1]))
+                          if key_range is not None else None)
+        self.state = self._init_state(items)
+        self._unresolved: List[AsyncMapUpdate] = []
+
+    def _init_state(self, items) -> MapState:
+        K, cap = self.n_shards, self.capacity
+        keys = np.full((K, cap + 1), np.inf, np.float32)
+        vals = np.full((K, cap + 1), np.inf, np.float32)
+        size = np.zeros((K,), np.int32)
+        if items:
+            pairs = {}
+            for key, val in items:
+                pairs[_qkey(key)] = _qval(val)   # last write wins
+            ks = _flush_host(sorted(pairs))
+            vs = np.asarray([pairs[float(k)] for k in ks], np.float32)
+            shards = _route_host(ks, K, self.key_range)
+            for k in range(K):
+                mine = shards == k
+                n = int(mine.sum())
+                if n > cap:
+                    raise ValueError("per-shard capacity too small")
+                keys[k, :n] = ks[mine]
+                vals[k, :n] = vs[mine]
+                size[k] = n
+        # host occupancy mirror: exact at init, upper bounds in between
+        self._sizes_ub = size.astype(np.int64).copy()
+        return MapState(jnp.asarray(keys), jnp.asarray(vals),
+                        jnp.asarray(size))
+
+    def __len__(self) -> int:
+        return int(np.sum(np.asarray(self.state.size)))
+
+    # -- occupancy guard ------------------------------------------------------
+    def _refresh_sizes(self, sizes) -> None:
+        self._sizes_ub = np.asarray(sizes, np.int64).copy()
+
+    def _guard_slices(self, slices) -> None:
+        """Atomic sync-free overflow guard over ALL slices of a batch:
+        refusal restores the mirror bit-for-bit and nothing is ever
+        dispatched (the sharded-PQ overflow-audit contract)."""
+        ub = self._sizes_ub.copy()
+        for opk, _opv, code, nc in slices:
+            ins = opk[:nc][code[:nc] == OP_INSERT]
+            if ins.size:
+                shards = _route_host(ins, self.n_shards, self.key_range)
+                ub += np.bincount(shards, minlength=self.n_shards
+                                  ).astype(np.int64)
+            if np.any(ub > self.capacity):
+                raise ValueError(
+                    f"per-shard capacity {self.capacity} exceeded: "
+                    f"insert routing would grow a shard past it")
+        self._sizes_ub = ub
+
+    # -- updates --------------------------------------------------------------
+    def update_batch_async(self, methods: Sequence[str],
+                           inputs: Sequence[Any]) -> AsyncMapUpdate:
+        """Apply a combined MIXED update batch, arrival order preserved.
+
+        ≤ c_max ops dispatch as ONE fused pass; wider batches lower onto
+        pow2-padded rows of ONE donated ``apply_rounds`` scan program
+        (DESIGN.md §12).  NO blocking transfer: the per-op result masks
+        stay on device and ride the next read's fetch."""
+        n_ops = len(methods)
+        opk = np.zeros((n_ops,), np.float32)
+        opv = np.zeros((n_ops,), np.float32)
+        code = np.zeros((n_ops,), np.int32)
+        for i, (m, inp) in enumerate(zip(methods, inputs)):
+            if m not in _UPDATE_CODE:
+                raise ValueError(f"unknown update method {m!r}")
+            code[i] = _UPDATE_CODE[m]
+            if m == "delete":
+                opk[i] = _qkey(inp)
+            else:
+                opk[i] = _qkey(inp[0])
+                opv[i] = _qval(inp[1])
+        if n_ops == 0:
+            handle = AsyncMapUpdate(self, [], [], self.c_max)
+            handle._out = []
+            return handle
+        c = self.c_max
+        n_rounds = _pow2(-(-n_ops // c))
+        ks = np.full((n_rounds, c), np.inf, np.float32)
+        vs = np.zeros((n_rounds, c), np.float32)
+        cs = np.zeros((n_rounds, c), np.int32)
+        lane_counts: List[int] = []
+        slices = []
+        for r in range(n_rounds):
+            nc = max(0, min(c, n_ops - r * c))
+            ks[r, :nc] = opk[r * c : r * c + nc]
+            vs[r, :nc] = opv[r * c : r * c + nc]
+            cs[r, :nc] = code[r * c : r * c + nc]
+            lane_counts.append(nc)
+            slices.append((ks[r], vs[r], cs[r], nc))
+        # guard the WHOLE batch before dispatching anything — atomic:
+        # _guard_slices validates every slice on a local copy and only
+        # commits the mirror after all of them pass
+        self._guard_slices(slices)
+        nb = np.asarray(lane_counts, np.int32)
+        if n_rounds == 1:
+            fn = apply_pass if self.donate else apply_pass_undonated
+            self.state, ok = fn(self.state, jnp.asarray(ks[0]),
+                                jnp.asarray(vs[0]), jnp.asarray(cs[0]),
+                                jnp.int32(nb[0]),
+                                key_range=self.key_range,
+                                use_pallas=self.use_pallas)
+            masks = [ok]
+        else:
+            fn = apply_rounds if self.donate else apply_rounds_undonated
+            self.state, oks = fn(self.state, jnp.asarray(ks),
+                                 jnp.asarray(vs), jnp.asarray(cs),
+                                 jnp.asarray(nb),
+                                 key_range=self.key_range,
+                                 use_pallas=self.use_pallas)
+            masks = [oks]
+        handle = AsyncMapUpdate(self, masks, lane_counts, c)
+        self._unresolved.append(handle)
+        return handle
+
+    def _resolve_through(self, handle: Optional[AsyncMapUpdate],
+                         extra=None):
+        """Fetch (once) the masks of EVERY unresolved update handle plus
+        ``extra`` and the exact shard sizes, then resolve in dispatch
+        order — one combined fetch is exactly the budgeted sync."""
+        todo = list(self._unresolved)
+        if handle is not None and handle not in todo:
+            todo = []                          # already resolved
+        if not todo and extra is None:
+            return None
+        # `+ 0` detaches the sizes from state.size, which a later donated
+        # apply would invalidate (fetching a donated buffer throws)
+        fetched = _host_fetch(([h.masks for h in todo],
+                               self.state.size + 0, extra))
+        for h, masks_h in zip(todo, fetched[0]):
+            h._resolve(masks_h)
+            self._unresolved.remove(h)
+        self._refresh_sizes(fetched[1])
+        return fetched[2]
+
+    def update_batch(self, methods: Sequence[str],
+                     inputs: Sequence[Any]) -> List[bool]:
+        """Blocking ``update_batch_async`` (one fetch, at return)."""
+        return self.update_batch_async(methods, inputs).result()
+
+    def insert(self, key: float, value: float) -> bool:
+        return self.update_batch(["insert"], [(key, value)])[0]
+
+    def assign(self, key: float, value: float) -> bool:
+        return self.update_batch(["assign"], [(key, value)])[0]
+
+    def delete(self, key: float) -> bool:
+        return self.update_batch(["delete"], [key])[0]
+
+    # -- reads ----------------------------------------------------------------
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        """Answer a mixed read batch with ONE device program and ONE
+        blocking fetch (which also resolves every outstanding update
+        handle and re-tightens the occupancy mirror).  Queries are
+        padded to a power of two to bound recompiles."""
+        nq = len(methods)
+        if nq == 0:
+            return []
+        qa = np.zeros((_pow2(nq),), np.float32)
+        qb = np.full((_pow2(nq),), -1.0, np.float32)
+        kind = np.full((_pow2(nq),), RD_COUNT, np.int32)  # pad: count 0
+        for i, (m, inp) in enumerate(zip(methods, inputs)):
+            if m not in _READ_CODE:
+                raise ValueError(f"unknown read method {m!r}")
+            kind[i] = _READ_CODE[m]
+            if m == "lookup":
+                qa[i] = _qkey(inp)
+            elif m == "kth_smallest":
+                qa[i] = np.float32(int(inp))
+            else:
+                qa[i] = _qkey(inp[0])
+                qb[i] = _qkey(inp[1])
+        res, ok = read_pass(self.state, jnp.asarray(qa), jnp.asarray(qb),
+                            jnp.asarray(kind))
+        got = self._resolve_through(None, extra=(res, ok))
+        res_h, ok_h = np.asarray(got[0]), np.asarray(got[1])
+        out: List[Any] = []
+        for i, m in enumerate(methods):
+            if m == "range_count":
+                out.append(int(res_h[i]))
+            elif m == "range_sum":
+                out.append(float(res_h[i]))
+            else:                      # lookup / kth_smallest
+                out.append(float(res_h[i]) if ok_h[i] else None)
+        return out
+
+    def lookup(self, key: float) -> Optional[float]:
+        return self.read_batch(["lookup"], [key])[0]
+
+    def range_count(self, lo: float, hi: float) -> int:
+        return self.read_batch(["range_count"], [(lo, hi)])[0]
+
+    def range_sum(self, lo: float, hi: float) -> float:
+        return self.read_batch(["range_sum"], [(lo, hi)])[0]
+
+    def kth_smallest(self, k: int) -> Optional[float]:
+        return self.read_batch(["kth_smallest"], [k])[0]
+
+    # -- generic apply (Lock / FC wrappers, fuzz loops) -----------------------
+    def apply(self, method: str, input: Any = None) -> Any:
+        if method in _UPDATE_CODE:
+            return self.update_batch([method], [input])[0]
+        return self.read_batch([method], [input])[0]
+
+    # -- debug / test helpers -------------------------------------------------
+    def items(self) -> List[Tuple[float, float]]:
+        """Host copy of the live (key, value) pairs, ascending (one
+        fetch; test/debug)."""
+        keys, vals, size = _host_fetch((self.state.keys, self.state.vals,
+                                        self.state.size))
+        out: List[Tuple[float, float]] = []
+        for k in range(self.n_shards):
+            n = int(size[k])
+            out.extend(zip(keys[k, :n].tolist(), vals[k, :n].tolist()))
+        return sorted(out)
+
+
+class BatchedMap(ShardedMap):
+    """Single-shard convenience wrapper (the §13 core structure)."""
+
+    def __init__(self, capacity: int, c_max: int, items=None,
+                 use_pallas: bool = False, donate: bool = True):
+        super().__init__(capacity, c_max=c_max, n_shards=1, items=items,
+                         use_pallas=use_pallas, donate=donate)

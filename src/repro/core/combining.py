@@ -37,6 +37,23 @@ class Status(IntEnum):
     FINISHED = 3    # request served; ``res`` is valid
 
 
+class RequestFailure:
+    """Sentinel response: the combiner could not serve this request.
+
+    A combiner pass serves MANY clients; an exception mid-pass (e.g. an
+    invalid input published by one of them) must not leave the others'
+    requests PUSHED — a later pass would silently re-apply an update
+    that already reached the structure.  Combiner codes that batch
+    against a fallible backend FINISH the affected requests with a
+    ``RequestFailure`` instead; :meth:`ParallelCombiner.execute`
+    re-raises the wrapped error on the owning client's thread."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
 @dataclass
 class Request:
     """A published request (method + input + status + response + aux)."""
@@ -181,6 +198,8 @@ class ParallelCombiner:
                 if r.status == Status.PUSHED:
                     continue       # lock was released; retry as combiner
                 self.client_code(self, r)
+        if isinstance(r.res, RequestFailure):
+            raise r.res.error      # surfaced on the owning client thread
         return r.res
 
     # helper for combiner/client codes that need to block on a status change

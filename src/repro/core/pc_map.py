@@ -1,0 +1,48 @@
+"""Parallel-combining ordered map (§3.3 wired over the batched map).
+
+The map is the read-dominated workload par excellence (lookups + range
+queries, paper §5.1 setting), so the combining wrapper is the
+``batched_read_optimized`` transform: the combiner applies the update
+list as fused device passes (``update_batch_async`` — result masks stay
+on device and ride the read fetch) and answers the whole read list with
+ONE vectorized ``read_batch`` program.  CLIENT_CODE is empty on the
+host: the vector lanes already did the searches.
+
+``fc_map`` is the host flat-combining baseline over the sequential
+sorted map — the structure the device tier is benchmarked against
+(``benchmarks/bench_map.py``, EXPERIMENTS §Map).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from .batched_map import ShardedMap
+from .combining import ParallelCombiner
+from .flat_combining import flat_combining
+from .read_opt import batched_read_optimized
+from .seq_map import SequentialSortedMap
+
+
+def pc_map(m: ShardedMap, **kw) -> ParallelCombiner:
+    """§3.3 batched-read combining over a device-resident map."""
+    return batched_read_optimized(m, **kw)
+
+
+def pc_sharded_map(capacity: int, c_max: int, n_shards: int = 4,
+                   key_range: Optional[Tuple[float, float]] = None,
+                   items=None, use_pallas: bool = False,
+                   donate: bool = True, **kw) -> ParallelCombiner:
+    """Parallel combining over the K-sharded batched map (DESIGN.md §13).
+
+    ``use_pallas``/``donate`` select the ``grid=(K,)`` merge kernel and
+    the zero-copy (donated) dispatch (DESIGN.md §10; ``donate=False`` is
+    the copy-per-pass ablation).
+    """
+    return pc_map(ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
+                             key_range=key_range, items=items,
+                             use_pallas=use_pallas, donate=donate), **kw)
+
+
+def fc_map(items=None, **kw) -> ParallelCombiner:
+    """Flat-combining host sorted map (the baseline tier)."""
+    return flat_combining(SequentialSortedMap(items), **kw)

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, List, Protocol, Sequence, Set
 
-from .combining import ParallelCombiner, Request, Status
+from .combining import ParallelCombiner, Request, RequestFailure, Status
 
 
 class ReadWriteDS(Protocol):
@@ -83,31 +83,53 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
     def is_update(method: str) -> bool:
         return method not in ds.read_only
 
+    def resolve_handle(handle, updates: List[Request]) -> None:
+        for r, res in zip(updates, handle.result()):
+            if r.status != Status.FINISHED:
+                r.res = res
+                r.status = Status.FINISHED
+
     def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
         updates = [r for r in requests if is_update(r.method)]
         reads = [r for r in requests if not is_update(r.method)]
         handle = None
-        if updates and hasattr(ds, "update_batch_async"):
-            # device-resident tier (DESIGN.md §11): the whole update list
-            # is dispatched as fused combining passes (arrival order
-            # preserved) with the result masks left ON DEVICE — they ride
-            # the read batch's single blocking fetch below
-            handle = ds.update_batch_async([r.method for r in updates],
-                                           [r.input for r in updates])
-        else:
-            for r in updates:
-                r.res = ds.apply(r.method, r.input)
-                r.status = Status.FINISHED
-        if reads:
-            results = ds.read_batch([r.method for r in reads],
-                                    [r.input for r in reads])
-            for r, res in zip(reads, results):
-                r.res = res
-                r.status = Status.FINISHED
-        if handle is not None:
-            for r, res in zip(updates, handle.result()):
-                r.res = res
-                r.status = Status.FINISHED
+        try:
+            if updates and hasattr(ds, "update_batch_async"):
+                # device-resident tier (DESIGN.md §11): the whole update
+                # list is dispatched as fused combining passes (arrival
+                # order preserved) with the result masks left ON DEVICE —
+                # they ride the read batch's single blocking fetch below
+                handle = ds.update_batch_async(
+                    [r.method for r in updates],
+                    [r.input for r in updates])
+            else:
+                for r in updates:
+                    r.res = ds.apply(r.method, r.input)
+                    r.status = Status.FINISHED
+            if reads:
+                results = ds.read_batch([r.method for r in reads],
+                                        [r.input for r in reads])
+                for r, res in zip(reads, results):
+                    r.res = res
+                    r.status = Status.FINISHED
+            if handle is not None:
+                resolve_handle(handle, updates)
+        except BaseException as exc:
+            # one bad request (e.g. an invalid key) must not poison the
+            # pass: updates that already reached the structure still get
+            # their true results, and every other collected request is
+            # FINISHED with a RequestFailure (re-raised on its owner's
+            # thread) — a request left PUSHED here would be re-collected
+            # and silently RE-APPLIED by a later pass
+            if handle is not None:
+                try:
+                    resolve_handle(handle, updates)
+                except BaseException:
+                    pass
+            for r in requests:
+                if r.status != Status.FINISHED:
+                    r.res = RequestFailure(exc)
+                    r.status = Status.FINISHED
 
     def client_code(engine: ParallelCombiner, r: Request) -> None:
         return  # lanes did the work; nothing left for the thread

@@ -430,7 +430,27 @@ class ShardedBatchedPQ:
         """Apply a combined batch; extracted values stay on device until
         ``.result()`` — one blocking host sync per call, not per slice.
         Batches larger than c_max are applied in c_max slices — still one
-        device program per slice, K shards each."""
+        device program per slice, K shards each.
+
+        The overflow guard is ATOMIC across slices: every slice is
+        pre-validated against the host mirror before ANY slice reaches
+        the device, so a refused oversized batch leaves the device
+        buffers and the mirror exactly as they were (a mid-loop refusal
+        used to strand the already-applied prefix; the guard re-runs per
+        dispatched slice and, being deterministic, takes the same
+        branches it validated)."""
+        inserts = list(inserts)
+        require_finite_keys(inserts)
+        # expand_rounds slices with the same ne/ni advance rule as
+        # apply_sliced_async, so pre-guarding its specs validates exactly
+        # the slices the dispatch loop will produce (pad rows are no-ops)
+        specs, _ = expand_rounds([(extracts, inserts)], self.c_max)
+        saved = (self._sizes_ub.copy(), self._total)
+        try:
+            for ne, buf, ni in specs:
+                self._guard_and_account(ne, buf, ni)
+        finally:
+            self._sizes_ub, self._total = saved
         # `+ 0` detaches the fetched sizes from self.state.size, which a
         # later apply_async would donate (fetching a donated buffer throws)
         return apply_sliced_async(

@@ -1,0 +1,5 @@
+from .ops import (  # noqa: F401
+    merge_compact,
+    merge_compact_sharded,
+    merge_compact_xla,
+)

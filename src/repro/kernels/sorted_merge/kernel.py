@@ -1,0 +1,137 @@
+"""Sorted merge-compact as a shard-grid Pallas TPU kernel (DESIGN.md §13).
+
+The batched ordered map (``core/batched_map.py``) stores each shard as a
+sorted unique-key array.  One combining pass nets a mixed
+insert/delete/assign batch down to (a) a ``keep`` mask over the current
+array (deletions) and (b) a short sorted run of brand-new pairs
+(insertions); the pass then rebuilds the shard with ONE *merge-compact*:
+
+    out = sort(A[keep] ∪ B[:b_count])         (pad tail with (+inf, +inf))
+
+Because both runs are sorted and share no key, the merge needs no sort at
+all — only *ranks*:
+
+    ra_i = #kept-A before i           + #valid-B with key <  A_i
+    rb_j = j                          + #kept-A with key  <  B_j
+
+are exactly each element's output position, and they are injective (kept-A
+keys are strictly increasing, so are valid-B keys, and cross-run ties are
+impossible).  The kernel computes the ranks with broadcast-compare
+reductions and materializes the output with masked row-minima over an
+output-position tile — the same no-data-dependent-addressing recipe as
+``kernels/label_prop`` (exactly one candidate matches each output
+position, so the masked min IS the gather; unmatched positions come out
+``+inf``, which is precisely the padding contract).
+
+Layout: ``grid=(K,)`` with one program per map shard (DESIGN.md §10 shard
+grid).  Each program reads its own ``(N,)`` key/value/keep blocks and
+``(C,)`` insert-run blocks and writes its own ``(N,)`` output blocks — no
+cross-program communication.  Output positions stream through a
+``fori_loop`` in chunks of ``p_chunk`` rows, so the live mask working set
+is O(p_chunk · N) — with p_chunk=256 that prices the compiled kernel at
+roughly N ≲ 8K slots per shard under the ~16 MiB VMEM budget (the map's
+benchmark scale); the XLA twin has no such bound.
+
+Determinism: the merge moves f32 bits without arithmetic and min-
+reductions over a single live candidate are exact, so the kernel, the XLA
+twin (``ops.merge_compact_xla``) and the numpy oracle (``ref.py``) agree
+element-wise for every shard count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import _compat
+
+INF = jnp.inf
+
+
+def _merge_kernel(bcnt_ref, ak_ref, av_ref, keep_ref, bk_ref, bv_ref,
+                  mk_ref, mv_ref, *, n: int, c: int, p_chunk: int):
+    shard = pl.program_id(0)
+    b_count = bcnt_ref[shard]
+    ak = ak_ref[...]                              # (n,) f32 sorted run A
+    av = av_ref[...]
+    keep = keep_ref[...] != 0                     # (n,) survivors of A
+    bk = bk_ref[...]                              # (c,) f32 sorted run B
+    bv = bv_ref[...]
+    lane_b = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
+    b_valid = lane_b < b_count
+
+    # output rank of every kept-A element and every valid-B element
+    # (strictly increasing within each run, no cross-run ties → injective)
+    ex = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+    ra = ex + jnp.sum((b_valid[None, :] & (bk[None, :] < ak[:, None]))
+                      .astype(jnp.int32), axis=1)             # (n,)
+    rb = lane_b + jnp.sum((keep[None, :] & (ak[None, :] < bk[:, None]))
+                          .astype(jnp.int32), axis=1)         # (c,)
+
+    def chunk(ci, _):
+        base = ci * p_chunk
+        p = base + jax.lax.broadcasted_iota(jnp.int32, (p_chunk, 1),
+                                            0)[:, 0]
+        # masked row-min gather: at most one candidate per output row
+        ma = keep[None, :] & (ra[None, :] == p[:, None])      # (P, n)
+        ka = jnp.min(jnp.where(ma, ak[None, :], INF), axis=1)
+        va = jnp.min(jnp.where(ma, av[None, :], INF), axis=1)
+        mb = b_valid[None, :] & (rb[None, :] == p[:, None])   # (P, c)
+        kb = jnp.min(jnp.where(mb, bk[None, :], INF), axis=1)
+        vb = jnp.min(jnp.where(mb, bv[None, :], INF), axis=1)
+        mk_ref[pl.ds(base, p_chunk)] = jnp.minimum(ka, kb)
+        mv_ref[pl.ds(base, p_chunk)] = jnp.minimum(va, vb)
+        return 0
+
+    jax.lax.fori_loop(0, n // p_chunk, chunk, 0)
+
+
+def merge_sharded_vmem(a_keys: jax.Array, a_vals: jax.Array,
+                       a_keep: jax.Array, b_keys: jax.Array,
+                       b_vals: jax.Array, b_count: jax.Array,
+                       *, p_chunk: int, interpret: bool = False):
+    """Merge-compact all K shards as ONE ``grid=(K,)`` kernel.
+
+    a_keys/a_vals: (K, N) f32 with N divisible by ``p_chunk``; a_keep:
+    (K, N) int32 0/1; b_keys/b_vals: (K, C) f32 sorted runs; b_count:
+    (K,) int32.  Returns ``(m_keys, m_vals)`` each (K, N) f32,
+    (+inf, +inf)-padded past the merged length.
+    """
+    K, n = a_keys.shape
+    c = b_keys.shape[1]
+    assert n % p_chunk == 0
+    kernel = functools.partial(_merge_kernel, n=n, c=c, p_chunk=p_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # b_count (K,)
+            pl.BlockSpec((None, n), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # a_keys shard
+            pl.BlockSpec((None, n), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # a_vals shard
+            pl.BlockSpec((None, n), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # a_keep shard
+            pl.BlockSpec((None, c), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # b_keys shard
+            pl.BlockSpec((None, c), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),   # b_vals shard
+        ],
+        out_specs=[
+            pl.BlockSpec((None, n), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((None, n), lambda k: (k, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, n), jnp.float32),
+            jax.ShapeDtypeStruct((K, n), jnp.float32),
+        ],
+        compiler_params=_compat.CompilerParams(has_side_effects=False),
+        interpret=interpret,
+    )(b_count.astype(jnp.int32), a_keys.astype(jnp.float32),
+      a_vals.astype(jnp.float32), a_keep.astype(jnp.int32),
+      b_keys.astype(jnp.float32), b_vals.astype(jnp.float32))

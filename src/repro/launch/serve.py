@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core.batched_map import ShardedMap
 from repro.core.device_graph import DeviceGraph
 from repro.models import lm, transformer
 from repro.serving import PCScheduler, SerialScheduler
@@ -119,6 +120,71 @@ class GraphExecutor:
         return out
 
 
+class MapExecutor:
+    """Ordered-map executor — the scheduler's ``map`` workload
+    (DESIGN.md §13), beside the decode and graph workloads.
+
+    Each combined batch is a list of ``{'op': ..., 'key': ..., 'val':
+    ..., 'lo': ..., 'hi': ..., 'k': ...}`` requests over the K-sharded
+    batched map.  Updates are applied first in arrival order (ONE fused
+    mixed-op pass per ≤ c_max slice, masks left on device), then ALL
+    reads are answered with one vectorized read program whose single
+    fetch also resolves the update masks — the §3.3 read-optimized
+    transform with the scheduler's combiner loop playing the combiner.
+    """
+
+    def __init__(self, n_keys: int = 512, *, key_range=(0.0, 1000.0),
+                 c_max: int = 64, n_shards: int = 4,
+                 use_pallas: bool = False, donate: bool = True,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        keys = rng.choice(np.linspace(key_range[0], key_range[1],
+                                      8 * n_keys, endpoint=False),
+                          n_keys, replace=False).astype(np.float32)
+        items = [(float(k), float(rng.uniform(0, 10))) for k in keys]
+        capacity = -(-2 * n_keys // n_shards) + 2 * c_max
+        self.map = ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
+                              key_range=key_range, items=items,
+                              use_pallas=use_pallas, donate=donate)
+        self.device_steps = 0
+
+    @staticmethod
+    def _decode(req):
+        op = req["op"]
+        if op in ("insert", "assign"):
+            return op, (req["key"], req["val"])
+        if op == "delete":
+            return op, req["key"]
+        if op == "lookup":
+            return op, req["key"]
+        if op == "kth_smallest":
+            return op, req["k"]
+        return op, (req["lo"], req["hi"])
+
+    def __call__(self, reqs: List[Dict[str, Any]]) -> List[Any]:
+        ops = [self._decode(r) for r in reqs]
+        upd = [i for i, (m, _) in enumerate(ops)
+               if m not in self.map.read_only]
+        reads = [i for i, (m, _) in enumerate(ops)
+                 if m in self.map.read_only]
+        out: List[Any] = [None] * len(reqs)
+        handle = None
+        if upd:
+            handle = self.map.update_batch_async(
+                [ops[i][0] for i in upd], [ops[i][1] for i in upd])
+            self.device_steps += 1
+        if reads:
+            res = self.map.read_batch([ops[i][0] for i in reads],
+                                      [ops[i][1] for i in reads])
+            for i, r in zip(reads, res):
+                out[i] = r
+            self.device_steps += 1
+        if handle is not None:
+            for i, r in zip(upd, handle.result()):
+                out[i] = r
+        return out
+
+
 def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 requests_per_session: int = 4, n_tokens: int = 8,
                 prompt_len: int = 16, max_batch: int = 8,
@@ -138,17 +204,52 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     (the PQ's combining passes run as shard-grid Pallas kernels,
     DESIGN.md §10).
 
-    ``workload``: "decode" (LM decode batches over ``DecodeExecutor``) or
+    ``workload``: "decode" (LM decode batches over ``DecodeExecutor``),
     "graph" (dynamic-graph queries over ``GraphExecutor`` — the §5.1
     read-dominated application served through the same scheduler;
-    ``read_pct`` sets each session's share of ``connected`` queries).
-    Under the graph workload the ablation scheduler modes apply to the
-    graph engine too: "pc-nodonate" un-donates its passes and
-    "pc-pallas" (or ``graph_use_pallas=True``) routes label rebuilds
-    through the shard-grid kernel (DESIGN.md §11).
+    ``read_pct`` sets each session's share of ``connected`` queries) or
+    "map" (ordered-map queries over ``MapExecutor`` — DESIGN.md §13;
+    ``read_pct`` sets the share of lookup/range/kth reads, the rest
+    split across insert/assign/delete).  Under the graph and map
+    workloads the ablation scheduler modes apply to the engine too:
+    "pc-nodonate" un-donates its passes and "pc-pallas" routes label
+    rebuilds / merge-compacts through the shard-grid kernels
+    (DESIGN.md §11, §13).
     """
     rng = np.random.default_rng(seed)
-    if workload == "graph":
+    if workload == "map":
+        key_lo, key_hi = 0.0, 1000.0
+        ex = MapExecutor(max(64, n_vertices),
+                         key_range=(key_lo, key_hi), n_shards=4,
+                         use_pallas=scheduler == "pc-pallas",
+                         donate=scheduler != "pc-nodonate", seed=seed)
+        reqs_tab = []
+        for s in range(sessions):
+            row = []
+            for _ in range(requests_per_session):
+                p = rng.random() * 100
+                key = float(np.float32(rng.uniform(key_lo, key_hi)))
+                if p < read_pct:
+                    r = int(rng.integers(0, 4))
+                    if r == 0:
+                        row.append({"op": "lookup", "key": key})
+                    elif r == 1:
+                        row.append({"op": "kth_smallest",
+                                    "k": int(rng.integers(1, 64))})
+                    else:
+                        lo = min(key, key_hi - 50.0)
+                        op = "range_count" if r == 2 else "range_sum"
+                        row.append({"op": op, "lo": lo, "hi": lo + 50.0})
+                else:
+                    r = int(rng.integers(0, 3))
+                    val = float(np.float32(rng.uniform(0, 10)))
+                    op = ("insert", "assign", "delete")[r]
+                    if op == "delete":
+                        row.append({"op": op, "key": key})
+                    else:
+                        row.append({"op": op, "key": key, "val": val})
+            reqs_tab.append(row)
+    elif workload == "graph":
         ex: Any = GraphExecutor(
             n_vertices, n_shards=4,
             use_pallas=graph_use_pallas or scheduler == "pc-pallas",
@@ -244,7 +345,7 @@ def main():
                     choices=["pc", "pc-async", "pc-nodonate", "pc-pallas",
                              "serial"],
                     default="pc")
-    ap.add_argument("--workload", choices=["decode", "graph"],
+    ap.add_argument("--workload", choices=["decode", "graph", "map"],
                     default="decode")
     ap.add_argument("--read-pct", type=int, default=90)
     ap.add_argument("--rounds-cap", type=int, default=4,

@@ -66,6 +66,26 @@ from repro.core.sharded_pq import ShardedBatchedPQ, host_key
 _SENTINEL = object()
 
 
+def _fail_future(f: Future, exc: BaseException) -> None:
+    """Fail ``f`` unless already resolved.  The done() pre-check cannot
+    be atomic against a concurrent ``cancel()`` — swallowing the
+    InvalidStateError keeps that race from killing a worker loop."""
+    try:
+        if not f.done():
+            f.set_exception(exc)
+    except Exception:
+        pass
+
+
+def _resolve_future(f: Future, value: Any) -> None:
+    """Resolve ``f`` unless already resolved (same race note as above)."""
+    try:
+        if not f.done():
+            f.set_result(value)
+    except Exception:
+        pass
+
+
 @dataclass
 class BatchRequest:
     """One serving request: an input row + a deadline priority key."""
@@ -157,13 +177,18 @@ class PCScheduler:
 
     # -- public API ----------------------------------------------------------
     def submit_async(self, inputs: Any, deadline: float = 0.0) -> Future:
-        """Non-blocking submit; returns a future for the request's output."""
+        """Non-blocking submit; returns a future for the request's output.
+
+        Raises ``RuntimeError`` immediately after :meth:`close` — and,
+        defensively, if the combiner thread is no longer alive (a request
+        must never enqueue onto a dead combiner loop, where its future
+        could hang forever)."""
         if deadline != deadline:        # reject NaN at the client boundary
             raise ValueError("deadline must not be NaN")
         f: Future = Future()
         ent = _Entry(BatchRequest(inputs=inputs, deadline=deadline), f)
         with self._cond:
-            if self._closed:
+            if self._closed or not self._combiner.is_alive():
                 raise RuntimeError("scheduler is closed")
             self._pending.append(ent)
             self._cond.notify()
@@ -174,16 +199,40 @@ class PCScheduler:
         return self.submit_async(inputs, deadline).result()
 
     def close(self) -> None:
-        """Drain outstanding requests, then stop the worker threads."""
+        """Drain outstanding requests, then stop the worker threads.
+
+        Every future submitted before ``close`` resolves by the time it
+        returns: requests already collected are served, and anything
+        still unserved when the workers stop (e.g. because a worker
+        thread died) is failed with ``RuntimeError`` instead of leaving
+        its caller hanging.  A concurrent second ``close`` waits for the
+        shutdown to complete instead of returning early."""
         with self._cond:
-            if self._closed:
-                return
+            first = not self._closed
             self._closed = True
             self._cond.notify_all()
         self._combiner.join()
         if self._device is not None:
-            self._handoff.put(_SENTINEL)
+            if first:
+                self._handoff.put(_SENTINEL)
             self._device.join()
+        # safety net: no caller may hang on a future we will never serve.
+        # The workers are joined, but a CONCURRENT second close() runs
+        # this same sweep — take the lock so the two don't race on the
+        # queues/table (uncontended: submitters raise under it already).
+        with self._cond:
+            doomed = list(self._pending) + list(self._backlog)
+            self._pending.clear()
+            self._backlog.clear()
+            if self.use_pq:
+                for bucket in self._table.values():
+                    doomed.extend(bucket)
+                self._table.clear()
+                self._queued = 0
+                self._resident = []
+        for ent in doomed:
+            _fail_future(ent.future, RuntimeError(
+                "scheduler closed before the request was served"))
 
     def __enter__(self) -> "PCScheduler":
         return self
@@ -239,8 +288,7 @@ class PCScheduler:
             # mid-batch inconsistent) — rebuild it from scratch
             self._pq = ShardedBatchedPQ(**self._pq_ctor)
         for ent in doomed:
-            if not ent.future.done():
-                ent.future.set_exception(exc)
+            _fail_future(ent.future, exc)
 
     def _peek_resident(self) -> Optional[float]:
         """Smallest key still resident in the device PQ (lazy min-heap:
@@ -298,7 +346,31 @@ class PCScheduler:
                 ne = min(left, self.max_batch)
                 rounds.append((ne, []))
                 left -= ne
-            handles = self._pq.apply_rounds_async(rounds)
+            try:
+                handles = self._pq.apply_rounds_async(rounds)
+            except ValueError as exc:
+                # occupancy-guard refusal (the deadline PQ would overflow
+                # a shard).  The refusal is ATOMIC on the PQ side —
+                # nothing reached the device and the mirror is untouched
+                # — so fail ONLY the new requests: resident entries, the
+                # lazy min-heap and the device PQ stay exactly as they
+                # were, and the next pass keeps draining them.  (The
+                # heap may keep stale copies of the refused keys; the
+                # lazy pop in _peek_resident discards keys whose table
+                # bucket is gone.)
+                for ent in rest:
+                    bucket = self._table.get(ent.key)
+                    if bucket is not None:
+                        try:
+                            bucket.remove(ent)
+                        except ValueError:
+                            pass
+                        if not bucket:
+                            del self._table[ent.key]
+                    _fail_future(ent.future, exc)
+                self._queued -= len(rest)
+                return [chosen[i : i + self.max_batch]
+                        for i in range(0, len(chosen), self.max_batch)]
             self.pq_dispatches += 1
             lost = False
             for h in handles[n_ins_rounds:]:
@@ -313,10 +385,8 @@ class PCScheduler:
                                     for e in b]
                         self._table.clear()
                         for ent in stranded:
-                            if not ent.future.done():
-                                ent.future.set_exception(RuntimeError(
-                                    "deadline key lost from the device "
-                                    "PQ"))
+                            _fail_future(ent.future, RuntimeError(
+                                "deadline key lost from the device PQ"))
                         lost = True
                         break
                     self._queued -= 1
@@ -345,8 +415,7 @@ class PCScheduler:
         try:
             outs = list(self.step_fn([e.req.inputs for e in batch]))
             for ent, out in zip(batch, outs):
-                if not ent.future.done():   # client may have cancelled
-                    ent.future.set_result(out)
+                _resolve_future(ent.future, out)   # client may have cancelled
             if len(outs) < len(batch):
                 # a short return must not strand the tail forever
                 raise RuntimeError(
@@ -354,8 +423,7 @@ class PCScheduler:
                     f"of {len(batch)}")
         except BaseException as exc:   # propagate to every waiting client
             for ent in batch:
-                if not ent.future.done():
-                    ent.future.set_exception(exc)
+                _fail_future(ent.future, exc)
 
 
 class SerialScheduler:

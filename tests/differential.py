@@ -21,7 +21,9 @@ from typing import Callable, List, Set, Tuple
 
 import numpy as np
 
+from repro.core.seq_map import SequentialSortedMap
 from repro.core.seq_pq import SequentialHeap
+from repro.core.sharded_pq import host_key
 
 try:
     from hypothesis import strategies as st
@@ -178,6 +180,85 @@ def fuzz_pq_vs_oracle(pq, rng, steps: int, *, c_max: int,
             assert row[0] == np.inf          # scratch slot invariant
 
 
+def _q32(x) -> float:
+    """The f32 key image the device map stores — quantize BOTH sides of
+    a differential pair at the boundary.  Delegates to ``host_key`` so
+    the harness can never drift from the production quantization rule
+    (f32 + flush-to-zero + finite clamp, DESIGN.md §7)."""
+    return host_key(float(np.float32(x)))
+
+
+def _rand_key(rng, pool: List[float], key_hi: float = 100.0) -> float:
+    """Mostly-known keys (duplicate inserts, assign/delete hits), but
+    fresh often enough to exercise growth; f32-exact values only."""
+    if pool and rng.random() < 0.6:
+        return pool[int(rng.integers(0, len(pool)))]
+    k = float(np.float32(rng.uniform(0, key_hi)))
+    pool.append(k)
+    return k
+
+
+def _map_op(rng, pool: List[float], key_hi: float):
+    """One random update op as a (method, input) pair."""
+    m = ("insert", "delete", "assign")[int(rng.integers(0, 3))]
+    k = _rand_key(rng, pool, key_hi)
+    if m == "delete":
+        return m, k
+    return m, (k, float(np.float32(rng.uniform(0, 100))))
+
+
+def _map_read(rng, pool: List[float], key_hi: float, n_live: int):
+    r = int(rng.integers(0, 4))
+    if r == 0:
+        return "lookup", _rand_key(rng, pool, key_hi)
+    if r == 1:
+        return "kth_smallest", int(rng.integers(0, n_live + 3))
+    lo = float(np.float32(rng.uniform(-10, key_hi)))
+    hi = float(np.float32(lo + rng.uniform(0, key_hi / 2)))
+    return ("range_count" if r == 2 else "range_sum"), (lo, hi)
+
+
+def _check_map_reads(got, want, methods, ctx) -> None:
+    """Compare read results; range_sum tolerates f32 prefix-sum
+    association error, everything else is exact."""
+    for g, w, m in zip(got, want, methods):
+        if m == "range_sum":
+            assert abs(g - w) <= 1e-3 + 1e-5 * abs(w), (ctx, m, g, w)
+        else:
+            assert g == w, (ctx, m, g, w)
+
+
+def fuzz_map_vs_oracle(m, rng, steps: int, *, key_hi: float = 100.0
+                       ) -> None:
+    """Interleaved mixed-update / mixed-read fuzz vs
+    ``SequentialSortedMap``: duplicate-key batches (chain-rule results),
+    delete-reinsert cycles, assign-on-absent, oversized batches (the
+    scan rounds path), empty and out-of-range range queries."""
+    oracle = SequentialSortedMap(m.items())
+    pool: List[float] = []
+    for step in range(steps):
+        if int(rng.integers(0, 2)) == 0:
+            k = int(rng.integers(1, 20))       # > c_max sometimes: rounds
+            ops = [_map_op(rng, pool, key_hi) for _ in range(k)]
+            got = m.update_batch([o[0] for o in ops], [o[1] for o in ops])
+            want = [oracle.apply(mm, ii) for mm, ii in ops]
+            assert got == want, (step, ops, got, want)
+        else:
+            k = int(rng.integers(1, 9))
+            ops = [_map_read(rng, pool, key_hi, len(oracle))
+                   for _ in range(k)]
+            got = m.read_batch([o[0] for o in ops], [o[1] for o in ops])
+            want = [oracle.apply(mm, ii) for mm, ii in ops]
+            _check_map_reads(got, want, [o[0] for o in ops], (step, ops))
+        if step % 7 == 0:
+            got_items = m.items()
+            want_items = oracle.items()
+            assert [k for k, _ in got_items] == [k for k, _ in want_items]
+            np.testing.assert_allclose([v for _, v in got_items],
+                                       [v for _, v in want_items],
+                                       rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis rule-based state machines
 # ---------------------------------------------------------------------------
@@ -242,6 +323,82 @@ def make_graph_machine(graph_factory: Callable[[], object], n: int):
             assert got == want
 
     return GraphMachine
+
+
+def make_map_machine(map_factory: Callable[[], object],
+                     key_hi: float = 100.0):
+    """Rule-based state machine fuzzing an ordered map vs
+    ``SequentialSortedMap``.
+
+    Rules cover duplicate-key mixed update batches (the arrival-order
+    chain rule), delete-reinsert cycles, assign-on-absent, and mixed
+    read batches over lookup / range_count / range_sum / kth_smallest —
+    shared by the single and K-sharded map tiers.
+    """
+    if not HAVE_HYPOTHESIS:       # pragma: no cover
+        raise RuntimeError("hypothesis is not installed")
+
+    key = st.floats(0, key_hi, width=32)
+    val = st.floats(0, 100, width=32)
+    method = st.sampled_from(["insert", "delete", "assign"])
+
+    class MapMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.m = map_factory()
+            self.o = SequentialSortedMap(self.m.items())
+            self.pool: List[float] = [0.0]
+
+        def _key(self, data, fresh):
+            if data.draw(st.booleans()):
+                return data.draw(st.sampled_from(self.pool))
+            k = _q32(fresh)
+            self.pool.append(k)
+            return k
+
+        @rule(data=st.data(),
+              ops=st.lists(st.tuples(method, key, val), min_size=1,
+                           max_size=12))
+        def mixed_batch(self, data, ops):
+            methods, inputs = [], []
+            for m, k, v in ops:
+                k = self._key(data, k)
+                methods.append(m)
+                inputs.append(k if m == "delete" else (k, float(v)))
+            got = self.m.update_batch(methods, inputs)
+            want = [self.o.apply(m, i) for m, i in zip(methods, inputs)]
+            assert got == want, (methods, inputs, got, want)
+
+        @rule(data=st.data(),
+              kinds=st.lists(st.integers(0, 3), min_size=1, max_size=8),
+              fresh=st.lists(key, min_size=8, max_size=8),
+              ks=st.lists(st.integers(0, 40), min_size=8, max_size=8))
+        def read_batch(self, data, kinds, fresh, ks):
+            methods, inputs = [], []
+            for i, r in enumerate(kinds):
+                if r == 0:
+                    methods.append("lookup")
+                    inputs.append(self._key(data, fresh[i]))
+                elif r == 1:
+                    methods.append("kth_smallest")
+                    inputs.append(ks[i])
+                else:
+                    lo = self._key(data, fresh[i])
+                    methods.append("range_count" if r == 2
+                                   else "range_sum")
+                    inputs.append((lo, _q32(lo + ks[i])))
+            got = self.m.read_batch(methods, inputs)
+            want = [self.o.apply(m, i) for m, i in zip(methods, inputs)]
+            _check_map_reads(got, want, methods, (methods, inputs))
+
+        @rule()
+        def items_agree(self):
+            got, want = self.m.items(), self.o.items()
+            assert [k for k, _ in got] == [k for k, _ in want]
+            np.testing.assert_allclose([v for _, v in got],
+                                       [v for _, v in want], rtol=1e-6)
+
+    return MapMachine
 
 
 def make_pq_machine(pq_factory: Callable[[], object], c_max: int):

@@ -1,0 +1,93 @@
+"""CI perf-gate unit tests (ISSUE 5 satellite): rows absent from the
+baseline entry — e.g. a brand-new PC-map row on its first run — must be
+informational, never a KeyError or a hard failure."""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.check_regression import check  # noqa: E402
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def _row(impl, ops, read_pct=90, threads=4, iqr=1.0):
+    return {"impl": impl, "read_pct": read_pct, "threads": threads,
+            "ops_per_s": ops, "iqr": iqr}
+
+
+def _baseline(rows):
+    return {"trajectory": [{"pr": 5, "rows": rows}]}
+
+
+def test_brand_new_row_name_is_informational(tmp_path, capsys):
+    """A fresh run containing a row name the baseline has never seen
+    (the new-ablation / first-PC-map-run case) passes and reports it."""
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("PC-K4", 100.0), _row("PC-K4 newablation", 5.0)])
+    base = _write(tmp_path, "base.json", _baseline([_row("PC-K4", 100.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+    out = capsys.readouterr().out
+    assert "new row (no baseline)" in out
+    assert "PC-K4 newablation" in out
+
+
+def test_missing_baseline_file_is_informational(tmp_path, capsys):
+    """First run of a brand-new benchmark: no BENCH_<name>.json yet —
+    the gate must not crash (FileNotFoundError) or fail."""
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0)])
+    missing = str(tmp_path / "nope.json")
+    assert check("map", fresh_path=fresh, baseline_path=missing) == 0
+    assert "no baseline trajectory" in capsys.readouterr().out
+
+
+def test_baseline_without_trajectory_key_is_informational(tmp_path):
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0)])
+    base = _write(tmp_path, "base.json", {"note": "not yet recorded"})
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+
+
+def test_baseline_entry_with_no_gating_rows_passes(tmp_path, capsys):
+    """A host-only first entry (zero PC rows) gates nothing — pass with
+    a note instead of the config-drift failure."""
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0)])
+    base = _write(tmp_path, "base.json",
+                  _baseline([_row("FC host", 5000.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+    assert "no PC rows" in capsys.readouterr().out
+
+
+def test_row_without_ops_per_s_is_skipped_not_keyerror(tmp_path):
+    """Malformed/informational rows (no ops_per_s) must not crash."""
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("PC-K4", 90.0),
+                    {"impl": "PC-K4 note-only", "read_pct": 90,
+                     "threads": 4}])
+    base = _write(tmp_path, "base.json", _baseline([_row("PC-K4", 100.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+
+
+def test_real_regression_still_fails(tmp_path):
+    """The fix must not neuter the gate: a >50% drop on a matched row
+    still fails (and warn-only downgrades it)."""
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 10.0)])
+    base = _write(tmp_path, "base.json", _baseline([_row("PC-K4", 100.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 1
+    assert check("map", fresh_path=fresh, baseline_path=base,
+                 warn_only=True) == 0
+
+
+def test_config_drift_with_gating_baseline_still_fails(tmp_path):
+    """ZERO overlap against a baseline that HAS gating rows is still the
+    silent-no-op-gate failure (the PR-4 contract)."""
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0,
+                                                 threads=2)])
+    base = _write(tmp_path, "base.json", _baseline([_row("PC-K4", 100.0,
+                                                         threads=8)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 1

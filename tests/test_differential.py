@@ -14,8 +14,10 @@ pytest.importorskip(
     reason="state-machine fuzz needs hypothesis (pip install -e .[test])")
 from hypothesis import HealthCheck, settings  # noqa: E402
 
-from differential import make_graph_machine, make_pq_machine  # noqa: E402
+from differential import (make_graph_machine, make_map_machine,  # noqa: E402
+                          make_pq_machine)
 
+from repro.core.batched_map import ShardedMap  # noqa: E402
 from repro.core.device_graph import DeviceGraph  # noqa: E402
 from repro.core.dynamic_graph import DynamicGraph  # noqa: E402
 from repro.core.sharded_pq import ShardedBatchedPQ  # noqa: E402
@@ -49,3 +51,17 @@ TestDeviceGraphNoDonateMachine = _machine_case(
 TestShardedPQMachine = _machine_case(
     make_pq_machine(lambda: ShardedBatchedPQ(512, c_max=8, n_shards=2),
                     c_max=8))
+
+# ordered map (DESIGN.md §13): single-shard, K-sharded, and the
+# copy-per-pass ablation twin — all against SequentialSortedMap
+TestBatchedMapMachine = _machine_case(
+    make_map_machine(lambda: ShardedMap(256, c_max=8)))
+
+TestShardedMapMachine = _machine_case(
+    make_map_machine(lambda: ShardedMap(128, c_max=8, n_shards=4,
+                                        key_range=(0.0, 100.0))))
+
+TestShardedMapNoDonateMachine = _machine_case(
+    make_map_machine(lambda: ShardedMap(128, c_max=8, n_shards=4,
+                                        key_range=(0.0, 100.0),
+                                        donate=False)))

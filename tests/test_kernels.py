@@ -22,6 +22,10 @@ from repro.kernels.label_prop.ref import (components_reference,
                                           label_step_reference)
 from repro.kernels.linear_scan import rglru_scan, rwkv6_scan
 from repro.kernels.linear_scan.ref import rglru_reference, rwkv6_reference
+from repro.kernels.sorted_merge import (merge_compact,
+                                        merge_compact_sharded,
+                                        merge_compact_xla)
+from repro.kernels.sorted_merge.ref import merge_compact_reference
 
 
 # ---------------------------------------------------------------------------
@@ -355,3 +359,109 @@ def test_merge_labels_union_find_fast_path():
     noop = merge_labels(base, jnp.zeros((4,), jnp.int32),
                         jnp.zeros((4,), jnp.int32), n=n)
     np.testing.assert_array_equal(np.asarray(noop), np.asarray(base))
+
+
+# ---------------------------------------------------------------------------
+# sorted merge-compact (batched map, DESIGN.md §13): grid=(K,) map shards
+# ---------------------------------------------------------------------------
+def _merge_case(rng, n, c):
+    """Random (A-run + keep mask, B-run) pair honoring the kernel's
+    preconditions: kept-A and valid-B strictly increasing, disjoint."""
+    nk = int(rng.integers(0, n - c + 1))
+    a_keys = np.full((n,), np.inf, np.float32)
+    a_vals = np.full((n,), np.inf, np.float32)
+    pool = rng.permutation(np.arange(0, 4096, dtype=np.float32))
+    ks = np.sort(pool[:nk])
+    a_keys[:nk] = ks
+    a_vals[:nk] = rng.uniform(-9, 9, nk).astype(np.float32)
+    keep = np.zeros((n,), bool)
+    keep[:nk] = rng.random(nk) < 0.7
+    bc = int(rng.integers(0, c + 1))
+    bs = np.sort(pool[nk : nk + bc])                   # disjoint from A
+    b_keys = np.full((c,), np.inf, np.float32)
+    b_vals = np.full((c,), np.inf, np.float32)
+    b_keys[:bc] = bs
+    b_vals[:bc] = rng.uniform(-9, 9, bc).astype(np.float32)
+    return a_keys, a_vals, keep, b_keys, b_vals, bc
+
+
+@pytest.mark.parametrize("trial", range(4))
+def test_merge_compact_kernel_bit_exact(trial):
+    """Kernel ≡ XLA twin ≡ numpy ref ELEMENT-WISE (keys AND values),
+    ragged sizes included — the merge moves f32 bits, no arithmetic."""
+    rng = np.random.default_rng(900 + trial)
+    n = int(rng.integers(8, 70))                       # not tile-aligned
+    c = int(rng.integers(1, 8))
+    a_keys, a_vals, keep, b_keys, b_vals, bc = _merge_case(rng, n, c)
+    want = merge_compact_reference(a_keys, a_vals, keep, b_keys, b_vals,
+                                   bc)
+    got_x = merge_compact_xla(jnp.asarray(a_keys), jnp.asarray(a_vals),
+                              jnp.asarray(keep), jnp.asarray(b_keys),
+                              jnp.asarray(b_vals), jnp.int32(bc))
+    got_k = merge_compact(jnp.asarray(a_keys), jnp.asarray(a_vals),
+                          jnp.asarray(keep), jnp.asarray(b_keys),
+                          jnp.asarray(b_vals), jnp.int32(bc))
+    for got in (got_x, got_k):
+        np.testing.assert_array_equal(np.asarray(got[0]), want[0])
+        np.testing.assert_array_equal(np.asarray(got[1]), want[1])
+
+
+@pytest.mark.parametrize("n_shards", [1, 4, 8])
+def test_merge_compact_sharded_per_shard_reference(n_shards):
+    """ONE grid=(K,) dispatch merges every shard independently —
+    per-shard output equals the per-shard oracle, for every K."""
+    rng = np.random.default_rng(77)
+    n, c = 48, 6
+    stacks = [_merge_case(rng, n, c) for _ in range(n_shards)]
+    ak = jnp.asarray(np.stack([s[0] for s in stacks]))
+    av = jnp.asarray(np.stack([s[1] for s in stacks]))
+    kp = jnp.asarray(np.stack([s[2] for s in stacks]))
+    bk = jnp.asarray(np.stack([s[3] for s in stacks]))
+    bv = jnp.asarray(np.stack([s[4] for s in stacks]))
+    bc = jnp.asarray(np.asarray([s[5] for s in stacks], np.int32))
+    mk, mv = merge_compact_sharded(ak, av, kp, bk, bv, bc)
+    for k in range(n_shards):
+        want = merge_compact_reference(*stacks[k])
+        np.testing.assert_array_equal(np.asarray(mk)[k], want[0])
+        np.testing.assert_array_equal(np.asarray(mv)[k], want[1])
+
+
+def test_merge_compact_empty_and_full_cases():
+    """Edge cases: empty B (pure compaction), empty A, everything
+    dropped, and a full-width merge (n_keep + b_count == N)."""
+    n, c = 16, 4
+    a_keys = np.full((n,), np.inf, np.float32)
+    a_vals = np.full((n,), np.inf, np.float32)
+    a_keys[:3] = [1.0, 5.0, 9.0]
+    a_vals[:3] = [10.0, 50.0, 90.0]
+    keep = np.zeros((n,), bool)
+    keep[:3] = [True, False, True]
+    b_keys = np.full((c,), np.inf, np.float32)
+    b_vals = np.full((c,), np.inf, np.float32)
+    b_keys[:2] = [2.0, 7.0]
+    b_vals[:2] = [20.0, 70.0]
+    for bc in (0, 2):
+        want = merge_compact_reference(a_keys, a_vals, keep, b_keys,
+                                       b_vals, bc)
+        got = merge_compact(jnp.asarray(a_keys), jnp.asarray(a_vals),
+                            jnp.asarray(keep), jnp.asarray(b_keys),
+                            jnp.asarray(b_vals), jnp.int32(bc))
+        np.testing.assert_array_equal(np.asarray(got[0]), want[0])
+        np.testing.assert_array_equal(np.asarray(got[1]), want[1])
+    # everything dropped + empty B → all-padding output
+    got = merge_compact(jnp.asarray(a_keys), jnp.asarray(a_vals),
+                        jnp.asarray(np.zeros((n,), bool)),
+                        jnp.asarray(b_keys), jnp.asarray(b_vals),
+                        jnp.int32(0))
+    assert np.all(np.isinf(np.asarray(got[0])))
+    assert np.all(np.isinf(np.asarray(got[1])))
+    # full-width merge: N kept + 0 new fills every slot
+    full_k = np.arange(n, dtype=np.float32)
+    full_v = np.arange(n, dtype=np.float32) * 2
+    got = merge_compact(jnp.asarray(full_k), jnp.asarray(full_v),
+                        jnp.asarray(np.ones((n,), bool)),
+                        jnp.asarray(np.full((c,), np.inf, np.float32)),
+                        jnp.asarray(np.full((c,), np.inf, np.float32)),
+                        jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(got[0]), full_k)
+    np.testing.assert_array_equal(np.asarray(got[1]), full_v)

@@ -323,3 +323,44 @@ def test_single_dispatch_per_slice():
         assert len(calls) == 3
     finally:
         sp.sharded_apply_batch = orig
+
+
+def test_overflow_refusal_atomic_across_slices():
+    """ISSUE 5 overflow audit: a refused OVERSIZED batch — multiple
+    c_max slices where only a LATER slice overflows — leaves the device
+    buffers and the host occupancy mirror bit-for-bit unchanged (no
+    partially-applied prefix), and the next legal apply succeeds."""
+    pq = ShardedBatchedPQ(8, c_max=4, n_shards=2, key_range=(0.0, 1.0))
+    pq.apply(0, [0.1, 0.2, 0.3])                  # shard 0 holds 3
+    before_a = np.asarray(pq.state.a).copy()
+    before_size = np.asarray(pq.state.size).copy()
+    before_ub = pq._sizes_ub.copy()
+    before_total = pq._total
+    # 8 inserts all routed to shard 0, sliced 4+4: the FIRST slice alone
+    # fits (3+4 ≤ 7 usable slots), the second overflows — before the
+    # atomic guard the first slice reached the device and stranded the
+    # mirror when the second slice refused
+    with pytest.raises(ValueError, match="capacity"):
+        pq.apply(0, [0.1 + 0.01 * i for i in range(8)])
+    assert np.array_equal(np.asarray(pq.state.a), before_a)
+    assert np.array_equal(np.asarray(pq.state.size), before_size)
+    assert np.array_equal(pq._sizes_ub, before_ub)
+    assert pq._total == before_total
+    # the next legal apply (shard 1 has room) succeeds and the queue
+    # still answers with the correct global order
+    assert pq.apply(0, [0.9]) == []
+    assert pq.apply(4, []) == [
+        np.float32(0.1), np.float32(0.2), np.float32(0.3),
+        np.float32(0.9)]
+
+
+def test_overflow_refusal_after_pending_async_results():
+    """The atomic pre-guard must stay correct when the mirror holds
+    upper bounds (unconsumed async results in flight)."""
+    pq = ShardedBatchedPQ(8, c_max=4, n_shards=2, key_range=(0.0, 1.0))
+    h = pq.apply_async(0, [0.1, 0.2])             # bounds, not exact
+    with pytest.raises(ValueError, match="capacity"):
+        pq.apply(0, [0.3, 0.31, 0.32, 0.33, 0.34, 0.35])
+    assert h.result() == []                       # consume → exact sizes
+    assert pq.apply(0, [0.3, 0.31, 0.32, 0.33, 0.34]) == []
+    assert len(pq) == 7

@@ -382,3 +382,104 @@ def test_watchdog_flags_outliers():
         assert not wd.check(0.1)
     assert wd.check(1.0)
     assert not wd.check(0.11)
+
+
+# ---------------------------------------------------------------------------
+# scheduler shutdown semantics (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+def test_close_races_late_submitter_no_hang():
+    """A submit racing close() either raises RuntimeError immediately or
+    returns a future that RESOLVES (served or failed) — no caller may
+    hang on a dead combiner loop, and every post-close submit raises."""
+    for trial in range(3):
+        sch = PCScheduler(lambda rows: [r + 1 for r in rows], max_batch=4)
+        accepted, rejected = [], []
+        stop = threading.Event()
+
+        def late_submitter():
+            i = 0
+            while not stop.is_set() and i < 500:
+                try:
+                    accepted.append((i, sch.submit_async(i)))
+                except RuntimeError:
+                    rejected.append(i)
+                i += 1
+
+        t = threading.Thread(target=late_submitter)
+        t.start()
+        time.sleep(0.005 * (trial + 1))
+        sch.close()
+        stop.set()
+        t.join(10)
+        assert not t.is_alive()
+        for i, f in accepted:
+            try:
+                assert f.result(timeout=5) == i + 1   # served on drain
+            except RuntimeError:
+                pass            # failed with the shutdown exception: fine
+        with pytest.raises(RuntimeError):
+            sch.submit_async(0)
+        with pytest.raises(RuntimeError):
+            sch.submit(0)
+
+
+def test_submit_onto_dead_combiner_raises_not_enqueues():
+    """If the combiner thread is gone, submit must raise immediately —
+    enqueueing would strand the future forever."""
+    sch = PCScheduler(lambda rows: rows, max_batch=4)
+    sch.close()
+    sch._closed = False          # simulate a dead loop without close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sch.submit_async(1)
+
+
+def test_close_fails_unserved_requests_instead_of_hanging():
+    """Requests the workers can no longer serve are drained WITH an
+    exception at close() — the caller gets RuntimeError, not a hang."""
+    from repro.serving.scheduler import BatchRequest, _Entry
+    from concurrent.futures import Future
+
+    sch = PCScheduler(lambda rows: rows, max_batch=4, use_pq=False)
+    sch.close()
+    # a request stranded after the workers stopped (dead-loop scenario)
+    ent = _Entry(BatchRequest(inputs=1), Future())
+    sch._pending.append(ent)
+    sch.close()                  # second close sweeps, not early-returns
+    with pytest.raises(RuntimeError, match="closed before"):
+        ent.future.result(timeout=5)
+
+
+def test_pq_overflow_refusal_keeps_resident_requests():
+    """ISSUE 5 overflow audit, scheduler side: a deadline-PQ occupancy
+    refusal fails ONLY the flood's futures — resident requests keep
+    their place (device PQ, table and lazy min-heap untouched thanks to
+    the PQ-side atomic guard) and are served by later passes."""
+    def slow_step(rows):
+        time.sleep(0.1)
+        return [r * 2 for r in rows]
+
+    sch = PCScheduler(slow_step, max_batch=2, rounds_cap=1,
+                      pq_capacity=8, n_shards=1, pipeline=False)
+    f0 = sch.submit_async(0, deadline=0.0)
+    time.sleep(0.02)             # let pass 1 start its slow step
+    stage1 = [sch.submit_async(i, deadline=float(i))
+              for i in range(1, 7)]      # 2 eliminated + 4 PQ residents
+    time.sleep(0.12)             # pass 2 publishes the residents
+    flood = [sch.submit_async(100 + i, deadline=100.0 + i)
+             for i in range(12)]         # overflows the 8-slot shard
+    failed = 0
+    for i, f in enumerate(flood):
+        try:
+            # a flood entry that slipped into an earlier (legal) pass is
+            # served normally; the rest fail with the refusal
+            assert f.result(timeout=10) == (100 + i) * 2
+        except ValueError as e:
+            assert "capacity" in str(e)
+            failed += 1
+    assert failed > 0            # the refusal surfaced on flood futures
+    assert f0.result(timeout=10) == 0
+    for i, f in enumerate(stage1, start=1):
+        assert f.result(timeout=10) == i * 2   # residents survived
+    assert sch.submit(50, deadline=0.0) == 100  # still serving
+    sch.close()
+    assert sch._peek_resident() is None         # heap fully drained
