@@ -35,7 +35,7 @@ from repro.core.device_graph import DeviceGraph
 from repro.core.dynamic_graph import DynamicGraph
 from repro.core.flat_combining import flat_combining
 from repro.core.locks import LockDS, RWLockDS
-from repro.core.read_opt import batched_read_optimized
+from repro.core.read_opt import adaptive_read_engine, batched_read_optimized
 
 from ._timing import measure
 from .common import save
@@ -45,7 +45,7 @@ from .common import save
 C_MAX = 16
 
 DEFAULT_IMPLS = ("PC host", "PC-K1", "PC-K4", "PC-K8",
-                 "PC-K4 nodonate", "PC-K4 pallas",
+                 "PC-K4 nodonate", "PC-K4 pallas", "PC-adaptive",
                  "Lock", "RW Lock", "FC")
 
 
@@ -68,6 +68,13 @@ def _make_impl(name, n_vertices, edge_capacity):
     if name == "PC host":
         g = DynamicGraph(n_vertices)
         return g, batched_read_optimized(g).execute
+    if name == "PC-adaptive":
+        # adaptive tier routing (DESIGN.md §14): host DynamicGraph vs the
+        # device-resident graph, routed per pass by the online cost model
+        eng = adaptive_read_engine(
+            _device_graph(n_vertices, edge_capacity, n_shards=4),
+            DynamicGraph(n_vertices), structure="graph")
+        return eng.adaptive_ds, eng.execute
     if name.startswith("PC-K"):
         key = name.split()
         K = int(key[0][len("PC-K"):])
@@ -135,6 +142,10 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                     g, ex = _make_impl(name, n_vertices, edge_capacity)
                     prepopulate(g)
                     warmup(g, ex, trees[0][0], P)
+                    td = getattr(g, "tier_decisions", None)
+                    if td is not None:  # count the timed window only
+                        for k in td:
+                            td[k] = 0
 
                     def body(tid, ex=ex):
                         r = np.random.default_rng(1000 + tid)
@@ -155,6 +166,8 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                     row = measure(P, ops, body, repeats=repeats)
                     row.update({"workload": wl, "read_pct": c,
                                 "threads": P, "impl": name})
+                    if td is not None:
+                        row["tier_decisions"] = dict(td)
                     results.append(row)
                     print(f"[graph] {wl} c={c}% P={P} {name:16s}"
                           f" {row['ops_per_s']:9.0f} ops/s "

@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core.batched_map import ShardedMap
 from repro.core.locks import LockDS
-from repro.core.pc_map import fc_map, pc_map
+from repro.core.pc_map import fc_map, pc_adaptive_map, pc_map
 from repro.core.seq_map import SequentialSortedMap
 
 from ._timing import measure
@@ -45,7 +45,7 @@ C_MAX = 16
 KEY_RANGE = (0.0, 1000.0)
 
 DEFAULT_IMPLS = ("FC host", "Lock", "PC-K1", "PC-K4", "PC-K8",
-                 "PC-K4 nodonate", "PC-K4 pallas")
+                 "PC-K4 nodonate", "PC-K4 pallas", "PC-adaptive")
 
 
 def _items(rng, n_keys):
@@ -58,10 +58,17 @@ def _items(rng, n_keys):
 
 
 def _make_impl(name, items, capacity):
+    """Returns the engine/wrapper object; call ``.execute`` on it."""
     if name == "FC host":
-        return fc_map(items).execute
+        return fc_map(items)
     if name == "Lock":
-        return LockDS(SequentialSortedMap(items)).execute
+        return LockDS(SequentialSortedMap(items))
+    if name == "PC-adaptive":
+        # adaptive tier routing (DESIGN.md §14): host mirror vs K-sharded
+        # device map, routed per combining pass by the online cost model
+        return pc_adaptive_map(shard_capacity(capacity, 4, c_max=C_MAX),
+                               c_max=C_MAX, n_shards=4,
+                               key_range=KEY_RANGE, items=items)
     if name.startswith("PC-K"):
         parts = name.split()
         K = int(parts[0][len("PC-K"):])
@@ -72,7 +79,7 @@ def _make_impl(name, items, capacity):
                        c_max=C_MAX, n_shards=K, key_range=KEY_RANGE,
                        items=items, use_pallas=flavor == "pallas",
                        donate=flavor != "nodonate")
-        return pc_map(m).execute
+        return pc_map(m)
     raise ValueError(f"unknown impl {name!r}")
 
 
@@ -102,8 +109,13 @@ def bench_map(n_keys=2000, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
                 # at most (repeats+2)·P·ops fresh keys on top of the S
                 # initial ones (+ the op-path warmup)
                 cap = n_keys + (repeats + 2) * P * ops + 2
-                ex = _make_impl(name, items, cap)
+                eng = _make_impl(name, items, cap)
+                ex = eng.execute
                 warmup(ex)
+                td = getattr(eng, "tier_decisions", None)
+                if td is not None:      # count the timed window only
+                    for k in td:
+                        td[k] = 0
 
                 def body(tid, ex=ex):
                     r = np.random.default_rng(1000 + tid)
@@ -140,6 +152,8 @@ def bench_map(n_keys=2000, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
                 row = measure(P, ops, body, repeats=repeats)
                 row.update({"read_pct": c, "threads": P, "impl": name,
                             "n_keys": n_keys})
+                if td is not None:
+                    row["tier_decisions"] = dict(td)
                 results.append(row)
                 print(f"[map] c={c}% P={P} {name:16s}"
                       f" {row['ops_per_s']:9.0f} ops/s "

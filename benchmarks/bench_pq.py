@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.batched_pq import BatchedPriorityQueue
 from repro.core.locks import LockDS
 from repro.core.pc_pq import (AsyncRoundsPQ, fc_priority_queue,
+                              pc_adaptive_priority_queue,
                               pc_priority_queue,
                               pc_sharded_priority_queue)
 from repro.core.seq_pq import SequentialHeap
@@ -141,14 +142,29 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                         ShardedBatchedPQ(cap_k, c_max=C_MAX, n_shards=K,
                                          values=init),
                         rounds_cap=rounds_cap)
-            return impls, rounds_impls
+            # adaptive tier routing (DESIGN.md §14): the online cost model
+            # picks host / eliminate / device per combining pass
+            adaptive = {"PC-adaptive": pc_adaptive_priority_queue(
+                ShardedBatchedPQ(shard_capacity(n_keys, 4), c_max=C_MAX,
+                                 n_shards=4, values=init))}
+            impls["PC-adaptive"] = adaptive["PC-adaptive"].execute
+            return impls, rounds_impls, adaptive
 
         for P in threads:
-            impls, rounds_impls = make_impls(P)
+            impls, rounds_impls, adaptive = make_impls(P)
             for name, ex in impls.items():
                 # warm the jit caches outside the timed window
                 ex("insert", 0.5)
                 ex("extract_min")
+                eng = adaptive.get(name)
+                if eng is not None:
+                    # complete the router's cold start outside the timed
+                    # window too (one device dispatch mid-row would
+                    # dominate these short windows), then count decisions
+                    # from the timed window only
+                    eng.prewarm()
+                    for k in eng.tier_decisions:
+                        eng.tier_decisions[k] = 0
                 vals = rng.uniform(0, value_range, ops).astype(np.float32)
 
                 def body(tid, ex=ex, vals=vals):
@@ -161,6 +177,8 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
 
                 row = measure(P, ops, body, repeats=repeats)
                 row.update({"impl": name, "size": S, "threads": P})
+                if eng is not None:
+                    row["tier_decisions"] = dict(eng.tier_decisions)
                 results.append(row)
                 print(f"[pq] S={S} P={P} {name:18s} "
                       f"{row['ops_per_s']:10.0f} ops/s "

@@ -9,9 +9,11 @@ when any parallel-combining row's median throughput dropped by more than
 Only device-tier ``PC*`` rows gate — the host-native calibration rows
 (FC/Lock, and the graph bench's ``PC host`` tier) track the runner's
 CPU, not this repo's hot path.  Rows whose recorded baseline IQR reaches
-their median are skipped as unstable (the gate would only measure
-container noise there — this PR's own trajectory entries document such
-cells).  Rows present in only one side (a new ablation, a renamed impl)
+their median are reported as ``UNSTABLE`` (with the comparison they
+would have made) and excluded from gating, plus a summary count — the
+gate would only measure container noise there, but the exclusion must be
+visible in the CI log, never silent.  Rows present in only one side (a
+new ablation, a renamed impl)
 are reported and skipped.  ``--warn-only`` turns failures into warnings
 — CI passes it on forks, whose runners have no comparable perf history.
 
@@ -82,24 +84,34 @@ def check(bench: str, threshold: float = 0.5, warn_only: bool = False,
           f"trajectory entry pr={traj[-1].get('pr')} "
           f"({len(base)} baseline rows)")
     failures = []
+    unstable = []
     for key, (old, old_iqr) in sorted(base.items()):
         got = fresh.get(key)
         if got is None:
             print(f"[perf-gate]   skip (no fresh row): {key}")
             continue
         new = got[0]
+        ratio = new / old if old > 0 else float("inf")
         if old_iqr is not None and old > 0 and old_iqr >= old:
             # baseline spread reaches the median: the cell measures
-            # container noise, not the hot path — don't gate on it
-            print(f"[perf-gate]   skip (unstable baseline, iqr "
-                  f"{old_iqr:.0f} >= median {old:.0f}): {key}")
+            # container noise, not the hot path — report it loudly as
+            # UNSTABLE (with the comparison it would have made) instead
+            # of silently dropping the row, so a gate that skips most of
+            # its cells is visible in the CI log
+            unstable.append(key)
+            print(f"[perf-gate]   UNSTABLE   {key}: {old:.0f} -> "
+                  f"{new:.0f} ops/s ({ratio:.2f}x) NOT GATED — baseline "
+                  f"iqr {old_iqr:.0f} >= median {old:.0f}")
             continue
-        ratio = new / old if old > 0 else float("inf")
         flag = "REGRESSION" if ratio < (1.0 - threshold) else "ok"
         print(f"[perf-gate]   {flag:10s} {key}: {old:.0f} -> {new:.0f} "
               f"ops/s ({ratio:.2f}x)")
         if flag == "REGRESSION":
             failures.append((key, old, new))
+    if unstable:
+        print(f"[perf-gate] note: {len(unstable)} row(s) UNSTABLE "
+              f"(baseline iqr >= median) — not gated; re-record the "
+              f"trajectory entry with more --repeats to restore them")
     for key in sorted(set(fresh) - set(base)):
         print(f"[perf-gate]   new row (no baseline): {key}")
     compared = len(set(fresh) & set(base))

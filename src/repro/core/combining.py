@@ -23,9 +23,10 @@ from __future__ import annotations
 import math
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 from enum import IntEnum
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 
 class Status(IntEnum):
@@ -239,6 +240,217 @@ def eliminate_pq_pairs(extracts: int, inserts: List[float],
     while e < extracts and e < len(vals) and vals[e] <= min_lb:
         e += 1
     return vals[:e], vals[e:], extracts - e
+
+
+# ---------------------------------------------------------------------------
+# Adaptive tier routing (DESIGN.md §14) — online cost model + router
+# ---------------------------------------------------------------------------
+# Execution tiers a combining pass can route a collected batch to.  Not
+# every structure offers all three: the PQ engine routes across all of
+# them, the read-optimized structures (map, graph) fuse their
+# elimination/dedup fast path INTO the device pass (DESIGN.md §12) and
+# route host vs device only.
+TIER_HOST = "host"            # sequential host mirror (seq_pq/seq_map/
+#                               dynamic_graph) — zero device dispatches
+TIER_ELIMINATE = "eliminate"  # host elimination pre-pass, survivors to
+#                               the device rounds path
+TIER_DEVICE = "device"        # fused device rounds path, no pre-pass
+
+ALL_TIERS = (TIER_HOST, TIER_ELIMINATE, TIER_DEVICE)
+
+
+class CostModel:
+    """Online per-tier dispatch-cost model (DESIGN.md §14).
+
+    Keeps an EWMA of the measured **seconds per operation** keyed by
+    ``(structure, tier, batch-width bucket, read-fraction bucket)`` — the
+    features the bench trajectories show the host/device crossover
+    depends on (FC host map ~10-23k ops/s vs PC ~200-700 on small
+    batches; the fused PQ rounds path 14x ahead on wide ones).  Width
+    buckets are pow2 (a 3-op and a 4-op pass share a bucket, a 64-op
+    pass does not) and the read fraction quantizes to quartiles, so a
+    handful of passes is enough to cover a regime while distinct regimes
+    never share a cell.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = float(alpha)
+        self._ewma: Dict[tuple, float] = {}
+        self._n: Dict[tuple, int] = {}
+
+    @staticmethod
+    def width_bucket(width: int) -> int:
+        """pow2 bucket index: 1→0, 2→1, 3-4→2, 5-8→3, ..."""
+        return max(0, (max(1, int(width)) - 1).bit_length())
+
+    @staticmethod
+    def read_bucket(read_frac: float) -> int:
+        """Quartile bucket 0..4 of the pass's read share."""
+        return int(round(4.0 * min(max(float(read_frac), 0.0), 1.0)))
+
+    def key(self, structure: str, tier: str, width: int,
+            read_frac: float) -> tuple:
+        return (structure, tier, self.width_bucket(width),
+                self.read_bucket(read_frac))
+
+    def observe(self, key: tuple, seconds: float, n_ops: int = 1) -> None:
+        """Fold one measured pass (``seconds`` over ``n_ops`` ops) into
+        the tier's EWMA.  Per-op normalization makes samples from
+        different widths inside one bucket comparable."""
+        per_op = max(0.0, float(seconds)) / max(1, int(n_ops))
+        old = self._ewma.get(key)
+        self._ewma[key] = per_op if old is None else (
+            (1.0 - self.alpha) * old + self.alpha * per_op)
+        self._n[key] = self._n.get(key, 0) + 1
+
+    def cost(self, key: tuple) -> Optional[float]:
+        return self._ewma.get(key)
+
+    def samples(self, key: tuple) -> int:
+        return self._n.get(key, 0)
+
+
+class TierRouter:
+    """Per-pass tier decision over a shared :class:`CostModel`.
+
+    The decision rule per (width-bucket, read-bucket) context:
+
+    * **cold start** — while any tier has fewer than ``explore_min``
+      samples in this context, pick the least-sampled such tier: every
+      tier is measured before any is trusted (exploration before
+      exploitation).
+    * **exploit** — pick the tier with the lowest EWMA per-op cost, with
+      **hysteresis**: an incumbent is only displaced when the challenger
+      is at least ``hysteresis`` (default 25%) cheaper, so a single
+      noisy sample (already damped by the EWMA) cannot flap the route.
+    * **re-exploration** (optional, ``explore_every=N``) — every Nth
+      decision in a context samples a non-incumbent tier round-robin so
+      a regime shift in a beaten tier is eventually re-measured.  Off by
+      default: distinct workload regimes land in distinct (width, read)
+      contexts and get their own cold start, and the incumbent's EWMA
+      stays live — degradation past the frozen challenger cost still
+      switches.
+
+    ``force`` pins every decision to one tier (the ``--tier`` serving
+    override / the static bench rows).  ``tier_decisions`` counts the
+    decisions per tier — benches and tests assert convergence on it.
+    The ``clock`` is injectable so tests drive the model with fake
+    latencies deterministically.
+    """
+
+    def __init__(self, structure: str, tiers: Sequence[str] = ALL_TIERS,
+                 *, model: Optional[CostModel] = None,
+                 force: Optional[str] = None, hysteresis: float = 0.25,
+                 explore_min: int = 2, explore_every: int = 0,
+                 clock: Callable[[], float] = time.perf_counter):
+        if not tiers:
+            raise ValueError("need at least one tier")
+        if force is not None and force not in tiers:
+            raise ValueError(f"forced tier {force!r} not in {tiers}")
+        if not 0.0 <= hysteresis < 1.0:
+            raise ValueError("hysteresis must be in [0, 1)")
+        self.structure = structure
+        self.tiers = tuple(tiers)
+        self.model = model or CostModel()
+        self.force = force
+        self.hysteresis = float(hysteresis)
+        self.explore_min = max(1, int(explore_min))
+        self.explore_every = max(0, int(explore_every))
+        self.clock = clock
+        self.tier_decisions: Dict[str, int] = {t: 0 for t in self.tiers}
+        self._incumbent: Dict[tuple, str] = {}
+        self._n_choices: Dict[tuple, int] = {}
+        self._explore_rr: Dict[tuple, int] = {}
+        # hot-path caches: the decision runs once per combining pass, in
+        # series with the pass itself — µs here are throughput on the
+        # host tier.  _ctx_keys memoizes the model keys per context;
+        # _warm marks contexts whose cold start completed (sample counts
+        # only grow, so warmth never needs invalidation).
+        self._ctx_keys: Dict[tuple, Dict[str, tuple]] = {}
+        self._warm: set = set()
+
+    # -- decision ----------------------------------------------------------
+    def _ctx(self, width: int, read_frac: float) -> tuple:
+        return (self.model.width_bucket(width),
+                self.model.read_bucket(read_frac))
+
+    def _key(self, tier: str, width: int, read_frac: float) -> tuple:
+        return self.model.key(self.structure, tier, width, read_frac)
+
+    def choose(self, width: int, read_frac: float = 0.0) -> str:
+        """Pick the execution tier for one collected batch."""
+        if self.force is not None:
+            tier = self.force
+        else:
+            tier = self._choose_auto(width, read_frac)
+        self.tier_decisions[tier] += 1
+        return tier
+
+    def _choose_auto(self, width: int, read_frac: float) -> str:
+        model, ctx = self.model, self._ctx(width, read_frac)
+        keys = self._ctx_keys.get(ctx)
+        if keys is None:
+            keys = {t: self._key(t, width, read_frac) for t in self.tiers}
+            self._ctx_keys[ctx] = keys
+        n = self._n_choices.get(ctx, 0)
+        self._n_choices[ctx] = n + 1
+        if ctx not in self._warm:
+            # cold start: least-sampled under-explored tier first; tier
+            # order breaks ties deterministically (strict < keeps the
+            # earliest tier on equal sample counts)
+            samples = model._n
+            cold_t, cold_s = None, self.explore_min
+            for t in self.tiers:
+                s = samples.get(keys[t], 0)
+                if s < cold_s:
+                    cold_t, cold_s = t, s
+            if cold_t is not None:
+                return cold_t
+            self._warm.add(ctx)
+        incumbent = self._incumbent.get(ctx)
+        if (self.explore_every and incumbent is not None
+                and len(self.tiers) > 1
+                and (n + 1) % self.explore_every == 0):
+            # scheduled re-exploration: round-robin over the beaten tiers
+            # WITHOUT dethroning the incumbent
+            others = [t for t in self.tiers if t != incumbent]
+            i = self._explore_rr.get(ctx, 0)
+            self._explore_rr[ctx] = i + 1
+            return others[i % len(others)]
+        ewma = model._ewma
+        best, best_c = None, math.inf
+        for t in self.tiers:        # first-tier wins ties, as before
+            c = ewma.get(keys[t])
+            if c is not None and c < best_c:
+                best, best_c = t, c
+        if best is None:
+            best = self.tiers[0]    # no samples at all (observe-free use)
+        elif incumbent is not None and best != incumbent:
+            inc_c = ewma.get(keys[incumbent])
+            inc_c = math.inf if inc_c is None else inc_c
+            if best_c >= (1.0 - self.hysteresis) * inc_c:
+                best = incumbent      # inside the hysteresis band
+        self._incumbent[ctx] = best
+        return best
+
+    # -- measurement -------------------------------------------------------
+    def observe(self, tier: str, width: int, read_frac: float,
+                seconds: float, n_ops: Optional[int] = None) -> None:
+        """Feed one measured pass back into the cost model."""
+        self.model.observe(self._key(tier, width, read_frac), seconds,
+                           n_ops if n_ops is not None else width)
+
+    @contextmanager
+    def timed(self, tier: str, width: int, read_frac: float = 0.0,
+              n_ops: Optional[int] = None):
+        """Context manager measuring a pass with the injected clock."""
+        t0 = self.clock()
+        try:
+            yield
+        finally:
+            self.observe(tier, width, read_frac, self.clock() - t0, n_ops)
 
 
 def track_pq_batch(track: dict, res: List, ne: int,

@@ -17,9 +17,9 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 from .batched_map import ShardedMap
-from .combining import ParallelCombiner
+from .combining import ParallelCombiner, TierRouter
 from .flat_combining import flat_combining
-from .read_opt import batched_read_optimized
+from .read_opt import adaptive_read_engine, batched_read_optimized
 from .seq_map import SequentialSortedMap
 
 
@@ -41,6 +41,24 @@ def pc_sharded_map(capacity: int, c_max: int, n_shards: int = 4,
     return pc_map(ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
                              key_range=key_range, items=items,
                              use_pallas=use_pallas, donate=donate), **kw)
+
+
+def pc_adaptive_map(capacity: int, c_max: int, n_shards: int = 4,
+                    key_range: Optional[Tuple[float, float]] = None,
+                    items=None, use_pallas: bool = False,
+                    donate: bool = True, tier: str = "auto",
+                    router: Optional[TierRouter] = None,
+                    **kw) -> ParallelCombiner:
+    """Adaptive-tier map engine (DESIGN.md §14): the K-sharded device map
+    plus a ``SequentialSortedMap`` host mirror behind the tier router —
+    per pass, the §3.3 combiner routes to whichever tier the online cost
+    model says is cheaper (``tier`` pins a static override)."""
+    m = ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
+                   key_range=key_range, items=items,
+                   use_pallas=use_pallas, donate=donate)
+    return adaptive_read_engine(m, SequentialSortedMap(m.items()),
+                                structure="map", tier=tier, router=router,
+                                **kw)
 
 
 def fc_map(items=None, **kw) -> ParallelCombiner:

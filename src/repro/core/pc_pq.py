@@ -22,13 +22,17 @@ kept only as an optional policy knob.
 """
 from __future__ import annotations
 
+import contextlib
 import math
-from typing import List, Union
+from collections import Counter
+from typing import List, Optional, Union
 
 import numpy as np
 
 from .batched_pq import BatchedPriorityQueue
-from .combining import (ParallelCombiner, Request, Status,
+from .combining import (ALL_TIERS, TIER_DEVICE, TIER_ELIMINATE, TIER_HOST,
+                        CostModel,
+                        ParallelCombiner, Request, Status, TierRouter,
                         eliminate_pq_pairs, track_pq_batch)
 from .seq_pq import SequentialHeap
 from .sharded_pq import ShardedBatchedPQ, host_key
@@ -271,6 +275,225 @@ class AsyncRoundsPQ:
             for f, v in zip(fs, res):
                 if not f.done():
                     f.set_result(v)
+
+
+class AdaptivePQ:
+    """Tier-routed batched PQ (DESIGN.md §14): same strict batch contract
+    as the device engines (``apply(ne, ins)`` — extracts observe the
+    pre-batch multiset, then inserts land), executable on either tier.
+
+    * **host** — served from an eager :class:`SequentialHeap` mirror;
+      the device falls behind, tracked as a multiset snapshot of its
+      last-synced content (``_dev_content``).
+    * **device** — one NET-EFFECT sync round plus the current batch fuse
+      into ONE ``apply_rounds`` dispatch.  The sync round is exact, not
+      a heuristic: a host window only ever extracts the CURRENT global
+      minimum, so the old-content elements it removes are always a
+      prefix of the sorted old content — any run of host windows
+      therefore nets to ``(ne=|old∖new|, ins=new∖old)`` under the
+      extracts-first batch contract.  Sync cost is O(churn), not
+      O(windows served): a thousand host passes cost the same one round
+      as ten (the PQ twin of the map/graph dedup-chain compaction).
+
+    The mirror is *eager*: every apply updates it, so ``min_key()`` is the
+    EXACT current minimum at zero device syncs — the elimination pre-pass
+    upgrade over the conservative ``track_pq_batch`` bound.  ``values()``
+    flushes the log and reads the DEVICE, so differential tests compare
+    real device state, not the mirror answering for itself.
+
+    Elimination is not expressible under this batch contract (it answers
+    extracts with the batch's own inserts — a different, engine-level-only
+    linearization), so a routed ``eliminate`` tier coerces to device here;
+    the engine-level combiner (:func:`pc_adaptive_priority_queue`) owns
+    that tier.
+    """
+
+    def __init__(self, pq: AnyBatchedPQ, *, router: TierRouter = None):
+        self.pq = pq
+        self.c_max = pq.c_max
+        self.router = router or TierRouter(
+            "pq", tiers=(TIER_HOST, TIER_DEVICE))
+        self._mirror = SequentialHeap()
+        for v in pq.values():       # one sync at construction, like track
+            self._mirror.insert(v)
+        # device multiset at the last sync; None ⇔ device == mirror
+        self._dev_content: Optional[List[float]] = None
+        self.flushes = 0
+        self.absorbed = 0       # host windows folded into sync rounds
+
+    def __len__(self) -> int:
+        return len(self._mirror)
+
+    def min_key(self) -> float:
+        """Exact current minimum (host mirror; no device sync)."""
+        return self._mirror.a[1] if self._mirror.size else math.inf
+
+    def _sync_rounds(self):
+        """Net-effect rounds taking the device from its last-synced
+        content to the current mirror (see class docstring for why the
+        prefix property makes this exact).  Extracts and inserts go in
+        SEPARATE rounds: ``expand_rounds`` slices an oversized round
+        with extracts and inserts advancing together, so a fused
+        ``(ne, ins)`` round would let a later slice's extracts consume
+        the sync's own inserts — pure rounds slice into pure rows and
+        the all-extracts-then-all-inserts order survives any width."""
+        dev = Counter(self._dev_content)
+        mir = Counter(self._mirror.a[1:])
+        ne = sum((dev - mir).values())
+        ins = [k for k, c in (mir - dev).items() for _ in range(c)]
+        return ([(ne, [])] if ne else []) + ([(0, ins)] if ins else [])
+
+    def _flush(self):
+        """Bring the device current with ONE net-effect dispatch.  An
+        occupancy refusal is atomic, so the snapshot survives a raise."""
+        if self._dev_content is not None:
+            sync = self._sync_rounds()
+            if sync:
+                self.pq.apply_rounds(sync)          # raises → kept
+            self._dev_content = None
+            self.flushes += 1
+
+    def values(self):
+        self._flush()
+        return self.pq.values()
+
+    def apply(self, ne: int, ins, tier: str = None, observe: bool = None):
+        """Batch apply, routed.  ``tier=None`` asks the router (and times
+        the pass); an explicit tier is an external decision — the caller
+        owns timing unless it passes ``observe=True``."""
+        ins = [_quantize_key(v) for v in ins]
+        width = ne + len(ins)
+        if width == 0:
+            return []
+        if tier is None:
+            tier = self.router.choose(width)
+            if observe is None:
+                observe = True
+        if tier == TIER_ELIMINATE:
+            tier = TIER_DEVICE          # see class docstring
+        ctx = (self.router.timed(tier, width) if observe
+               else contextlib.nullcontext())
+        with ctx:
+            if tier == TIER_HOST:
+                if self._dev_content is None:
+                    # first host window since sync: device == mirror, so
+                    # snapshot the shared content BEFORE diverging
+                    self._dev_content = list(self._mirror.a[1:])
+                res = [self._mirror.extract_min() for _ in range(ne)]
+                for v in ins:
+                    self._mirror.insert(v)
+                self.absorbed += 1
+                return res
+            rounds = [(ne, list(ins))]
+            if self._dev_content is not None:
+                rounds = self._sync_rounds() + rounds
+            out = self.pq.apply_rounds(rounds)    # raises → state unchanged
+            if self._dev_content is not None:
+                self._dev_content = None
+                self.flushes += 1
+            for _ in range(ne):                   # keep the mirror eager
+                self._mirror.extract_min()
+            for v in ins:
+                self._mirror.insert(v)
+            return out[-1]
+
+    @property
+    def tier_decisions(self):
+        return self.router.tier_decisions
+
+
+def pc_adaptive_priority_queue(pq: AnyBatchedPQ, *, tier: str = "auto",
+                               router: TierRouter = None,
+                               **kw) -> ParallelCombiner:
+    """Adaptive-tier parallel-combining PQ engine (DESIGN.md §14).
+
+    Per combining pass the router picks host / eliminate / device; the
+    whole pass (including any flush it triggers) is timed under the chosen
+    tier so switching costs are charged to the tier that incurs them.
+    ``tier`` pins a static tier (the ``--tier`` override); ``auto`` routes.
+
+    The eliminate tier reuses the §12 pre-pass but against the mirror's
+    EXACT minimum (not the conservative tracked bound), so every provably
+    eliminable pair is caught; survivors take the device path inside the
+    same timed window.
+    """
+    force = None if tier in (None, "auto") else str(tier)
+    if router is None:
+        router = TierRouter("pq", ALL_TIERS, force=force)
+    apq = pq if isinstance(pq, AdaptivePQ) else AdaptivePQ(pq, router=router)
+
+    def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
+        extracts = [r for r in requests if r.method == "extract_min"]
+        inserts = [r for r in requests if r.method == "insert"]
+        ins_vals = [_quantize_key(r.input) for r in inserts]
+        width = len(requests)
+        t = router.choose(width, 0.0)
+        with router.timed(t, width, 0.0, n_ops=max(1, width)):
+            if t == TIER_ELIMINATE:
+                served, rest_ins, rest_ne = eliminate_pq_pairs(
+                    len(extracts), ins_vals, apq.min_key())
+                engine.eliminated += len(served)
+                for r, v in zip(extracts, served):
+                    r.res = v
+                    r.status = Status.FINISHED
+                res = apq.apply(rest_ne, rest_ins, tier=TIER_DEVICE)
+                rest_extracts = extracts[len(served):]
+            else:
+                res = apq.apply(len(extracts), ins_vals, tier=t)
+                rest_extracts = extracts
+            for r, v in zip(rest_extracts, res):
+                r.res = v
+                r.status = Status.FINISHED
+            for r in inserts:
+                r.res = None
+                r.status = Status.FINISHED
+
+    def client_code(engine: ParallelCombiner, r: Request) -> None:
+        return
+
+    def prewarm(widths=(1, 2, 4, 8, 16)):
+        """Complete the router's cold start (and the jit warmup) for
+        every width bucket before the measured/served workload.
+
+        Cold-start probes are one-time costs, but they surface WHEREVER
+        a context first occurs — possibly mid-run, where one device
+        dispatch can dominate a short measurement window.  This runs the
+        ``explore_min`` probes per (tier, width bucket) eagerly, using
+        net-zero op pairs: insert ``w`` keys at/below the current min,
+        then extract ``w`` — the multiset is unchanged (ties extract an
+        equal key), every tier's real path runs, and the model sees a
+        representative per-op dispatch cost.  No-op when already warm
+        (sample counts persist), so calling it twice is free."""
+        lk = apq.min_key()
+        low = _quantize_key(lk - 1.0) if math.isfinite(lk) else 0.0
+        seen = set()
+        for w in widths:
+            w = max(1, min(int(w), apq.c_max))
+            b = CostModel.width_bucket(w)
+            if b in seen:
+                continue
+            seen.add(b)
+            lows = [low] * w
+            for t in router.tiers:
+                key = router.model.key("pq", t, w, 0.0)
+                while router.model.samples(key) < router.explore_min:
+                    if t == TIER_ELIMINATE:
+                        with router.timed(t, w, 0.0, n_ops=2 * w):
+                            eliminate_pq_pairs(w, lows, apq.min_key())
+                            apq.apply(0, lows, tier=TIER_DEVICE)
+                            apq.apply(w, [], tier=TIER_DEVICE)
+                    else:
+                        with router.timed(t, w, 0.0, n_ops=2 * w):
+                            apq.apply(0, lows, tier=t)
+                            apq.apply(w, [], tier=t)
+
+    engine = ParallelCombiner(combiner_code, client_code, **kw)
+    engine.eliminated = 0
+    engine.router = router
+    engine.tier_decisions = router.tier_decisions
+    engine.adaptive_pq = apq
+    engine.prewarm = prewarm
+    return engine
 
 
 def pc_sharded_priority_queue(capacity: int, c_max: int,

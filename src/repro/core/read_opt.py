@@ -20,9 +20,12 @@ Two realizations:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Protocol, Sequence, Set
+import contextlib
+from typing import Any, Callable, List, Optional, Protocol, Sequence, Set, Tuple
 
-from .combining import ParallelCombiner, Request, RequestFailure, Status
+from .combining import (TIER_DEVICE, TIER_ELIMINATE, TIER_HOST,
+                        ParallelCombiner, Request, RequestFailure, Status,
+                        TierRouter)
 
 
 class ReadWriteDS(Protocol):
@@ -92,6 +95,12 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
     def combiner_code(engine: ParallelCombiner, requests: List[Request]) -> None:
         updates = [r for r in requests if is_update(r.method)]
         reads = [r for r in requests if not is_update(r.method)]
+        # adaptive tier hook (DESIGN.md §14): one routing decision — and
+        # one cost-model observation — covers the WHOLE pass, so flush
+        # costs are charged to the tier that triggered them
+        pin = getattr(ds, "pin_tier", None)
+        if pin is not None:
+            pin(len(updates), len(reads))
         handle = None
         try:
             if updates and hasattr(ds, "update_batch_async"):
@@ -130,6 +139,9 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
                 if r.status != Status.FINISHED:
                     r.res = RequestFailure(exc)
                     r.status = Status.FINISHED
+        finally:
+            if pin is not None:
+                ds.release_tier()
 
     def client_code(engine: ParallelCombiner, r: Request) -> None:
         return  # lanes did the work; nothing left for the thread
@@ -139,3 +151,280 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
 
 # canonical name for the TPU-native tier (see module docstring)
 BatchedReadOptimized = batched_read_optimized
+
+
+# ---------------------------------------------------------------------------
+# Adaptive tier routing (DESIGN.md §14): host mirror + lazy two-log sync
+# ---------------------------------------------------------------------------
+class _DoneHandle:
+    """Host-served update results behind the async-handle interface."""
+
+    def __init__(self, res: List[Any]):
+        self._res = res
+
+    def result(self) -> List[Any]:
+        return self._res
+
+
+class _TailHandle:
+    """Skips the prepended flush ops of a fused device dispatch."""
+
+    def __init__(self, handle, skip: int):
+        self._handle, self._skip = handle, skip
+
+    def result(self) -> List[Any]:
+        return self._handle.result()[self._skip:]
+
+
+def _canon_map_op(method: str, input: Any) -> Any:
+    """The exact f32 images the device map stores (DESIGN.md §7) — both
+    tiers must see THEM, or a raw-f64 key would make routing semantic:
+    the host mirror would store a key the device tier can't find."""
+    import numpy as np
+
+    from .sharded_pq import host_key
+
+    def q(x: float) -> float:
+        return host_key(float(np.float32(x)))
+
+    if method in ("insert", "assign"):
+        k, v = input
+        return (q(k), float(np.float32(v)))
+    if method in ("delete", "lookup"):
+        return q(input)
+    if method in ("range_count", "range_sum"):
+        lo, hi = input
+        return (q(lo), q(hi))
+    return input                     # kth_smallest: integer rank
+
+
+class AdaptiveReadWrite:
+    """Tier-routed read/write structure (DESIGN.md §14): a device-resident
+    structure and a host mirror behind ONE ``apply``/``update_batch``/
+    ``read_batch`` facade, with the router picking the executing tier per
+    call (or per combining pass, via the :meth:`pin_tier` hook
+    ``batched_read_optimized`` drives).
+
+    Correctness is the lazy two-log sync: ``_dev_log`` holds ops the host
+    served that the device has not seen, ``_host_log`` the reverse — at
+    most one is ever non-empty.  A tier first replays the log that would
+    make it stale (the device replay FUSES into the tier's own dispatch),
+    so any per-call routing sequence observes one linearized history.
+    Routing is a performance decision, never a semantic one.
+
+    The device replay is compacted first — the dedup-chain elimination
+    tier of DESIGN.md §14: the replay only has to reproduce the final
+    state per touched key (per-op results were already answered by the
+    mirror), which the mirror knows exactly, so arbitrary-length
+    same-key chains collapse to ≤ 2 canonical ops (``eliminated_ops``
+    counts the savings).
+
+    ``host_ds`` must start state-equal to ``device_ds`` (the factories
+    below guarantee it).
+    """
+
+    def __init__(self, device_ds, host_ds, *,
+                 router: Optional[TierRouter] = None,
+                 structure: Optional[str] = None):
+        self.device = device_ds
+        self.host = host_ds
+        self.read_only: Set[str] = set(device_ds.read_only)
+        if structure is None:
+            structure = "map" if hasattr(host_ds, "lookup") else "graph"
+        self._canon = (_canon_map_op if hasattr(host_ds, "lookup")
+                       else lambda m, i: i)
+        self.router = router or TierRouter(
+            structure, (TIER_HOST, TIER_DEVICE))
+        self._dev_log: List[Tuple[str, Any]] = []   # device missed these
+        self._host_log: List[Tuple[str, Any]] = []  # host missed these
+        self._pin = None            # (tier, width, read_frac, t0)
+        self.flushes = 0            # device replays dispatched
+        self.eliminated_ops = 0     # ops removed by dedup-chain compaction
+
+    @property
+    def tier_decisions(self):
+        return self.router.tier_decisions
+
+    # -- routing -------------------------------------------------------------
+    def _choose(self, width: int, read_frac: float) -> str:
+        t = self.router.choose(width, read_frac)
+        # elimination is not a standalone tier here: dedup chains ride the
+        # host tier's compacted log flush (class docstring)
+        return TIER_HOST if t == TIER_ELIMINATE else t
+
+    def pin_tier(self, n_upd: int, n_read: int) -> str:
+        """Route a whole combining pass with ONE decision; the matching
+        :meth:`release_tier` records its cost under that decision."""
+        width = max(1, int(n_upd) + int(n_read))
+        read_frac = n_read / width
+        tier = self._choose(width, read_frac)
+        self._pin = (tier, width, read_frac, self.router.clock())
+        return tier
+
+    def release_tier(self) -> None:
+        if self._pin is None:
+            return
+        tier, width, read_frac, t0 = self._pin
+        self._pin = None
+        self.router.observe(tier, width, read_frac,
+                            self.router.clock() - t0, n_ops=width)
+
+    def _tier_for(self, width: int, read_frac: float):
+        if self._pin is not None:       # pass-level decision + timing
+            return self._pin[0], contextlib.nullcontext()
+        t = self._choose(width, read_frac)
+        return t, self.router.timed(t, width, read_frac)
+
+    # -- log sync ------------------------------------------------------------
+    def _replay_host(self) -> None:
+        if self._host_log:
+            log, self._host_log = self._host_log, []
+            for m, i in log:            # results discarded: device answered
+                self.host.apply(m, i)
+
+    def _compact(self, log: List[Tuple[str, Any]]) -> List[Tuple[str, Any]]:
+        """Collapse same-key chains to the final mirror state per key."""
+        if hasattr(self.host, "lookup"):        # ordered map
+            chains: dict = {}                   # key → ops, first-seen order
+            for m, i in log:
+                k = i if m == "delete" else i[0]
+                chains.setdefault(k, []).append((m, i))
+            out: List[Tuple[str, Any]] = []
+            for k, chain in chains.items():
+                if len(chain) == 1:             # nothing to collapse
+                    out.extend(chain)
+                    continue
+                v = self.host.lookup(k)
+                if v is None:
+                    out.append(("delete", k))   # no-op when never present
+                else:
+                    # upsert as insert-then-assign (covers both presences)
+                    out.append(("insert", (k, v)))
+                    out.append(("assign", (k, v)))
+            return out
+        # graph: the LAST op per edge class alone decides final presence
+        last = {}
+        for m, (u, v) in log:
+            last[(min(u, v), max(u, v))] = (m, (u, v))
+        return list(last.values())
+
+    def _flush_device(self) -> None:
+        """Replay (compacted) host-served ops on the device.  The handle
+        is dropped on purpose: results were already answered host-side,
+        and the masks ride the next read pass's blocking fetch."""
+        if not self._dev_log:
+            return
+        ops = self._compact(self._dev_log)
+        self.device.update_batch_async([m for m, _ in ops],
+                                       [i for _, i in ops])
+        self.eliminated_ops += len(self._dev_log) - len(ops)
+        self._dev_log = []
+        self.flushes += 1
+
+    # -- structure facade ----------------------------------------------------
+    def update_batch_async(self, methods: Sequence[str],
+                           inputs: Sequence[Any]):
+        inputs = [self._canon(m, i) for m, i in zip(methods, inputs)]
+        tier, ctx = self._tier_for(len(methods), 0.0)
+        with ctx:
+            if tier == TIER_HOST:
+                self._replay_host()
+                res = [self.host.apply(m, i)
+                       for m, i in zip(methods, inputs)]
+                self._dev_log.extend(zip(methods, inputs))
+                return _DoneHandle(res)
+            # device: the pending replay fuses into THIS dispatch
+            pend = self._compact(self._dev_log)
+            handle = self.device.update_batch_async(
+                [m for m, _ in pend] + list(methods),
+                [i for _, i in pend] + list(inputs))
+            if self._dev_log:
+                self.eliminated_ops += len(self._dev_log) - len(pend)
+                self._dev_log = []
+                self.flushes += 1
+            self._host_log.extend(zip(methods, inputs))
+            return _TailHandle(handle, len(pend))
+
+    def update_batch(self, methods: Sequence[str],
+                     inputs: Sequence[Any]) -> List[Any]:
+        return self.update_batch_async(methods, inputs).result()
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        inputs = [self._canon(m, i) for m, i in zip(methods, inputs)]
+        tier, ctx = self._tier_for(len(methods), 1.0)
+        with ctx:
+            if tier == TIER_HOST:
+                self._replay_host()
+                return self.host.read_batch(methods, inputs)
+            self._flush_device()
+            return self.device.read_batch(methods, inputs)
+
+    def apply(self, method: str, input: Any = None) -> Any:
+        if method in self.read_only:
+            return self.read_batch([method], [input])[0]
+        return self.update_batch([method], [input])[0]
+
+    # -- per-op conveniences (lock/FC wrappers, fuzz machines) ---------------
+    def insert(self, *a) -> Any:
+        return self.apply("insert", a[0] if len(a) == 1 else tuple(a))
+
+    def delete(self, *a) -> Any:
+        return self.apply("delete", a[0] if len(a) == 1 else tuple(a))
+
+    def connected(self, u: int, v: int) -> bool:
+        return self.apply("connected", (u, v))
+
+    def lookup(self, key: float) -> Any:
+        return self.apply("lookup", key)
+
+    # -- whole-state views (flush first so the DEVICE answers) ---------------
+    def items(self):
+        self._flush_device()
+        return self.device.items()
+
+    def edges(self):
+        self._flush_device()
+        return self.device.edges()
+
+
+def adaptive_read_engine(device_ds, host_ds, *, structure: str,
+                         tier: str = "auto",
+                         router: Optional[TierRouter] = None,
+                         **kw) -> ParallelCombiner:
+    """§3.3 batched-read combining over a tier-routed structure.
+
+    ``tier`` pins a static tier (``auto`` routes; ``eliminate`` coerces
+    to host, whose log flush carries the dedup-chain elimination)."""
+    force = None if tier in (None, "auto") else str(tier)
+    if force == TIER_ELIMINATE:
+        force = TIER_HOST
+    if router is None:
+        router = TierRouter(structure, (TIER_HOST, TIER_DEVICE),
+                            force=force)
+    ads = AdaptiveReadWrite(device_ds, host_ds, router=router,
+                            structure=structure)
+    engine = batched_read_optimized(ads, **kw)
+    engine.router = router
+    engine.tier_decisions = router.tier_decisions
+    engine.adaptive_ds = ads
+    return engine
+
+
+def pc_adaptive_graph(n_vertices: int, *, edge_capacity: int = 4096,
+                      c_max: int = 64, n_shards: int = 1,
+                      use_pallas: bool = False, donate: bool = True,
+                      tier: str = "auto",
+                      router: Optional[TierRouter] = None,
+                      **kw) -> ParallelCombiner:
+    """Adaptive-tier dynamic-graph engine: ``DeviceGraph`` device tier,
+    ``DynamicGraph`` host tier, both starting empty (state-equal)."""
+    from .device_graph import DeviceGraph
+    from .dynamic_graph import DynamicGraph
+
+    return adaptive_read_engine(
+        DeviceGraph(n_vertices, edge_capacity=edge_capacity, c_max=c_max,
+                    n_shards=n_shards, use_pallas=use_pallas,
+                    donate=donate),
+        DynamicGraph(n_vertices), structure="graph", tier=tier,
+        router=router, **kw)

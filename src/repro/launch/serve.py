@@ -192,7 +192,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 workload: str = "decode", read_pct: int = 90,
                 n_vertices: int = 512,
                 graph_use_pallas: bool = False,
-                rounds_cap: int = 4) -> Dict[str, Any]:
+                rounds_cap: int = 4,
+                tier: str = "eliminate") -> Dict[str, Any]:
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
     ``scheduler``: "serial" (one dispatch per request), "pc" (async
@@ -215,6 +216,12 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     "pc-nodonate" un-donates its passes and "pc-pallas" routes label
     rebuilds / merge-compacts through the shard-grid kernels
     (DESIGN.md §11, §13).
+
+    ``tier``: ordering-tier override for the PC schedulers
+    (DESIGN.md §14) — ``eliminate`` (default, the static pre-§14
+    behavior), ``host``, ``device``, or ``auto`` (the online cost model
+    routes each ordering pass; decisions land in the returned
+    ``tier_decisions``).
     """
     rng = np.random.default_rng(seed)
     if workload == "map":
@@ -288,7 +295,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         sch = PCScheduler(ex, max_batch=max_batch, use_pq=True,
                           pq_donate=scheduler != "pc-nodonate",
                           pq_use_pallas=scheduler == "pc-pallas",
-                          rounds_cap=rounds_cap)
+                          rounds_cap=rounds_cap, tier=tier)
     elif scheduler == "serial":
         sch = SerialScheduler(ex)
     else:
@@ -329,6 +336,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         "device_steps": ex.device_steps,
         "mean_batch": round(getattr(sch, "mean_batch", 1.0), 2)
         if scheduler != "serial" else 1.0,
+        "tier_decisions": dict(getattr(sch, "tier_decisions", {})),
     }
     # determinism check: same prompt -> same tokens regardless of batching
     return stats
@@ -351,13 +359,19 @@ def main():
     ap.add_argument("--rounds-cap", type=int, default=4,
                     help="cap R on the scheduler's adaptive multi-round "
                          "fused PQ dispatch (DESIGN.md §12)")
+    ap.add_argument("--tier",
+                    choices=["auto", "host", "device", "eliminate"],
+                    default="eliminate",
+                    help="ordering-tier override for the PC scheduler "
+                         "(DESIGN.md §14); 'auto' routes per pass via "
+                         "the online cost model")
     args = ap.parse_args()
     stats = run_serving(args.arch, sessions=args.sessions,
                         requests_per_session=args.requests,
                         n_tokens=args.tokens, max_batch=args.max_batch,
                         scheduler=args.scheduler, workload=args.workload,
                         read_pct=args.read_pct,
-                        rounds_cap=args.rounds_cap)
+                        rounds_cap=args.rounds_cap, tier=args.tier)
     print("[serve]", stats)
 
 

@@ -61,6 +61,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.combining import (ALL_TIERS, TIER_DEVICE, TIER_HOST,
+                                  TierRouter)
 from repro.core.sharded_pq import ShardedBatchedPQ, host_key
 
 _SENTINEL = object()
@@ -131,18 +133,31 @@ class PCScheduler:
         hand them off as up to ``rounds_cap`` device batches; it also
         bounds the priority-inversion window (requests arriving while the
         chosen batches drain cannot preempt them).
+      tier: ordering execution tier (DESIGN.md §14).  ``eliminate`` (the
+        default, the pre-§14 behavior) runs the elimination pre-pass and
+        sends survivors through the device PQ; ``device`` skips the
+        pre-pass; ``host`` keeps survivors in a host-side staging pool
+        and only touches the device PQ to drain keys already resident
+        there; ``auto`` lets a :class:`TierRouter` pick per ordering pass
+        from its online cost model (decisions in ``tier_decisions``).
+      router: optional externally-owned ``TierRouter`` (shared cost
+        model / injectable clock for tests); built internally when None.
     """
 
     def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]],
                  max_batch: int = 16, use_pq: bool = True,
                  pq_capacity: int = 1 << 16, n_shards: int = 4,
                  pipeline: bool = True, pq_use_pallas: bool = False,
-                 pq_donate: bool = True, rounds_cap: int = 4):
+                 pq_donate: bool = True, rounds_cap: int = 4,
+                 tier: str = "eliminate",
+                 router: Optional[TierRouter] = None):
         self.step_fn = step_fn
         self.max_batch = max_batch
         self.use_pq = use_pq
         self.pipeline = pipeline
         self.rounds_cap = max(1, int(rounds_cap))
+        if tier not in ("auto",) + tuple(ALL_TIERS):
+            raise ValueError(f"unknown tier {tier!r}")
         if use_pq:
             self._pq_ctor = dict(capacity=pq_capacity,
                                  c_max=min(max_batch, 64),
@@ -155,6 +170,13 @@ class PCScheduler:
             self._table: Dict[float, Deque[_Entry]] = {}
             self._queued = 0           # keys currently resident in the PQ
             self._resident: List[float] = []   # lazy min-heap of PQ keys
+            # host-tier staging pool: ordered entries NOT published to the
+            # device PQ; re-merged into the next ordering pass
+            self._staged: List[_Entry] = []
+            self.router = router or TierRouter(
+                "sched", ALL_TIERS,
+                force=None if tier == "auto" else tier)
+            self.tier_decisions = self.router.tier_decisions
         self._backlog: Deque[_Entry] = deque()   # FIFO-mode leftovers
         self._pending: Deque[_Entry] = deque()   # publication buffer
         self._cond = threading.Condition()
@@ -228,6 +250,8 @@ class PCScheduler:
                 for bucket in self._table.values():
                     doomed.extend(bucket)
                 self._table.clear()
+                doomed.extend(self._staged)
+                self._staged = []
                 self._queued = 0
                 self._resident = []
         for ent in doomed:
@@ -246,7 +270,9 @@ class PCScheduler:
 
     # -- combiner loop -------------------------------------------------------
     def _has_leftovers(self) -> bool:
-        return (self._queued > 0) if self.use_pq else bool(self._backlog)
+        if self.use_pq:
+            return self._queued > 0 or bool(self._staged)
+        return bool(self._backlog)
 
     def _combiner_loop(self) -> None:
         while True:
@@ -282,6 +308,8 @@ class PCScheduler:
             for bucket in self._table.values():
                 doomed.extend(bucket)
             self._table.clear()
+            doomed.extend(self._staged)
+            self._staged = []
             self._queued = 0
             self._resident = []
             # the device PQ may hold keys for the doomed requests (and be
@@ -315,21 +343,46 @@ class PCScheduler:
             n = min(self.max_batch, len(self._backlog))
             return [[self._backlog.popleft() for _ in range(n)]] if n \
                 else []
+        # tier decision (DESIGN.md §14): ONE routing choice — and one
+        # cost-model observation — per ordering pass
+        width = len(new) + len(self._staged)
+        t = self.router.choose(width, 0.0)
+        with self.router.timed(t, width, 0.0, n_ops=max(1, width)):
+            return self._order_tiered(new, t)
+
+    def _order_tiered(self, new: List[_Entry],
+                      tier: str) -> List[List[_Entry]]:
         budget = self.rounds_cap * self.max_batch
         # host_key applies the device's full key quantization (f32 +
         # flush-to-zero + finite clamp) so extracted keys hit the table.
         for ent in new:
             ent.key = host_key(ent.req.deadline)
+        if self._staged:
+            # host-tier staging pool: unpublished survivors of earlier
+            # passes re-enter the ordering here (already quantized)
+            new = new + self._staged
+            self._staged = []
         new = sorted(new, key=lambda e: e.key)
         min_res = self._peek_resident()
         n_elim = 0
-        while (n_elim < len(new) and n_elim < budget
-               and (min_res is None or new[n_elim].key <= min_res)):
-            n_elim += 1
+        if tier != TIER_DEVICE:          # device tier = no pre-pass
+            while (n_elim < len(new) and n_elim < budget
+                   and (min_res is None or new[n_elim].key <= min_res)):
+                n_elim += 1
         elim, rest = new[:n_elim], new[n_elim:]
         self.eliminated += n_elim
         chosen: List[_Entry] = list(elim)
-        want = min(self._queued + len(rest), budget - n_elim)
+        if tier == TIER_HOST:
+            # host tier: survivors stay OFF the device PQ (staged for the
+            # next pass — they can't be served yet: their keys sit above
+            # the device-resident minimum, or the pass budget is spent).
+            # Device work only to drain keys already resident — that cost
+            # is charged to the host decision, the natural switch penalty.
+            self._staged = rest
+            rest = []
+            want = min(self._queued, budget - n_elim)
+        else:
+            want = min(self._queued + len(rest), budget - n_elim)
         if rest or want:
             # publish the surviving NEW keys only — everything already in
             # the device PQ stays there (persistent table; no re-insert

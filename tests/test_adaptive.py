@@ -1,0 +1,238 @@
+"""Deterministic tier-1 coverage of the adaptive-tier wrappers
+(DESIGN.md §14): AdaptivePQ / AdaptiveReadWrite / the adaptive engines
+against their sequential oracles, with routers that keep CROSSING tiers
+(``explore_every=2``) so every host↔device sync path runs — the
+hypothesis machines in test_differential.py fuzz the same contracts in
+the slow/fuzz job; these runs are small, seeded, and always on.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.batched_map import ShardedMap
+from repro.core.combining import (TIER_DEVICE, TIER_ELIMINATE, TIER_HOST,
+                                  TierRouter)
+from repro.core.device_graph import DeviceGraph
+from repro.core.dynamic_graph import DynamicGraph
+from repro.core.pc_pq import AdaptivePQ, pc_adaptive_priority_queue
+from repro.core.read_opt import AdaptiveReadWrite
+from repro.core.seq_map import SequentialSortedMap
+from repro.core.seq_pq import SequentialHeap
+from repro.core.sharded_pq import ShardedBatchedPQ, host_key
+
+
+def _crossing_router(structure):
+    """Router that re-samples the beaten tier every other pass — the
+    worst case for the mirror/log sync machinery."""
+    return TierRouter(structure, (TIER_HOST, TIER_DEVICE),
+                      explore_min=1, explore_every=2)
+
+
+def _q(x):
+    return host_key(float(np.float32(x)))
+
+
+# -- AdaptivePQ --------------------------------------------------------------
+
+def _pq_pair(values=(), router=None):
+    pq = AdaptivePQ(
+        ShardedBatchedPQ(512, c_max=8, n_shards=2,
+                         values=np.asarray(values, np.float32)
+                         if len(values) else None),
+        router=router or _crossing_router("pq"))
+    o = SequentialHeap()
+    for v in pq.values():
+        o.insert(v)
+    return pq, o
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_adaptive_pq_matches_oracle_across_tiers(seed):
+    pq, o = _pq_pair()
+    rng = np.random.default_rng(seed)
+    for step in range(60):
+        ne = int(rng.integers(0, 9))
+        ins = [_q(rng.uniform(0, 100))
+               for _ in range(int(rng.integers(0, 9)))]
+        got = pq.apply(ne, ins)
+        want = [o.extract_min() for _ in range(ne)]
+        for v in ins:
+            o.insert(v)
+        assert got == want
+        assert pq.min_key() == (o.a[1] if o.size else math.inf)
+    # values() flushes the mirror debt and reads the DEVICE
+    np.testing.assert_allclose(pq.values(), o.values(), rtol=1e-6)
+    assert pq.tier_decisions[TIER_HOST] > 0
+    assert pq.tier_decisions[TIER_DEVICE] > 0
+
+
+def test_adaptive_pq_host_backlog_nets_to_one_sync():
+    """500 host-routed windows then one device pass: the device catches
+    up via the net-effect sync rounds (O(churn)), not 500 replays."""
+    pq, o = _pq_pair(router=TierRouter("pq", (TIER_HOST, TIER_DEVICE)))
+    rng = np.random.default_rng(3)
+    for _ in range(500):
+        ne = int(rng.integers(0, 4))
+        ins = [_q(rng.uniform(0, 100))
+               for _ in range(int(rng.integers(0, 5)))]
+        assert pq.apply(ne, ins, tier=TIER_HOST) \
+            == [o.extract_min() for _ in range(ne)]
+        for v in ins:
+            o.insert(v)
+    got = pq.apply(2, [_q(1.5)], tier=TIER_DEVICE)
+    want = [o.extract_min(), o.extract_min()]
+    o.insert(_q(1.5))
+    assert got == want
+    assert pq.flushes == 1
+    np.testing.assert_allclose(pq.values(), o.values(), rtol=1e-6)
+
+
+def test_adaptive_pq_eliminate_coerces_to_device():
+    pq, o = _pq_pair()
+    ins = [_q(5.0), _q(7.0)]
+    assert pq.apply(0, ins, tier=TIER_ELIMINATE) == []
+    for v in ins:
+        o.insert(v)
+    np.testing.assert_allclose(pq.values(), o.values(), rtol=1e-6)
+    # the coerced pass ran on the device: nothing left to flush
+    assert pq.flushes == 0 and pq._dev_content is None
+
+
+# -- engine-level PQ (elimination tier lives here) ---------------------------
+
+@pytest.mark.parametrize("tier", ["auto", "host", "eliminate", "device"])
+def test_adaptive_pq_engine_all_tiers_correct(tier):
+    """Under every override the engine drains to the same sorted
+    stream; under auto/host/eliminate the decision counters prove the
+    requested routing actually happened."""
+    import threading
+    init = np.arange(1.0, 33.0, dtype=np.float32)
+    eng = pc_adaptive_priority_queue(
+        ShardedBatchedPQ(256, c_max=8, n_shards=2, values=init), tier=tier)
+    results = []
+    lock = threading.Lock()
+
+    def worker(tid):
+        r = np.random.default_rng(tid)
+        for i in range(8):
+            eng.execute("insert", float(100 + tid * 8 + i))
+            got = eng.execute("extract_min")
+            with lock:
+                results.append(got)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # net content preserved: 32 initial + 32 inserted - 32 extracted
+    remaining = eng.adaptive_pq.values()
+    assert len(remaining) == 32
+    assert len(results) == 32 and None not in results
+    # every extracted value was the global min at its linearization
+    # point: extracted ∪ remaining == initial ∪ inserted
+    want = sorted(init.tolist() + [float(100 + t * 8 + i)
+                                   for t in range(4) for i in range(8)])
+    np.testing.assert_allclose(sorted(results + list(remaining)), want,
+                               rtol=1e-6)
+    if tier != "auto":
+        decided = {k for k, v in eng.tier_decisions.items() if v}
+        assert decided == {tier}
+
+
+def test_adaptive_pq_engine_prewarm_is_net_zero_and_completes_cold_start():
+    init = np.arange(1.0, 17.0, dtype=np.float32)
+    eng = pc_adaptive_priority_queue(
+        ShardedBatchedPQ(256, c_max=8, n_shards=2, values=init))
+    before = eng.adaptive_pq.values()
+    eng.prewarm()
+    np.testing.assert_allclose(eng.adaptive_pq.values(), before, rtol=1e-6)
+    # cold start done: every (tier, bucket) the workload can hit has
+    # explore_min samples, so the next decisions exploit immediately
+    model, router = eng.router.model, eng.router
+    for w in (1, 2, 4, 8):
+        for t in router.tiers:
+            assert model.samples(model.key("pq", t, w, 0.0)) \
+                >= router.explore_min
+    eng.prewarm()       # idempotent: already-warm buckets skip
+
+
+# -- AdaptiveReadWrite: map --------------------------------------------------
+
+def test_adaptive_map_matches_oracle_across_tiers():
+    m = AdaptiveReadWrite(
+        ShardedMap(128, c_max=8, n_shards=4, key_range=(0.0, 100.0)),
+        SequentialSortedMap(), router=_crossing_router("map"))
+    o = SequentialSortedMap()
+    rng = np.random.default_rng(0)
+    for step in range(50):
+        k = int(rng.integers(1, 8))
+        methods, inputs = [], []
+        for _ in range(k):
+            q = int(rng.integers(0, 3))
+            key, val = _q(rng.uniform(0, 100)), float(np.float32(
+                rng.uniform(0, 10)))
+            methods.append(("insert", "assign", "delete")[q])
+            inputs.append((key, val) if q < 2 else key)
+        assert m.update_batch(methods, inputs) \
+            == [o.apply(mm, ii) for mm, ii in zip(methods, inputs)]
+        reads = [("lookup", _q(rng.uniform(0, 100))),
+                 ("range_count", (0.0, 50.0)), ("range_sum", (25.0, 75.0)),
+                 ("kth_smallest", 1)]
+        got = m.read_batch([a for a, _ in reads], [b for _, b in reads])
+        want = [o.apply(a, b) for a, b in reads]
+        for (mm, _), gg, ww in zip(reads, got, want):
+            if mm == "range_sum":        # f32 prefix-sum rounding
+                assert gg == pytest.approx(ww, abs=1e-3)
+            else:
+                assert gg == ww
+    assert m.items() == o.items()
+    assert m.tier_decisions[TIER_HOST] > 0
+    assert m.tier_decisions[TIER_DEVICE] > 0
+    assert m.eliminated_ops >= 0         # compaction can never go negative
+
+
+def test_adaptive_map_canonicalizes_f64_keys():
+    """Raw f64 keys must hit the same stored f32 image on BOTH tiers —
+    otherwise routing would change results (the key exists on one tier,
+    misses on the other)."""
+    m = AdaptiveReadWrite(ShardedMap(64, c_max=8), SequentialSortedMap())
+    raw = 10.000000001          # not f32-representable
+    for tier in (TIER_HOST, TIER_DEVICE):
+        m.router.force = tier
+        assert m.apply("insert", (raw, 1.0)) is True
+        assert m.apply("lookup", raw) == 1.0
+        assert m.apply("delete", raw) is True
+    m.router.force = None
+
+
+# -- AdaptiveReadWrite: graph ------------------------------------------------
+
+def test_adaptive_graph_matches_oracle_across_tiers():
+    n = 16
+    g = AdaptiveReadWrite(
+        DeviceGraph(n, edge_capacity=128, c_max=8, n_shards=2),
+        DynamicGraph(n), router=_crossing_router("graph"))
+    o = DynamicGraph(n)
+    rng = np.random.default_rng(1)
+    for step in range(60):
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u == v:
+            continue
+        q = int(rng.integers(0, 3))
+        if q == 0:
+            assert g.insert(u, v) == o.insert(u, v)
+        elif q == 1:
+            assert g.delete(u, v) == o.delete(u, v)
+        else:
+            assert g.connected(u, v) == o.connected(u, v)
+    queries = [(int(rng.integers(0, n)), int(rng.integers(0, n)))
+               for _ in range(8)]
+    assert g.read_batch(["connected"] * len(queries), queries) \
+        == [o.connected(a, b) for a, b in queries]
+    got_e = g.edges() if callable(g.edges) else g.edges
+    assert {tuple(sorted(e)) for e in got_e} \
+        == {tuple(sorted(e)) for e in o.edges}
+    assert g.tier_decisions[TIER_HOST] > 0
+    assert g.tier_decisions[TIER_DEVICE] > 0

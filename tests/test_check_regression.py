@@ -83,6 +83,45 @@ def test_real_regression_still_fails(tmp_path):
                  warn_only=True) == 0
 
 
+def test_unstable_baseline_row_is_reported_not_silent(tmp_path, capsys):
+    """A baseline row whose IQR reaches its median is excluded from
+    gating, but the exclusion must be VISIBLE: an UNSTABLE line naming
+    the row (with the comparison it would have made) plus a summary
+    count — never a silent drop (PR-6 satellite)."""
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("PC-K4", 10.0), _row("PC-K8", 100.0)])
+    base = _write(tmp_path, "base.json",
+                  _baseline([_row("PC-K4", 100.0, iqr=150.0),
+                             _row("PC-K8", 100.0)]))
+    # the PC-K4 cell dropped 10x but its baseline is noise — pass...
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+    out = capsys.readouterr().out
+    # ...loudly: per-row UNSTABLE line with both medians, plus a count
+    assert "UNSTABLE" in out
+    assert "NOT GATED" in out
+    assert "'PC-K4'" in out
+    assert "1 row(s) UNSTABLE" in out
+
+
+def test_unstable_row_does_not_mask_stable_regression(tmp_path):
+    """An unstable cell must only exclude ITSELF: a genuine regression
+    on a stable sibling row still fails the gate."""
+    fresh = _write(tmp_path, "fresh.json",
+                   [_row("PC-K4", 10.0), _row("PC-K8", 10.0)])
+    base = _write(tmp_path, "base.json",
+                  _baseline([_row("PC-K4", 100.0, iqr=150.0),
+                             _row("PC-K8", 100.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 1
+
+
+def test_stable_run_prints_no_unstable_note(tmp_path, capsys):
+    """The summary count only appears when something was excluded."""
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0)])
+    base = _write(tmp_path, "base.json", _baseline([_row("PC-K4", 100.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+    assert "UNSTABLE" not in capsys.readouterr().out
+
+
 def test_config_drift_with_gating_baseline_still_fails(tmp_path):
     """ZERO overlap against a baseline that HAS gating rows is still the
     silent-no-op-gate failure (the PR-4 contract)."""

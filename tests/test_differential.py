@@ -18,8 +18,13 @@ from differential import (make_graph_machine, make_map_machine,  # noqa: E402
                           make_pq_machine)
 
 from repro.core.batched_map import ShardedMap  # noqa: E402
+from repro.core.combining import (TIER_DEVICE, TIER_HOST,  # noqa: E402
+                                  TierRouter)
 from repro.core.device_graph import DeviceGraph  # noqa: E402
 from repro.core.dynamic_graph import DynamicGraph  # noqa: E402
+from repro.core.pc_pq import AdaptivePQ  # noqa: E402
+from repro.core.read_opt import AdaptiveReadWrite  # noqa: E402
+from repro.core.seq_map import SequentialSortedMap  # noqa: E402
 from repro.core.sharded_pq import ShardedBatchedPQ  # noqa: E402
 
 pytestmark = [pytest.mark.slow, pytest.mark.fuzz]
@@ -65,3 +70,32 @@ TestShardedMapNoDonateMachine = _machine_case(
     make_map_machine(lambda: ShardedMap(128, c_max=8, n_shards=4,
                                         key_range=(0.0, 100.0),
                                         donate=False)))
+
+
+# tier=auto variants (PR-6 satellite; DESIGN.md §14): the adaptive
+# wrappers routed by the LIVE cost model must stay oracle-equivalent no
+# matter which tier each pass lands on.  explore_every=2 keeps the
+# router crossing tiers for the whole run, so the host↔device log-sync
+# and dedup-compaction paths are exercised under every interleaving the
+# machines generate — not just the converged steady state.
+def _auto_router(structure):
+    return TierRouter(structure, (TIER_HOST, TIER_DEVICE),
+                      explore_min=1, explore_every=2)
+
+
+TestAdaptivePQMachine = _machine_case(
+    make_pq_machine(
+        lambda: AdaptivePQ(ShardedBatchedPQ(512, c_max=8, n_shards=2),
+                           router=_auto_router("pq")), c_max=8))
+
+TestAdaptiveMapMachine = _machine_case(
+    make_map_machine(
+        lambda: AdaptiveReadWrite(
+            ShardedMap(128, c_max=8, n_shards=4, key_range=(0.0, 100.0)),
+            SequentialSortedMap(), router=_auto_router("map"))))
+
+TestAdaptiveGraphMachine = _machine_case(
+    make_graph_machine(
+        lambda: AdaptiveReadWrite(
+            DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2),
+            DynamicGraph(N), router=_auto_router("graph")), N))

@@ -1,0 +1,277 @@
+"""Adaptive tier router unit tests (PR-6 satellite; DESIGN.md §14).
+
+Everything here drives :class:`TierRouter` / :class:`CostModel` with an
+injectable fake clock or direct ``observe`` calls — no real timing, no
+device dispatch — so every assertion is deterministic:
+
+* cold start explores every tier ``explore_min`` times per context
+  before any is trusted,
+* the router converges to the host tier in the small-batch/read-heavy
+  regime and to the device rounds tier in the wide-batch regime,
+* hysteresis: a single noisy sample (already EWMA-damped) cannot flap
+  an established route, while sustained degradation still switches it.
+"""
+import itertools
+
+import pytest
+
+from repro.core.combining import (ALL_TIERS, TIER_DEVICE, TIER_ELIMINATE,
+                                  TIER_HOST, CostModel, TierRouter)
+
+
+class FakeClock:
+    """Deterministic clock: ``advance(dt)`` inside a ``timed`` block
+    makes the router observe exactly ``dt`` seconds."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _drive(router, costs, width, read_frac=0.0, steps=1):
+    """Run ``steps`` choose→observe cycles; per-op cost per tier comes
+    from the ``costs`` dict (n_ops=1 so seconds == per-op cost)."""
+    picked = []
+    for _ in range(steps):
+        t = router.choose(width, read_frac)
+        router.observe(t, width, read_frac, costs[t], n_ops=1)
+        picked.append(t)
+    return picked
+
+
+# -- CostModel ---------------------------------------------------------------
+
+def test_width_buckets_are_pow2():
+    wb = CostModel.width_bucket
+    assert wb(1) == 0
+    assert wb(2) == 1
+    assert wb(3) == wb(4) == 2
+    assert wb(5) == wb(8) == 3
+    assert wb(9) != wb(8)
+    assert wb(0) == 0       # degenerate widths clamp, never crash
+
+
+def test_read_buckets_are_quartiles():
+    rb = CostModel.read_bucket
+    assert rb(0.0) == 0
+    assert rb(1.0) == 4
+    assert rb(0.5) == 2
+    assert rb(0.9) == rb(1.0)       # read-heavy shares a cell
+    assert rb(-3.0) == 0 and rb(7.0) == 4   # clamped
+
+
+def test_ewma_damps_single_sample():
+    m = CostModel(alpha=0.25)
+    k = m.key("pq", TIER_HOST, 4, 0.0)
+    m.observe(k, 1.0)
+    assert m.cost(k) == pytest.approx(1.0)
+    m.observe(k, 2.0)       # one 2x outlier moves the mean only 25%
+    assert m.cost(k) == pytest.approx(1.25)
+    assert m.samples(k) == 2
+
+
+def test_observe_normalizes_per_op():
+    m = CostModel()
+    k = m.key("pq", TIER_HOST, 8, 0.0)
+    m.observe(k, 8.0, n_ops=8)
+    assert m.cost(k) == pytest.approx(1.0)
+
+
+# -- cold start --------------------------------------------------------------
+
+def test_cold_start_explores_every_tier():
+    """Before any tier is trusted, each one is measured ``explore_min``
+    times in the context — no tier can win by never being tried."""
+    r = TierRouter("pq", ALL_TIERS, explore_min=2, clock=FakeClock())
+    costs = {TIER_HOST: 1.0, TIER_ELIMINATE: 1.0, TIER_DEVICE: 1.0}
+    picked = _drive(r, costs, width=4, steps=2 * len(ALL_TIERS))
+    for t in ALL_TIERS:
+        assert picked.count(t) == 2
+    assert r.tier_decisions == {t: 2 for t in ALL_TIERS}
+
+
+def test_cold_start_is_per_context():
+    """A new (width, read) context gets its own exploration round even
+    after another context converged."""
+    r = TierRouter("pq", (TIER_HOST, TIER_DEVICE), explore_min=1)
+    _drive(r, {TIER_HOST: 1.0, TIER_DEVICE: 9.0}, width=2, steps=6)
+    picked = _drive(r, {TIER_HOST: 9.0, TIER_DEVICE: 1.0}, width=64,
+                    steps=2)
+    assert set(picked) == {TIER_HOST, TIER_DEVICE}   # explored anew
+
+
+# -- convergence -------------------------------------------------------------
+
+def test_converges_to_host_on_small_read_heavy_batches():
+    """Small-batch read-heavy regime: host per-op cost 50x below the
+    device dispatch — after cold start every decision is host."""
+    r = TierRouter("map", (TIER_HOST, TIER_DEVICE), explore_min=2)
+    costs = {TIER_HOST: 2e-6, TIER_DEVICE: 1e-4}
+    picked = _drive(r, costs, width=2, read_frac=1.0, steps=24)
+    assert set(picked[4:]) == {TIER_HOST}
+    assert r.tier_decisions[TIER_HOST] > r.tier_decisions[TIER_DEVICE]
+
+
+def test_converges_to_device_on_wide_batches():
+    """Wide-batch regime: one fused dispatch amortizes across the batch
+    while the host mirror pays per op — decisions converge to device."""
+    r = TierRouter("pq", ALL_TIERS, explore_min=2)
+    costs = {TIER_HOST: 1e-4, TIER_ELIMINATE: 5e-5, TIER_DEVICE: 1e-6}
+    picked = _drive(r, costs, width=64, steps=30)
+    assert set(picked[6:]) == {TIER_DEVICE}
+
+
+def test_contexts_route_independently():
+    """Host wins narrow passes and device wins wide ones in the SAME
+    router — the per-context model keeps both routes simultaneously."""
+    r = TierRouter("map", (TIER_HOST, TIER_DEVICE), explore_min=1)
+    narrow = {TIER_HOST: 1e-6, TIER_DEVICE: 1e-4}
+    wide = {TIER_HOST: 1e-4, TIER_DEVICE: 1e-6}
+    for _ in range(10):
+        _drive(r, narrow, width=2)
+        _drive(r, wide, width=64)
+    assert _drive(r, narrow, width=2) == [TIER_HOST]
+    assert _drive(r, wide, width=64) == [TIER_DEVICE]
+
+
+# -- hysteresis --------------------------------------------------------------
+
+def _converged_router():
+    """Two-tier router converged to host (EWMA 1.0) vs device (1.3)."""
+    r = TierRouter("pq", (TIER_HOST, TIER_DEVICE), explore_min=2,
+                   hysteresis=0.25)
+    _drive(r, {TIER_HOST: 1.0, TIER_DEVICE: 1.3}, width=4, steps=12)
+    assert _drive(r, {TIER_HOST: 1.0, TIER_DEVICE: 1.3}, width=4) \
+        == [TIER_HOST]
+    return r
+
+
+def test_single_noisy_sample_does_not_flap():
+    """One 2x-cost host sample: the EWMA damps it to 1.25 (< device
+    1.3), and even a second outlier that pushes the EWMA past the
+    challenger stays inside the 25% hysteresis band — the route holds."""
+    r = _converged_router()
+    r.observe(TIER_HOST, 4, 0.0, 2.0, n_ops=1)      # EWMA -> 1.25
+    assert r.choose(4) == TIER_HOST
+    r.observe(TIER_HOST, 4, 0.0, 2.0, n_ops=1)      # EWMA -> ~1.44
+    # device (1.3) is now nominally cheaper but NOT 25% cheaper
+    assert r.choose(4) == TIER_HOST
+
+
+def test_sustained_degradation_still_switches():
+    """Hysteresis must not freeze the route: repeated expensive host
+    passes push its EWMA past the band and device takes over."""
+    r = _converged_router()
+    picked = _drive(r, {TIER_HOST: 3.0, TIER_DEVICE: 1.3}, width=4,
+                    steps=12)
+    assert picked[-1] == TIER_DEVICE
+    assert TIER_DEVICE in picked        # switched during the run
+
+
+def test_hysteresis_zero_switches_immediately():
+    r = TierRouter("pq", (TIER_HOST, TIER_DEVICE), explore_min=1,
+                   hysteresis=0.0)
+    _drive(r, {TIER_HOST: 1.0, TIER_DEVICE: 2.0}, width=4, steps=6)
+    # any strictly-cheaper challenger displaces the incumbent at once
+    r.observe(TIER_DEVICE, 4, 0.0, 0.1, n_ops=1)
+    for _ in range(8):      # drag device's EWMA below host's 1.0
+        r.observe(TIER_DEVICE, 4, 0.0, 0.1, n_ops=1)
+    assert r.choose(4) == TIER_DEVICE
+
+
+# -- forcing / overrides -----------------------------------------------------
+
+def test_force_pins_every_decision():
+    r = TierRouter("sched", ALL_TIERS, force=TIER_DEVICE)
+    costs = {t: 1.0 for t in ALL_TIERS}
+    costs[TIER_HOST] = 1e-9     # host is vastly cheaper — ignored
+    assert set(_drive(r, costs, width=4, steps=10)) == {TIER_DEVICE}
+    assert r.tier_decisions[TIER_DEVICE] == 10
+
+
+def test_force_must_name_a_known_tier():
+    with pytest.raises(ValueError):
+        TierRouter("pq", (TIER_HOST,), force=TIER_DEVICE)
+
+
+def test_invalid_hysteresis_rejected():
+    with pytest.raises(ValueError):
+        TierRouter("pq", ALL_TIERS, hysteresis=1.0)
+    with pytest.raises(ValueError):
+        TierRouter("pq", ALL_TIERS, hysteresis=-0.1)
+
+
+# -- re-exploration ----------------------------------------------------------
+
+def test_explore_every_resamples_beaten_tiers():
+    """With explore_every=N, every Nth decision in a context samples a
+    non-incumbent tier so a regime shift is eventually re-measured —
+    without dethroning the incumbent in between."""
+    r = TierRouter("pq", (TIER_HOST, TIER_DEVICE), explore_min=1,
+                   explore_every=5)
+    picked = _drive(r, {TIER_HOST: 1e-6, TIER_DEVICE: 1e-4}, width=4,
+                    steps=40)
+    tail = picked[2:]
+    assert TIER_DEVICE in tail          # re-sampled periodically...
+    assert tail.count(TIER_DEVICE) < len(tail) // 3   # ...but rarely
+
+
+# -- fake-clock timing -------------------------------------------------------
+
+def test_timed_uses_injected_clock():
+    clk = FakeClock()
+    r = TierRouter("pq", (TIER_HOST, TIER_DEVICE), clock=clk)
+    with r.timed(TIER_HOST, width=4, n_ops=4):
+        clk.advance(4.0)
+    k = r.model.key("pq", TIER_HOST, 4, 0.0)
+    assert r.model.cost(k) == pytest.approx(1.0)    # 4 s / 4 ops
+    assert r.model.samples(k) == 1
+
+
+def test_timed_observes_on_exception():
+    """A pass that raises still charges its cost to the chosen tier —
+    the model must not starve on a flaky tier."""
+    clk = FakeClock()
+    r = TierRouter("pq", (TIER_HOST,), clock=clk)
+    with pytest.raises(RuntimeError):
+        with r.timed(TIER_HOST, width=2, n_ops=1):
+            clk.advance(7.0)
+            raise RuntimeError("boom")
+    assert r.model.cost(r.model.key("pq", TIER_HOST, 2, 0.0)) \
+        == pytest.approx(7.0)
+
+
+def test_clock_driven_convergence_end_to_end():
+    """Full loop through ``timed``: the fake clock makes device passes
+    10x cheaper; after cold start the router converges to device."""
+    clk = FakeClock()
+    r = TierRouter("map", (TIER_HOST, TIER_DEVICE), explore_min=2,
+                   clock=clk)
+    latency = {TIER_HOST: 1e-3, TIER_DEVICE: 1e-4}
+    picked = []
+    for _ in range(20):
+        t = r.choose(32, 0.0)
+        with r.timed(t, 32, 0.0):
+            clk.advance(latency[t])
+        picked.append(t)
+    assert set(picked[4:]) == {TIER_DEVICE}
+
+
+# -- shared model ------------------------------------------------------------
+
+def test_routers_can_share_one_cost_model():
+    """Two routers over the same structure share observations through a
+    common CostModel — the second starts warm."""
+    m = CostModel()
+    r1 = TierRouter("pq", (TIER_HOST, TIER_DEVICE), model=m,
+                    explore_min=1)
+    _drive(r1, {TIER_HOST: 1e-6, TIER_DEVICE: 1e-3}, width=4, steps=8)
+    r2 = TierRouter("pq", (TIER_HOST, TIER_DEVICE), model=m,
+                    explore_min=1)
+    assert _drive(r2, {TIER_HOST: 1e-6, TIER_DEVICE: 1e-3},
+                  width=4) == [TIER_HOST]     # no cold start needed
