@@ -16,6 +16,8 @@ Implementations:
 * ``PC-K4 nodonate`` / ``PC-K4 pallas`` — ablation twins (EXPERIMENTS
   §Ablations): copy-per-pass dispatch, and label rebuilds through the
   ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
+* ``PC-K4 guarded`` — the fault-free transactional-guard twin
+  (DESIGN.md §15; EXPERIMENTS §Robustness): snapshot per pass, no plan.
 * ``Lock`` (global mutex), ``RW Lock``, ``FC`` (flat combining) — the
   paper's host baselines.
 
@@ -45,8 +47,8 @@ from .common import save
 C_MAX = 16
 
 DEFAULT_IMPLS = ("PC host", "PC-K1", "PC-K4", "PC-K8",
-                 "PC-K4 nodonate", "PC-K4 pallas", "PC-adaptive",
-                 "Lock", "RW Lock", "FC")
+                 "PC-K4 nodonate", "PC-K4 pallas", "PC-K4 guarded",
+                 "PC-adaptive", "Lock", "RW Lock", "FC")
 
 
 def _random_tree(rng, n):
@@ -57,10 +59,10 @@ def _random_tree(rng, n):
 
 
 def _device_graph(n_vertices, edge_capacity, *, n_shards, use_pallas=False,
-                  donate=True):
+                  donate=True, guard=None):
     return DeviceGraph(n_vertices, edge_capacity=edge_capacity,
                        c_max=C_MAX, n_shards=n_shards,
-                       use_pallas=use_pallas, donate=donate)
+                       use_pallas=use_pallas, donate=donate, guard=guard)
 
 
 def _make_impl(name, n_vertices, edge_capacity):
@@ -81,7 +83,10 @@ def _make_impl(name, n_vertices, edge_capacity):
         flavor = key[1] if len(key) > 1 else ""
         g = _device_graph(n_vertices, edge_capacity, n_shards=K,
                           use_pallas=flavor == "pallas",
-                          donate=flavor != "nodonate")
+                          donate=flavor != "nodonate",
+                          # fault-free guarded twin (DESIGN.md §15):
+                          # snapshot per pass, no fault plan attached
+                          guard=True if flavor == "guarded" else None)
         return g, batched_read_optimized(g).execute
     g = DynamicGraph(n_vertices)
     if name == "Lock":

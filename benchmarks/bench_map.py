@@ -21,6 +21,8 @@ Implementations:
 * ``PC-K4 nodonate`` / ``PC-K4 pallas`` — ablation twins (EXPERIMENTS
   §Ablations): copy-per-pass dispatch, and the merge-compact through the
   ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
+* ``PC-K4 guarded`` — the fault-free transactional-guard twin
+  (DESIGN.md §15; EXPERIMENTS §Robustness): snapshot per pass, no plan.
 
 Every row reports median-of-N (default 5) with IQR via
 ``benchmarks._timing.measure``; rows are keyed (impl, read_pct, threads)
@@ -45,7 +47,8 @@ C_MAX = 16
 KEY_RANGE = (0.0, 1000.0)
 
 DEFAULT_IMPLS = ("FC host", "Lock", "PC-K1", "PC-K4", "PC-K8",
-                 "PC-K4 nodonate", "PC-K4 pallas", "PC-adaptive")
+                 "PC-K4 nodonate", "PC-K4 pallas", "PC-K4 guarded",
+                 "PC-adaptive")
 
 
 def _items(rng, n_keys):
@@ -78,7 +81,10 @@ def _make_impl(name, items, capacity):
         m = ShardedMap(shard_capacity(capacity, K, c_max=C_MAX),
                        c_max=C_MAX, n_shards=K, key_range=KEY_RANGE,
                        items=items, use_pallas=flavor == "pallas",
-                       donate=flavor != "nodonate")
+                       donate=flavor != "nodonate",
+                       # fault-free guarded twin (DESIGN.md §15): every
+                       # pass pays the snapshot, no fault plan attached
+                       guard=True if flavor == "guarded" else None)
         return pc_map(m)
     raise ValueError(f"unknown impl {name!r}")
 

@@ -23,6 +23,10 @@ Ablation rows (EXPERIMENTS §Ablations; DESIGN.md §10, §12):
               of the run (the async-session client model of the
               serving scheduler), so the row measures the amortized
               dispatch claim rather than per-op round-trip latency.
+  PC-K4 guarded    — the transactional DispatchGuard (DESIGN.md §15)
+              around every combining pass with NO fault plan attached:
+              the fault-free snapshot overhead (EXPERIMENTS §Robustness,
+              acceptance ≤10% vs the ungated PC-K4 row)
 
 Every row reports median-of-N (default 5) with IQR via
 ``benchmarks._timing.measure`` — single-shot rows swung 2–3× run-to-run
@@ -135,6 +139,14 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                     impls[f"PC-K{K} pallas"] = pc_sharded_priority_queue(
                         cap_k, c_max=C_MAX, n_shards=K, values=init,
                         use_pallas=True).execute
+                if K == 4:
+                    # fault-free guarded twin (DESIGN.md §15): every pass
+                    # runs through the transactional DispatchGuard with
+                    # no fault plan attached — the row measures the pure
+                    # snapshot overhead (EXPERIMENTS §Robustness, ≤10%)
+                    impls["PC-K4 guarded"] = pc_sharded_priority_queue(
+                        cap_k, c_max=C_MAX, n_shards=4, values=init,
+                        guard=True).execute
                 if ablate_rounds:
                     # §12 fused multi-round path: async clients, up to
                     # rounds_cap combining rounds per donated dispatch

@@ -42,15 +42,24 @@ def _gates(impl: str) -> bool:
     return impl.startswith("PC") and impl != "PC host"
 
 
-def _index(rows, keys):
+def _index(rows, keys, faulted=None):
     """key -> (median, iqr_or_None) for every gating row.  Rows without
     an ``ops_per_s`` are skipped, never a KeyError — a malformed or
-    informational row must not crash the gate."""
+    informational row must not crash the gate.  Rows recorded under an
+    active fault plan (truthy ``fault_plan`` field) measure injected
+    faults, not the hot path — they are excluded from gating, but their
+    keys are collected into ``faulted`` so the caller reports the
+    exclusion loudly (the UNSTABLE convention: visible, never silent)."""
     out = {}
     for r in rows:
         if not _gates(str(r.get("impl", ""))) or "ops_per_s" not in r:
             continue
-        out[tuple(r.get(k) for k in keys)] = (
+        key = tuple(r.get(k) for k in keys)
+        if r.get("fault_plan"):
+            if faulted is not None:
+                faulted.append(key)
+            continue
+        out[key] = (
             float(r["ops_per_s"]),
             float(r["iqr"]) if "iqr" in r else None)
     return out
@@ -65,11 +74,15 @@ def check(bench: str, threshold: float = 0.5, warn_only: bool = False,
         ROOT, "experiments", "bench", f"bench_{bench}.json")
     baseline_path = baseline_path or os.path.join(
         ROOT, f"BENCH_{bench}.json")
-    fresh = _index(json.load(open(fresh_path)), keys)
+    faulted = []
+    fresh = _index(json.load(open(fresh_path)), keys, faulted)
     try:
         traj = json.load(open(baseline_path))["trajectory"]
     except (FileNotFoundError, KeyError):
         traj = []
+    for key in faulted:
+        print(f"[perf-gate]   FAULT-PLAN {key}: recorded under an active "
+              f"fault plan — NOT GATED (injected faults skew throughput)")
     if not traj:
         # a brand-new benchmark has no recorded history yet: its rows
         # are informational on their first run, not a hard failure
@@ -79,7 +92,11 @@ def check(bench: str, threshold: float = 0.5, warn_only: bool = False,
         for key in sorted(fresh):
             print(f"[perf-gate]   new row (no baseline): {key}")
         return 0
-    base = _index(traj[-1]["rows"], keys)
+    base_faulted = []
+    base = _index(traj[-1]["rows"], keys, base_faulted)
+    for key in base_faulted:
+        print(f"[perf-gate]   FAULT-PLAN {key}: baseline row recorded "
+              f"under an active fault plan — NOT GATED")
     print(f"[perf-gate] bench_{bench}: {len(fresh)} fresh PC rows vs "
           f"trajectory entry pr={traj[-1].get('pr')} "
           f"({len(base)} baseline rows)")

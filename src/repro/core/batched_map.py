@@ -59,6 +59,7 @@ from repro.kernels.sorted_merge import (merge_compact_sharded,
                                         merge_compact_xla)
 
 from .batched_pq import INF, _flush_subnormals
+from .faults import make_guard
 from .sharded_pq import _flush_host, _route, _route_host, host_key
 
 # All device→host transfers on the map hot path route through this hook
@@ -418,7 +419,7 @@ class ShardedMap:
     def __init__(self, capacity: int, c_max: int, n_shards: int = 1,
                  key_range: Optional[Tuple[float, float]] = None,
                  items=None, use_pallas: bool = False,
-                 donate: bool = True):
+                 donate: bool = True, fault_plan=None, guard=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if c_max < 1:
@@ -436,8 +437,20 @@ class ShardedMap:
         self.donate = bool(donate)
         self.key_range = ((float(key_range[0]), float(key_range[1]))
                           if key_range is not None else None)
+        self.fault_plan = fault_plan
+        self._guard = make_guard(fault_plan, guard)
         self.state = self._init_state(items)
         self._unresolved: List[AsyncMapUpdate] = []
+
+    # -- transactional dispatch (DESIGN.md §15) -------------------------------
+    def _snapshot(self):
+        """Device-side copies (never donated) + the occupancy mirror."""
+        st = MapState(self.state.keys.copy(), self.state.vals.copy(),
+                      self.state.size.copy())
+        return st, self._sizes_ub.copy()
+
+    def _restore(self, snap) -> None:
+        self.state, self._sizes_ub = snap
 
     def _init_state(self, items) -> MapState:
         K, cap = self.n_shards, self.capacity
@@ -528,27 +541,36 @@ class ShardedMap:
             cs[r, :nc] = code[r * c : r * c + nc]
             lane_counts.append(nc)
             slices.append((ks[r], vs[r], cs[r], nc))
-        # guard the WHOLE batch before dispatching anything — atomic:
-        # _guard_slices validates every slice on a local copy and only
-        # commits the mirror after all of them pass
-        self._guard_slices(slices)
         nb = np.asarray(lane_counts, np.int32)
-        if n_rounds == 1:
-            fn = apply_pass if self.donate else apply_pass_undonated
-            self.state, ok = fn(self.state, jnp.asarray(ks[0]),
-                                jnp.asarray(vs[0]), jnp.asarray(cs[0]),
-                                jnp.int32(nb[0]),
-                                key_range=self.key_range,
-                                use_pallas=self.use_pallas)
-            masks = [ok]
-        else:
+
+        def commit():
+            # guard the WHOLE batch before dispatching anything — atomic:
+            # _guard_slices validates every slice on a local copy and only
+            # commits the mirror after all of them pass.  It lives inside
+            # the dispatch thunk so a transactional restore rewinds the
+            # mirror and the device state together (DESIGN.md §15).
+            self._guard_slices(slices)
+            if n_rounds == 1:
+                fn = apply_pass if self.donate else apply_pass_undonated
+                self.state, ok = fn(self.state, jnp.asarray(ks[0]),
+                                    jnp.asarray(vs[0]), jnp.asarray(cs[0]),
+                                    jnp.int32(nb[0]),
+                                    key_range=self.key_range,
+                                    use_pallas=self.use_pallas)
+                return [ok]
             fn = apply_rounds if self.donate else apply_rounds_undonated
             self.state, oks = fn(self.state, jnp.asarray(ks),
                                  jnp.asarray(vs), jnp.asarray(cs),
                                  jnp.asarray(nb),
                                  key_range=self.key_range,
                                  use_pallas=self.use_pallas)
-            masks = [oks]
+            return [oks]
+
+        if self._guard is None:
+            masks = commit()
+        else:
+            masks = self._guard.run(commit, self._snapshot, self._restore,
+                                    site="map.apply_pass")
         handle = AsyncMapUpdate(self, masks, lane_counts, c)
         self._unresolved.append(handle)
         return handle
@@ -660,6 +682,8 @@ class BatchedMap(ShardedMap):
     """Single-shard convenience wrapper (the §13 core structure)."""
 
     def __init__(self, capacity: int, c_max: int, items=None,
-                 use_pallas: bool = False, donate: bool = True):
+                 use_pallas: bool = False, donate: bool = True,
+                 fault_plan=None, guard=None):
         super().__init__(capacity, c_max=c_max, n_shards=1, items=items,
-                         use_pallas=use_pallas, donate=donate)
+                         use_pallas=use_pallas, donate=donate,
+                         fault_plan=fault_plan, guard=guard)

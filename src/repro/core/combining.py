@@ -17,6 +17,14 @@ Hardware adaptation (see DESIGN.md §2): CPython has no CAS primitive, so the
 (``_head_cas``); the global lock's try-acquire is
 ``threading.Lock.acquire(blocking=False)``.  Busy-wait loops yield the GIL
 via ``time.sleep(0)`` so the host tier stays live on a single core.
+
+Fault tolerance (DESIGN.md §15): the global lock doubles as a
+heartbeat-stamped *lease*.  A spinning client whose combiner exceeds the
+lease deadline takes the lock over (``threading.Lock`` release is legal
+cross-thread) and retries as the combiner, so a combiner that dies
+mid-protocol — emulated by ``FaultPlan.on_combiner_pass`` raising with
+the lock still held — strands nobody.  ``wait_while`` is bounded the
+same way.
 """
 from __future__ import annotations
 
@@ -27,6 +35,9 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from enum import IntEnum
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .faults import (CircuitBreaker, CombinerLeaseExpired, FaultPlan,
+                     InjectedCombinerKill)
 
 
 class Status(IntEnum):
@@ -88,6 +99,10 @@ class ParallelCombiner:
         client_code: Callable[["ParallelCombiner", Request], None],
         cleanup_every: int = 1000,
         age_limit: int = 2000,
+        *,
+        lease_timeout: float = 30.0,
+        clock: Callable[[], float] = time.monotonic,
+        fault_plan: Optional[FaultPlan] = None,
     ):
         self.combiner_code = combiner_code
         self.client_code = client_code
@@ -99,6 +114,22 @@ class ParallelCombiner:
         self.head: Optional[PublicationRecord] = None
         self._head_cas = threading.Lock()         # CAS emulation on ``head``
         self._tls = threading.local()
+        # combiner lease (DESIGN.md §15): _heartbeat is stamped under
+        # _takeover_lock whenever the combiner proves liveness (lock
+        # acquire, wait_while parks) and reset to None on release, so
+        # the acquire→stamp window can never look expired.  A takeover
+        # bumps _lease_epoch; a combiner only releases the lock if its
+        # epoch is still current (the lock belongs to the usurper
+        # otherwise).  lease_timeout must exceed the worst-case
+        # combining pass — expiry is only *declared* while the combiner
+        # is parked at a checkpoint (pass entry, wait_while).
+        self.lease_timeout = float(lease_timeout)
+        self.clock = clock
+        self.fault_plan = fault_plan
+        self._takeover_lock = threading.Lock()
+        self._heartbeat: Optional[float] = None
+        self._lease_epoch = 0
+        self.takeovers = 0
         # instrumentation
         self.passes = 0
         self.combined_sizes: List[int] = []
@@ -122,6 +153,11 @@ class ParallelCombiner:
     def add_publication(self, p: PublicationRecord) -> None:
         """Listing 1, ``addPublication`` (lines 49-56)."""
         if p.in_list:
+            return
+        if self.fault_plan is not None and self.fault_plan.maybe_drop_record():
+            # injected lost insert: the record never links; the owner's
+            # spin loop re-publishes on its next iteration, so a dropped
+            # record costs a retry, never an op
             return
         while True:
             head = self.head
@@ -163,6 +199,35 @@ class ParallelCombiner:
                 prev = node
             node = nxt
 
+    # -- combiner lease (DESIGN.md §15) -----------------------------------
+    def _stamp(self) -> None:
+        with self._takeover_lock:
+            self._heartbeat = self.clock()
+
+    def _lease_expired(self) -> bool:
+        hb = self._heartbeat
+        return (hb is not None and self.lock.locked()
+                and self.clock() - hb > self.lease_timeout)
+
+    def _try_takeover(self) -> bool:
+        """Reclaim an expired lease: verified under ``_takeover_lock``,
+        the usurper bumps the epoch (so the dead combiner's ``finally``
+        won't double-release) and releases the abandoned global lock —
+        cross-thread release is legal on ``threading.Lock``.  The caller
+        then competes for the lock as an ordinary combiner candidate;
+        the still-PUSHED requests are served by whoever wins."""
+        with self._takeover_lock:
+            if not (self._heartbeat is not None and self.lock.locked()
+                    and self.clock() - self._heartbeat > self.lease_timeout):
+                return False      # raced: lease refreshed or lock freed
+            self._lease_epoch += 1
+            self._heartbeat = None
+            self.takeovers += 1
+            if self.fault_plan is not None:
+                self.fault_plan.counters.bump("takeovers")
+            self.lock.release()
+            return True
+
     # -- the execute protocol ---------------------------------------------
     def execute(self, method: str, input: Any = None) -> Any:
         """Listing 1, ``execute`` (lines 20-47)."""
@@ -179,10 +244,32 @@ class ParallelCombiner:
         self.add_publication(p)
         while r.status != Status.FINISHED:
             if self.lock.acquire(blocking=False):
+                with self._takeover_lock:
+                    epoch = self._lease_epoch
+                    self._heartbeat = self.clock()
+                killed = False
                 try:
                     # we are the combiner
                     self.add_publication(p)
                     self.count += 1
+                    if self.fault_plan is not None:
+                        try:
+                            self.fault_plan.on_combiner_pass(self.count)
+                        except InjectedCombinerKill as e:
+                            # die mid-protocol: FINISH our own request as
+                            # failed (it was never applied — the kill fires
+                            # before get_requests), leave the lock HELD to
+                            # emulate the crash, and propagate.  Clients
+                            # spin until the lease expires, then take over.
+                            r.res = RequestFailure(e)
+                            r.status = Status.FINISHED
+                            killed = True
+                            raise
+                        if self._lease_epoch != epoch:
+                            # an injected latency spike outlived the lease
+                            # and a client took the lock over — abandon the
+                            # pass before touching any request
+                            continue
                     requests = self.get_requests()
                     self.passes += 1
                     self.combined_sizes.append(len(requests))
@@ -190,11 +277,18 @@ class ParallelCombiner:
                     if self.count % self.cleanup_every == 0:
                         self.cleanup()
                 finally:
-                    self.lock.release()
+                    if not killed:
+                        with self._takeover_lock:
+                            if self._lease_epoch == epoch:
+                                self._heartbeat = None
+                                self.lock.release()
             else:
                 # we are a client
                 while r.status == Status.PUSHED and self.lock.locked():
                     self.add_publication(p)
+                    if self._lease_expired():
+                        self._try_takeover()
+                        break      # retry as combiner candidate
                     time.sleep(0)  # GIL yield (spin-wait adaptation)
                 if r.status == Status.PUSHED:
                     continue       # lock was released; retry as combiner
@@ -204,9 +298,31 @@ class ParallelCombiner:
         return r.res
 
     # helper for combiner/client codes that need to block on a status change
-    @staticmethod
-    def wait_while(request: Request, status: Status) -> None:
+    def wait_while(self, request: Request, status: Status, *,
+                   heartbeat: bool = False,
+                   timeout: Optional[float] = None) -> None:
+        """Bounded spin until ``request.status`` leaves ``status``.
+
+        ``heartbeat=True`` is for the *combiner* parking while clients
+        run their phase: it proves liveness by re-stamping the lease
+        each iteration and is unbounded (the pass cannot complete
+        without the clients).  Without it the caller is a *client*
+        waiting on combiner progress: the wait is bounded by ``timeout``
+        (default: the lease timeout) and raises
+        :class:`~repro.core.faults.CombinerLeaseExpired` instead of
+        spinning forever on a dead combiner (ISSUE 7 satellite)."""
+        if heartbeat:
+            while request.status == status:
+                self._stamp()
+                time.sleep(0)
+            return
+        bound = self.lease_timeout if timeout is None else float(timeout)
+        t0 = self.clock()
         while request.status == status:
+            if self.clock() - t0 > bound:
+                raise CombinerLeaseExpired(
+                    f"request stuck in {status.name} for >{bound:g}s "
+                    f"(combiner presumed dead)")
             time.sleep(0)
 
 
@@ -338,6 +454,12 @@ class TierRouter:
     decisions per tier — benches and tests assert convergence on it.
     The ``clock`` is injectable so tests drive the model with fake
     latencies deterministically.
+
+    Graceful degradation (DESIGN.md §15): a
+    :class:`~repro.core.faults.CircuitBreaker` attached to a tier vetoes
+    it while open — even over ``force`` — and the decision falls back to
+    the first non-vetoed tier (host first, it has no dispatch to fail).
+    Half-open probes flow back automatically once the cooldown elapses.
     """
 
     def __init__(self, structure: str, tiers: Sequence[str] = ALL_TIERS,
@@ -370,6 +492,31 @@ class TierRouter:
         # only grow, so warmth never needs invalidation).
         self._ctx_keys: Dict[tuple, Dict[str, tuple]] = {}
         self._warm: set = set()
+        self._breakers: Dict[str, CircuitBreaker] = {}
+
+    # -- graceful degradation (DESIGN.md §15) ------------------------------
+    def attach_breaker(self, tier: str, breaker: CircuitBreaker) -> None:
+        """Let ``breaker`` veto ``tier`` while it is open."""
+        if tier not in self.tiers:
+            raise ValueError(f"unknown tier {tier!r} (have {self.tiers})")
+        self._breakers[tier] = breaker
+
+    def breaker_state(self) -> Dict[str, str]:
+        return {t: b.state for t, b in self._breakers.items()}
+
+    def _degrade(self, tier: str) -> str:
+        """Swap a breaker-vetoed tier for the first allowed fallback,
+        preferring the host tier (it has no device dispatch to fail)."""
+        b = self._breakers.get(tier)
+        if b is None or b.allows():
+            return tier
+        order = [t for t in self.tiers if t == TIER_HOST]
+        order += [t for t in self.tiers if t != TIER_HOST and t != tier]
+        for alt in order:
+            ab = self._breakers.get(alt)
+            if ab is None or ab.allows():
+                return alt
+        return tier   # everything vetoed: fail through to the original
 
     # -- decision ----------------------------------------------------------
     def _ctx(self, width: int, read_frac: float) -> tuple:
@@ -385,6 +532,8 @@ class TierRouter:
             tier = self.force
         else:
             tier = self._choose_auto(width, read_frac)
+        if self._breakers:
+            tier = self._degrade(tier)
         self.tier_decisions[tier] += 1
         return tier
 

@@ -53,6 +53,8 @@ import numpy as np
 
 from repro.kernels.label_prop import connected_components, merge_labels
 
+from .faults import make_guard
+
 # All device→host transfers on the graph hot path route through this hook
 # so tests can count blocking syncs (same idiom as batched_pq._host_fetch).
 _host_fetch = jax.device_get
@@ -231,6 +233,15 @@ def _connected_pairs(labels: jax.Array, uv: jax.Array) -> jax.Array:
     return labels[uv[0]] == labels[uv[1]]
 
 
+@jax.jit
+def _copy_state(state: GraphState) -> GraphState:
+    """Snapshot copy of the WHOLE state as ONE fused program: eight
+    per-array ``.copy()`` calls cost eight XLA:CPU dispatches per guarded
+    pass — enough to blow the §Robustness ≤10% overhead budget on the
+    graph's short read passes."""
+    return jax.tree_util.tree_map(jnp.copy, state)
+
+
 def _pow2(m: int) -> int:
     return 1 << max(0, (m - 1).bit_length())
 
@@ -339,7 +350,8 @@ class DeviceGraph:
 
     def __init__(self, n_vertices: int, *, edge_capacity: int = 4096,
                  c_max: int = 64, n_shards: int = 1,
-                 use_pallas: bool = False, donate: bool = True):
+                 use_pallas: bool = False, donate: bool = True,
+                 fault_plan=None, guard=None):
         if n_vertices < 1:
             raise ValueError("n_vertices must be >= 1")
         if c_max < 1:
@@ -381,6 +393,23 @@ class DeviceGraph:
         # live count oscillating across a pow2 boundary doesn't recompile
         # the fused read pass every few batches
         self._e_bound = 1
+        self.fault_plan = fault_plan
+        self._guard = make_guard(fault_plan, guard)
+
+    # -- transactional dispatch (DESIGN.md §15) -------------------------------
+    def _snapshot(self):
+        """Device-side copies (never donated — restore survives the
+        failed pass consuming the live buffers) + every host mirror the
+        guarded thunks mutate.  ``_unresolved`` is NOT snapshotted: mask
+        arrays are separate device outputs, and a handle is only
+        appended after its dispatch commits."""
+        st = _copy_state(self.state)
+        return (st, self._n_edges, self._outstanding_ins,
+                self._maybe_stale, self._e_bound)
+
+    def _restore(self, snap) -> None:
+        (self.state, self._n_edges, self._outstanding_ins,
+         self._maybe_stale, self._e_bound) = snap
 
     def __len__(self) -> int:
         """Live edge count (exact: resolves any outstanding updates)."""
@@ -470,19 +499,30 @@ class DeviceGraph:
                 buv[r, :, j] = arr[:, i_last]
                 sel[r, j] = ops[-1][1]
             lane_counts.append(len(chunk))
-        if n_rounds == 1:
-            fn = update_pass if self.donate else update_pass_undonated
-            self.state, ok = fn(self.state, jnp.asarray(buv[0]),
-                                jnp.asarray(sel[0]), jnp.int32(d))
-            masks = [ok]
+        def commit():
+            # mirror mutations live inside the guarded thunk so a
+            # transactional restore rewinds them with the device state
+            if n_rounds == 1:
+                fn = update_pass if self.donate else update_pass_undonated
+                self.state, ok = fn(self.state, jnp.asarray(buv[0]),
+                                    jnp.asarray(sel[0]), jnp.int32(d))
+                masks = [ok]
+            else:
+                fn = update_rounds if self.donate \
+                    else update_rounds_undonated
+                nb = np.asarray(lane_counts, np.int32)
+                self.state, oks = fn(self.state, jnp.asarray(buv),
+                                     jnp.asarray(sel), jnp.asarray(nb))
+                masks = [oks]
+            self._outstanding_ins += lane_ins
+            self._maybe_stale = True
+            return masks
+
+        if self._guard is None:
+            masks = commit()
         else:
-            fn = update_rounds if self.donate else update_rounds_undonated
-            nb = np.asarray(lane_counts, np.int32)
-            self.state, oks = fn(self.state, jnp.asarray(buv),
-                                 jnp.asarray(sel), jnp.asarray(nb))
-            masks = [oks]
-        self._outstanding_ins += lane_ins
-        self._maybe_stale = True
+            masks = self._guard.run(commit, self._snapshot, self._restore,
+                                    site="graph.update_pass")
         handle = AsyncUpdateResult(self, masks, n_ops, classes,
                                    lane_counts, self.c_max)
         self._unresolved.append(handle)
@@ -543,14 +583,24 @@ class DeviceGraph:
         if not (self._maybe_stale or self._unresolved):
             ans = _connected_pairs(self.state.labels, jnp.asarray(uv))
             return np.asarray(_host_fetch(ans))[:npairs].tolist()
-        # cleared BEFORE the dispatch: a reentrant update re-marks it
-        # (the lazy-but-correct refresh ordering, cf. DynamicGraph)
-        self._maybe_stale = False
-        fn = read_pass if self.donate else read_pass_undonated
-        self.state, ans = fn(self.state, jnp.asarray(uv), n=self.n,
-                             e_bound=self._rebuild_bound(),
-                             n_shards=self.n_shards,
-                             use_pallas=self.use_pallas)
+        def commit():
+            # cleared BEFORE the dispatch: a reentrant update re-marks it
+            # (the lazy-but-correct refresh ordering, cf. DynamicGraph);
+            # the fused read DONATES state too, so it is guarded like an
+            # update (a failed refresh must restore labels + dirty state)
+            self._maybe_stale = False
+            fn = read_pass if self.donate else read_pass_undonated
+            self.state, ans = fn(self.state, jnp.asarray(uv), n=self.n,
+                                 e_bound=self._rebuild_bound(),
+                                 n_shards=self.n_shards,
+                                 use_pallas=self.use_pallas)
+            return ans
+
+        if self._guard is None:
+            ans = commit()
+        else:
+            ans = self._guard.run(commit, self._snapshot, self._restore,
+                                  site="graph.read_pass")
         got = self._resolve_through(None, extra=ans)
         return np.asarray(got)[:npairs].tolist()
 

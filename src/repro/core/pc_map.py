@@ -31,16 +31,22 @@ def pc_map(m: ShardedMap, **kw) -> ParallelCombiner:
 def pc_sharded_map(capacity: int, c_max: int, n_shards: int = 4,
                    key_range: Optional[Tuple[float, float]] = None,
                    items=None, use_pallas: bool = False,
-                   donate: bool = True, **kw) -> ParallelCombiner:
+                   donate: bool = True, fault_plan=None, guard=None,
+                   **kw) -> ParallelCombiner:
     """Parallel combining over the K-sharded batched map (DESIGN.md §13).
 
     ``use_pallas``/``donate`` select the ``grid=(K,)`` merge kernel and
     the zero-copy (donated) dispatch (DESIGN.md §10; ``donate=False`` is
-    the copy-per-pass ablation).
+    the copy-per-pass ablation).  ``fault_plan``/``guard`` thread the
+    DESIGN.md §15 fault-tolerance layer through both the map
+    (transactional dispatch) and the combining engine (lease takeover).
     """
+    if fault_plan is not None:
+        kw.setdefault("fault_plan", fault_plan)
     return pc_map(ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
                              key_range=key_range, items=items,
-                             use_pallas=use_pallas, donate=donate), **kw)
+                             use_pallas=use_pallas, donate=donate,
+                             fault_plan=fault_plan, guard=guard), **kw)
 
 
 def pc_adaptive_map(capacity: int, c_max: int, n_shards: int = 4,

@@ -499,6 +499,7 @@ def pc_adaptive_priority_queue(pq: AnyBatchedPQ, *, tier: str = "auto",
 def pc_sharded_priority_queue(capacity: int, c_max: int,
                               n_shards: int = 4, values=None,
                               use_pallas: bool = False, donate: bool = True,
+                              fault_plan=None, guard=None,
                               **kw) -> ParallelCombiner:
     """Parallel combining over the K-sharded batched heap (DESIGN.md §9).
 
@@ -507,11 +508,17 @@ def pc_sharded_priority_queue(capacity: int, c_max: int,
     ``ShardedBatchedPQ.apply``.  ``use_pallas``/``donate`` select the
     shard-grid kernel path and the zero-copy (donated) dispatch
     (DESIGN.md §10; ``donate=False`` is the copy-per-pass ablation).
+    ``fault_plan``/``guard`` thread the DESIGN.md §15 fault-tolerance
+    layer through both the queue (transactional dispatch) and the
+    combining engine (lease takeover, injected kills).
     """
+    if fault_plan is not None:
+        kw.setdefault("fault_plan", fault_plan)
     return pc_priority_queue(
         ShardedBatchedPQ(capacity, c_max=c_max, n_shards=n_shards,
                          values=values, use_pallas=use_pallas,
-                         donate=donate), **kw)
+                         donate=donate, fault_plan=fault_plan,
+                         guard=guard), **kw)
 
 
 def fc_priority_queue(**kw) -> ParallelCombiner:

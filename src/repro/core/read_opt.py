@@ -56,9 +56,10 @@ def read_optimized_combining(ds: ReadWriteDS, **kw) -> ParallelCombiner:
         if any(r is own for r in reads) and own.status == Status.STARTED:
             own.res = ds.apply(own.method, own.input)
             own.status = Status.FINISHED
-        # wait until every read is done (lines 22-23)
+        # wait until every read is done (lines 22-23) — the combiner is
+        # alive while parked here, so it heartbeats the lease
         for r in reads:
-            ParallelCombiner.wait_while(r, Status.STARTED)
+            engine.wait_while(r, Status.STARTED, heartbeat=True)
 
     def client_code(engine: ParallelCombiner, r: Request) -> None:
         if is_update(r.method):

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import make_guard
 from .batched_pq import (
     INF,
     _TINY,
@@ -327,6 +328,13 @@ class ShardedBatchedPQ:
         (``grid=(K,)``, DESIGN.md §10) instead of vmapped XLA.
       donate: dispatch through the donating jit (zero-copy pass, default);
         False is the copy-per-pass ablation twin.
+      fault_plan: optional :class:`~repro.core.faults.FaultPlan` whose
+        ``maybe_fail_dispatch`` probe fires after every device dispatch.
+      guard: transactional dispatch (DESIGN.md §15) — a ready
+        ``DispatchGuard``, ``True`` (guard without a plan: the fault-free
+        overhead row), or ``None`` (guard exactly when a plan is given).
+        Guarded dispatches snapshot the heap stack + occupancy mirror,
+        restore bit-identically on failure and retry with backoff.
 
     Sync-free occupancy guard (DESIGN.md §10): the wrapper mirrors the
     device's insert routing on the host (bit-exact numpy twins) and keeps
@@ -344,7 +352,8 @@ class ShardedBatchedPQ:
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 4,
                  values=None, key_range: Optional[Tuple[float, float]] = None,
-                 use_pallas: bool = False, donate: bool = True):
+                 use_pallas: bool = False, donate: bool = True,
+                 fault_plan=None, guard=None):
         if c_max < 1:
             raise ValueError("c_max must be >= 1")
         if n_shards < 1:
@@ -357,6 +366,8 @@ class ShardedBatchedPQ:
         self.key_range = (
             (float(key_range[0]), float(key_range[1]))
             if key_range is not None else None)
+        self.fault_plan = fault_plan
+        self._guard = make_guard(fault_plan, guard)
         self.state = self._init_state(values)
 
     def _init_state(self, values) -> ShardedHeapState:
@@ -416,15 +427,33 @@ class ShardedBatchedPQ:
         self._sizes_ub = peak
         self._total = self._total + int(growth.sum()) - take
 
+    # -- transactional dispatch (DESIGN.md §15) --------------------------
+    def _snapshot(self):
+        """Device-side copies (never donated — restore survives the
+        failed pass consuming the live buffers) + the host mirror."""
+        st = ShardedHeapState(self.state.a.copy(), self.state.size.copy())
+        return st, self._sizes_ub.copy(), self._total
+
+    def _restore(self, snap) -> None:
+        self.state, self._sizes_ub, self._total = snap
+
     def _step(self, ne, buf, ni):
-        self._guard_and_account(ne, buf, ni)
-        fn = sharded_apply_batch if self.donate \
-            else sharded_apply_batch_undonated
-        self.state, vals, k_eff = fn(
-            self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
-            c_max=self.c_max, n_shards=self.n_shards,
-            key_range=self.key_range, use_pallas=self.use_pallas)
-        return vals, k_eff
+        def thunk():
+            # the mirror mutation lives INSIDE the guarded thunk so a
+            # restore rewinds accounting and device state together
+            self._guard_and_account(ne, buf, ni)
+            fn = sharded_apply_batch if self.donate \
+                else sharded_apply_batch_undonated
+            self.state, vals, k_eff = fn(
+                self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
+                c_max=self.c_max, n_shards=self.n_shards,
+                key_range=self.key_range, use_pallas=self.use_pallas)
+            return vals, k_eff
+
+        if self._guard is None:
+            return thunk()
+        return self._guard.run(thunk, self._snapshot, self._restore,
+                               site="pq.apply_batch")
 
     def apply_async(self, extracts: int, inserts) -> AsyncBatchResult:
         """Apply a combined batch; extracted values stay on device until
@@ -473,25 +502,34 @@ class ShardedBatchedPQ:
         specs, layout = expand_rounds(rounds, self.c_max)
         if not specs:
             return [RoundResult(sn, ri, None) for sn, ri in layout]
-        # guard the WHOLE command queue before dispatching anything: a
-        # refusal must leave the mirror exactly as it was (atomic — no
-        # row of a refused queue ever reaches the device)
-        saved = (self._sizes_ub.copy(), self._total)
-        try:
+
+        def commit():
+            # guard the WHOLE command queue before dispatching anything: a
+            # refusal must leave the mirror exactly as it was (atomic — no
+            # row of a refused queue ever reaches the device)
             for ne, buf, ni in specs:
                 self._guard_and_account(ne, buf, ni)
-        except ValueError:
-            self._sizes_ub, self._total = saved
-            raise
-        ne_arr = jnp.asarray(np.array([s[0] for s in specs], np.int32))
-        bufs = jnp.asarray(np.stack([s[1] for s in specs]))
-        ni_arr = jnp.asarray(np.array([s[2] for s in specs], np.int32))
-        fn = sharded_apply_rounds if self.donate \
-            else sharded_apply_rounds_undonated
-        self.state, outs, _k = fn(
-            self.state, ne_arr, bufs, ni_arr, c_max=self.c_max,
-            n_shards=self.n_shards, key_range=self.key_range,
-            use_pallas=self.use_pallas)
+            ne_arr = jnp.asarray(np.array([s[0] for s in specs], np.int32))
+            bufs = jnp.asarray(np.stack([s[1] for s in specs]))
+            ni_arr = jnp.asarray(np.array([s[2] for s in specs], np.int32))
+            fn = sharded_apply_rounds if self.donate \
+                else sharded_apply_rounds_undonated
+            self.state, outs, _k = fn(
+                self.state, ne_arr, bufs, ni_arr, c_max=self.c_max,
+                n_shards=self.n_shards, key_range=self.key_range,
+                use_pallas=self.use_pallas)
+            return outs
+
+        if self._guard is not None:
+            outs = self._guard.run(commit, self._snapshot, self._restore,
+                                   site="pq.apply_rounds")
+        else:
+            saved = (self._sizes_ub.copy(), self._total)
+            try:
+                outs = commit()
+            except ValueError:
+                self._sizes_ub, self._total = saved
+                raise
         shared = _RoundsFetch(outs, extra=lambda: self.state.size + 0,
                               on_fetch=self._refresh_sizes)
         return [RoundResult(sn, ri, shared) for sn, ri in layout]

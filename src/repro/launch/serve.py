@@ -27,6 +27,7 @@ import numpy as np
 from repro import configs
 from repro.core.batched_map import ShardedMap
 from repro.core.device_graph import DeviceGraph
+from repro.core.faults import FaultPlan
 from repro.models import lm, transformer
 from repro.serving import PCScheduler, SerialScheduler
 
@@ -89,10 +90,12 @@ class GraphExecutor:
 
     def __init__(self, n_vertices: int = 512, *, edge_capacity: int = 8192,
                  c_max: int = 64, n_shards: int = 4,
-                 use_pallas: bool = False, donate: bool = True):
+                 use_pallas: bool = False, donate: bool = True,
+                 fault_plan: Optional[FaultPlan] = None):
         self.graph = DeviceGraph(n_vertices, edge_capacity=edge_capacity,
                                  c_max=c_max, n_shards=n_shards,
-                                 use_pallas=use_pallas, donate=donate)
+                                 use_pallas=use_pallas, donate=donate,
+                                 fault_plan=fault_plan)
         self.device_steps = 0
 
     def __call__(self, reqs: List[Dict[str, Any]]) -> List[bool]:
@@ -136,7 +139,7 @@ class MapExecutor:
     def __init__(self, n_keys: int = 512, *, key_range=(0.0, 1000.0),
                  c_max: int = 64, n_shards: int = 4,
                  use_pallas: bool = False, donate: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, fault_plan: Optional[FaultPlan] = None):
         rng = np.random.default_rng(seed)
         keys = rng.choice(np.linspace(key_range[0], key_range[1],
                                       8 * n_keys, endpoint=False),
@@ -145,7 +148,8 @@ class MapExecutor:
         capacity = -(-2 * n_keys // n_shards) + 2 * c_max
         self.map = ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
                               key_range=key_range, items=items,
-                              use_pallas=use_pallas, donate=donate)
+                              use_pallas=use_pallas, donate=donate,
+                              fault_plan=fault_plan)
         self.device_steps = 0
 
     @staticmethod
@@ -193,7 +197,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 n_vertices: int = 512,
                 graph_use_pallas: bool = False,
                 rounds_cap: int = 4,
-                tier: str = "eliminate") -> Dict[str, Any]:
+                tier: str = "eliminate",
+                fault_plan: Optional[FaultPlan] = None) -> Dict[str, Any]:
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
     ``scheduler``: "serial" (one dispatch per request), "pc" (async
@@ -222,6 +227,13 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     behavior), ``host``, ``device``, or ``auto`` (the online cost model
     routes each ordering pass; decisions land in the returned
     ``tier_decisions``).
+
+    ``fault_plan``: optional deterministic :class:`FaultPlan`
+    (DESIGN.md §15) shared between the workload structure (transactional
+    guarded dispatch in the graph/map executors) and the PC scheduler
+    (combiner kill + supervisor takeover, guarded deadline-PQ dispatch,
+    circuit-breaker tier degradation).  Fault counters and the breaker
+    state land in the returned ``faults`` stats entry.
     """
     rng = np.random.default_rng(seed)
     if workload == "map":
@@ -229,7 +241,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         ex = MapExecutor(max(64, n_vertices),
                          key_range=(key_lo, key_hi), n_shards=4,
                          use_pallas=scheduler == "pc-pallas",
-                         donate=scheduler != "pc-nodonate", seed=seed)
+                         donate=scheduler != "pc-nodonate", seed=seed,
+                         fault_plan=fault_plan)
         reqs_tab = []
         for s in range(sessions):
             row = []
@@ -260,7 +273,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         ex: Any = GraphExecutor(
             n_vertices, n_shards=4,
             use_pallas=graph_use_pallas or scheduler == "pc-pallas",
-            donate=scheduler != "pc-nodonate")
+            donate=scheduler != "pc-nodonate", fault_plan=fault_plan)
         tree = [(int(i), int(rng.integers(0, max(1, i))))
                 for i in range(1, n_vertices)]
         reqs_tab = []
@@ -295,7 +308,8 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         sch = PCScheduler(ex, max_batch=max_batch, use_pq=True,
                           pq_donate=scheduler != "pc-nodonate",
                           pq_use_pallas=scheduler == "pc-pallas",
-                          rounds_cap=rounds_cap, tier=tier)
+                          rounds_cap=rounds_cap, tier=tier,
+                          fault_plan=fault_plan)
     elif scheduler == "serial":
         sch = SerialScheduler(ex)
     else:
@@ -338,8 +352,33 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         if scheduler != "serial" else 1.0,
         "tier_decisions": dict(getattr(sch, "tier_decisions", {})),
     }
+    if fault_plan is not None:
+        # robustness counters (DESIGN.md §15): the plan is shared between
+        # the structure's dispatch guard and the scheduler, so one
+        # snapshot covers faults injected at every layer
+        faults: Dict[str, Any] = fault_plan.counters.snapshot()
+        if isinstance(sch, PCScheduler):
+            faults.update(sch.fault_counters())
+        stats["faults"] = faults
     # determinism check: same prompt -> same tokens regardless of batching
     return stats
+
+
+def build_fault_plan(args) -> Optional[FaultPlan]:
+    """CLI → :class:`FaultPlan` (DESIGN.md §15); None when no fault flag
+    is set, so the default serving path carries zero fault machinery."""
+    if args.faults == "standard":
+        return FaultPlan.standard(args.fault_seed)
+    spikes = tuple(args.fault_latency_spike or ())
+    if (args.fault_kill_pass is None and args.fault_dispatch_rate == 0.0
+            and not spikes):
+        return None
+    return FaultPlan(args.fault_seed,
+                     kill_combiner_at_pass=args.fault_kill_pass,
+                     dispatch_fail_rate=args.fault_dispatch_rate,
+                     max_dispatch_failures=64,
+                     latency_spike_passes=spikes,
+                     latency_spike_s=args.fault_latency_spike_s)
 
 
 def main():
@@ -365,13 +404,29 @@ def main():
                     help="ordering-tier override for the PC scheduler "
                          "(DESIGN.md §14); 'auto' routes per pass via "
                          "the online cost model")
+    ap.add_argument("--faults", choices=["none", "standard"],
+                    default="none",
+                    help="'standard' enables the standard fault plan "
+                         "(DESIGN.md §15: kill combiner at pass 3, 10%% "
+                         "dispatch failure, one latency spike)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fault-kill-pass", type=int, default=None,
+                    help="kill the combiner loop once at this pass")
+    ap.add_argument("--fault-dispatch-rate", type=float, default=0.0,
+                    help="probability a guarded device dispatch fails")
+    ap.add_argument("--fault-latency-spike", type=int, action="append",
+                    default=None, metavar="PASS",
+                    help="inject a latency spike at this combiner pass "
+                         "(repeatable)")
+    ap.add_argument("--fault-latency-spike-s", type=float, default=0.05)
     args = ap.parse_args()
     stats = run_serving(args.arch, sessions=args.sessions,
                         requests_per_session=args.requests,
                         n_tokens=args.tokens, max_batch=args.max_batch,
                         scheduler=args.scheduler, workload=args.workload,
                         read_pct=args.read_pct,
-                        rounds_cap=args.rounds_cap, tier=args.tier)
+                        rounds_cap=args.rounds_cap, tier=args.tier,
+                        fault_plan=build_fault_plan(args))
     print("[serve]", stats)
 
 

@@ -61,8 +61,10 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.combining import (ALL_TIERS, TIER_DEVICE, TIER_HOST,
-                                  TierRouter)
+from repro.core.combining import (ALL_TIERS, TIER_DEVICE, TIER_ELIMINATE,
+                                  TIER_HOST, TierRouter)
+from repro.core.faults import (CircuitBreaker, DispatchGuard, FaultPlan,
+                               InjectedCombinerKill)
 from repro.core.sharded_pq import ShardedBatchedPQ, host_key
 
 _SENTINEL = object()
@@ -104,6 +106,7 @@ class _Entry:
     req: BatchRequest
     future: Future
     key: float = 0.0                  # f32-quantized deadline (PQ dtype)
+    epoch: int = 0                    # per-entry id (exactly-once recovery)
 
 
 class PCScheduler:
@@ -142,6 +145,14 @@ class PCScheduler:
         from its online cost model (decisions in ``tier_decisions``).
       router: optional externally-owned ``TierRouter`` (shared cost
         model / injectable clock for tests); built internally when None.
+      fault_plan: optional :class:`FaultPlan` (DESIGN.md §15).  Hooks the
+        combiner loop (kill / latency-spike injection per ordering pass)
+        and wraps the deadline PQ's device dispatch in a transactional
+        :class:`DispatchGuard` whose circuit breaker also vetoes the
+        device/eliminate ordering tiers (graceful degradation to host).
+      supervise: run a supervisor thread that restarts a dead combiner
+        loop and re-queues every unserved entry exactly once (per-entry
+        epoch ids dedupe across all internal queues).
     """
 
     def __init__(self, step_fn: Callable[[List[Any]], Sequence[Any]],
@@ -150,7 +161,9 @@ class PCScheduler:
                  pipeline: bool = True, pq_use_pallas: bool = False,
                  pq_donate: bool = True, rounds_cap: int = 4,
                  tier: str = "eliminate",
-                 router: Optional[TierRouter] = None):
+                 router: Optional[TierRouter] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 supervise: bool = True):
         self.step_fn = step_fn
         self.max_batch = max_batch
         self.use_pq = use_pq
@@ -158,12 +171,27 @@ class PCScheduler:
         self.rounds_cap = max(1, int(rounds_cap))
         if tier not in ("auto",) + tuple(ALL_TIERS):
             raise ValueError(f"unknown tier {tier!r}")
+        self.fault_plan = fault_plan
+        self.takeovers = 0             # combiner-loop restarts (DESIGN.md §15)
+        self.breaker: Optional[CircuitBreaker] = None
+        self._next_epoch = 0
+        self._inflight = 0             # device steps currently executing
+        self._sched_passes = 0         # fault-probe pass counter
         if use_pq:
+            pq_guard = None
+            if fault_plan is not None:
+                # one breaker shared between the PQ's dispatch guard and
+                # the ordering-tier router: repeated dispatch failures
+                # open it, which both trips the guard's fallback AND
+                # degrades ordering to the host tier until a probe heals.
+                self.breaker = CircuitBreaker()
+                pq_guard = DispatchGuard(fault_plan, breaker=self.breaker)
             self._pq_ctor = dict(capacity=pq_capacity,
                                  c_max=min(max_batch, 64),
                                  n_shards=n_shards,
                                  use_pallas=pq_use_pallas,
-                                 donate=pq_donate)
+                                 donate=pq_donate,
+                                 guard=pq_guard)
             self._pq = ShardedBatchedPQ(**self._pq_ctor)
             # persistent key→request table: a key is inserted into the
             # device PQ exactly once and stays there until extracted
@@ -177,6 +205,9 @@ class PCScheduler:
                 "sched", ALL_TIERS,
                 force=None if tier == "auto" else tier)
             self.tier_decisions = self.router.tier_decisions
+            if self.breaker is not None:
+                for t in (TIER_DEVICE, TIER_ELIMINATE):
+                    self.router.attach_breaker(t, self.breaker)
         self._backlog: Deque[_Entry] = deque()   # FIFO-mode leftovers
         self._pending: Deque[_Entry] = deque()   # publication buffer
         self._cond = threading.Condition()
@@ -196,6 +227,12 @@ class PCScheduler:
                 target=self._device_loop, name="pc-device", daemon=True)
             self._device.start()
         self._combiner.start()
+        self._supervisor: Optional[threading.Thread] = None
+        if supervise:
+            self._supervisor = threading.Thread(
+                target=self._supervisor_loop, name="pc-supervisor",
+                daemon=True)
+            self._supervisor.start()
 
     # -- public API ----------------------------------------------------------
     def submit_async(self, inputs: Any, deadline: float = 0.0) -> Future:
@@ -210,8 +247,12 @@ class PCScheduler:
         f: Future = Future()
         ent = _Entry(BatchRequest(inputs=inputs, deadline=deadline), f)
         with self._cond:
-            if self._closed or not self._combiner.is_alive():
+            alive = self._combiner.is_alive() or (
+                self._supervisor is not None and self._supervisor.is_alive())
+            if self._closed or not alive:
                 raise RuntimeError("scheduler is closed")
+            ent.epoch = self._next_epoch
+            self._next_epoch += 1
             self._pending.append(ent)
             self._cond.notify()
         return f
@@ -233,11 +274,25 @@ class PCScheduler:
             first = not self._closed
             self._closed = True
             self._cond.notify_all()
-        self._combiner.join()
+        if self._supervisor is not None:
+            self._supervisor.join()
+        # the supervisor may have replaced the combiner right up until it
+        # observed _closed — join whichever thread holds the role now
+        while True:
+            c = self._combiner
+            c.join()
+            if c is self._combiner:
+                break
         if self._device is not None:
             if first:
                 self._handoff.put(_SENTINEL)
             self._device.join()
+        # an in-flight device step must finish and resolve its futures
+        # BEFORE the doomed-future sweep: close() must never fail a
+        # request the device is about to answer.
+        with self._cond:
+            while self._inflight:
+                self._cond.wait()
         # safety net: no caller may hang on a future we will never serve.
         # The workers are joined, but a CONCURRENT second close() runs
         # this same sweep — take the lock so the two don't race on the
@@ -285,6 +340,18 @@ class PCScheduler:
                     return
                 new = list(self._pending)
                 self._pending.clear()
+            if self.fault_plan is not None:
+                self._sched_passes += 1
+                try:
+                    self.fault_plan.on_combiner_pass(self._sched_passes)
+                except InjectedCombinerKill:
+                    # crash emulation: push the just-collected requests
+                    # back unserved and die with them still queued — the
+                    # supervisor re-queues everything exactly-once (epoch
+                    # ids) and restarts the loop.
+                    with self._cond:
+                        self._pending.extendleft(reversed(new))
+                    raise
             try:
                 chosen_rounds = self._order(new)
             except BaseException as exc:
@@ -317,6 +384,70 @@ class PCScheduler:
             self._pq = ShardedBatchedPQ(**self._pq_ctor)
         for ent in doomed:
             _fail_future(ent.future, exc)
+
+    # -- supervisor (DESIGN.md §15) ------------------------------------------
+    def _supervisor_loop(self) -> None:
+        while True:
+            c = self._combiner
+            c.join(timeout=0.05)
+            with self._cond:
+                if self._closed:
+                    return
+                if c.is_alive() or c is not self._combiner:
+                    continue
+            self._recover(c)
+
+    def _recover(self, dead: threading.Thread) -> None:
+        """Restart a dead combiner loop, re-queueing every unserved entry
+        exactly once: entries are gathered from ALL internal queues (the
+        publication buffer, the FIFO backlog, the key table and the host
+        staging pool), deduped by per-entry epoch id, and replayed in
+        submission order.  Entries whose future already resolved (e.g. an
+        in-flight device step finished while the combiner was down) are
+        skipped — a request is never applied twice."""
+        with self._cond:
+            if self._closed or self._combiner is not dead:
+                return
+            entries = list(self._pending) + list(self._backlog)
+            self._pending.clear()
+            self._backlog.clear()
+            if self.use_pq:
+                for bucket in self._table.values():
+                    entries.extend(bucket)
+                self._table.clear()
+                entries.extend(self._staged)
+                self._staged = []
+                self._queued = 0
+                self._resident = []
+                # the device PQ may hold keys of recovered requests (and
+                # may be mid-pass inconsistent) — rebuild it from scratch;
+                # _pq_ctor carries the dispatch guard, so the rebuilt PQ
+                # stays transactional under the active fault plan
+                self._pq = ShardedBatchedPQ(**self._pq_ctor)
+            seen: set = set()
+            requeue: List[_Entry] = []
+            for ent in sorted(entries, key=lambda e: e.epoch):
+                if ent.epoch in seen or ent.future.done():
+                    continue
+                seen.add(ent.epoch)
+                requeue.append(ent)
+            self._pending.extend(requeue)
+            self.takeovers += 1
+            if self.fault_plan is not None:
+                self.fault_plan.counters.bump("takeovers")
+            self._combiner = threading.Thread(
+                target=self._combiner_loop, name="pc-combiner", daemon=True)
+            self._combiner.start()
+            self._cond.notify_all()
+
+    def fault_counters(self) -> Dict[str, Any]:
+        """Robustness counters surfaced to ops layers (DESIGN.md §15)."""
+        out: Dict[str, Any] = {"scheduler_takeovers": self.takeovers}
+        if self.fault_plan is not None:
+            out.update(self.fault_plan.counters.snapshot())
+        if self.breaker is not None:
+            out["breaker_state"] = self.breaker.state
+        return out
 
     def _peek_resident(self) -> Optional[float]:
         """Smallest key still resident in the device PQ (lazy min-heap:
@@ -465,6 +596,8 @@ class PCScheduler:
             self._run_batch(batch)
 
     def _run_batch(self, batch: List[_Entry]) -> None:
+        with self._cond:
+            self._inflight += 1
         try:
             outs = list(self.step_fn([e.req.inputs for e in batch]))
             for ent, out in zip(batch, outs):
@@ -477,6 +610,10 @@ class PCScheduler:
         except BaseException as exc:   # propagate to every waiting client
             for ent in batch:
                 _fail_future(ent.future, exc)
+        finally:
+            with self._cond:
+                self._inflight -= 1
+                self._cond.notify_all()
 
 
 class SerialScheduler:

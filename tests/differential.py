@@ -21,6 +21,7 @@ from typing import Callable, List, Set, Tuple
 
 import numpy as np
 
+from repro.core.faults import FaultPlan
 from repro.core.seq_map import SequentialSortedMap
 from repro.core.seq_pq import SequentialHeap
 from repro.core.sharded_pq import host_key
@@ -257,6 +258,29 @@ def fuzz_map_vs_oracle(m, rng, steps: int, *, key_hi: float = 100.0
             np.testing.assert_allclose([v for _, v in got_items],
                                        [v for _, v in want_items],
                                        rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fault-mode factories (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def make_faulty_factory(ctor: Callable[..., object],
+                        rates=(0.05, 0.1, 0.2)) -> Callable[[], object]:
+    """Wrap a structure ctor so every instantiation gets a FRESH
+    deterministic :class:`FaultPlan` — seed and dispatch-failure rate
+    cycle per call, so each hypothesis example runs under a different
+    fault schedule.  Rates stay ≤ 0.2: with the guard's 8 retries the
+    chance of exhausting them is ≤ 0.2⁹ ≈ 5e-7, so the transactional
+    guard must make every injected failure invisible to the oracle —
+    zero lost ops, zero duplicated ops."""
+    state = {"n": 0}
+
+    def factory():
+        i = state["n"]
+        state["n"] += 1
+        plan = FaultPlan(seed=i, dispatch_fail_rate=rates[i % len(rates)])
+        return ctor(fault_plan=plan)
+
+    return factory
 
 
 # ---------------------------------------------------------------------------

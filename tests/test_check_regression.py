@@ -122,6 +122,45 @@ def test_stable_run_prints_no_unstable_note(tmp_path, capsys):
     assert "UNSTABLE" not in capsys.readouterr().out
 
 
+def test_fault_plan_row_skipped_visibly(tmp_path, capsys):
+    """A fresh row recorded under an active fault plan (truthy
+    ``fault_plan`` field) measures injected faults, not the hot path —
+    it must be excluded from gating with a VISIBLE FAULT-PLAN line
+    (ISSUE 7 satellite), never silently compared or dropped."""
+    faulty = dict(_row("PC-K4 guarded", 10.0), fault_plan="standard")
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0), faulty])
+    base = _write(tmp_path, "base.json",
+                  _baseline([_row("PC-K4", 100.0),
+                             _row("PC-K4 guarded", 100.0)]))
+    # the guarded cell dropped 10x but ran under faults — pass...
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+    out = capsys.readouterr().out
+    # ...loudly, naming the excluded row
+    assert "FAULT-PLAN" in out and "NOT GATED" in out
+    assert "PC-K4 guarded" in out
+
+
+def test_fault_plan_baseline_row_skipped_visibly(tmp_path, capsys):
+    """Same rule on the baseline side: a trajectory row recorded under a
+    fault plan must not serve as a gating baseline."""
+    faulty = dict(_row("PC-K4", 1000.0), fault_plan={"seed": 0})
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4", 100.0)])
+    base = _write(tmp_path, "base.json", _baseline([faulty]))
+    # only baseline row is fault-tainted -> nothing comparable, but the
+    # baseline has no clean gating rows either: informational pass
+    assert check("map", fresh_path=fresh, baseline_path=base) == 0
+    assert "FAULT-PLAN" in capsys.readouterr().out
+
+
+def test_fault_free_guarded_row_still_gates(tmp_path):
+    """The fault-free ``PC-K4 guarded`` bench row has no fault_plan
+    field: it must gate like any other PC row."""
+    fresh = _write(tmp_path, "fresh.json", [_row("PC-K4 guarded", 10.0)])
+    base = _write(tmp_path, "base.json",
+                  _baseline([_row("PC-K4 guarded", 100.0)]))
+    assert check("map", fresh_path=fresh, baseline_path=base) == 1
+
+
 def test_config_drift_with_gating_baseline_still_fails(tmp_path):
     """ZERO overlap against a baseline that HAS gating rows is still the
     silent-no-op-gate failure (the PR-4 contract)."""

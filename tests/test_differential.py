@@ -14,7 +14,8 @@ pytest.importorskip(
     reason="state-machine fuzz needs hypothesis (pip install -e .[test])")
 from hypothesis import HealthCheck, settings  # noqa: E402
 
-from differential import (make_graph_machine, make_map_machine,  # noqa: E402
+from differential import (make_faulty_factory,  # noqa: E402
+                          make_graph_machine, make_map_machine,
                           make_pq_machine)
 
 from repro.core.batched_map import ShardedMap  # noqa: E402
@@ -99,3 +100,36 @@ TestAdaptiveGraphMachine = _machine_case(
         lambda: AdaptiveReadWrite(
             DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2),
             DynamicGraph(N), router=_auto_router("graph")), N))
+
+
+# fault-mode machines (PR-7 satellite; DESIGN.md §15): the SAME rule sets
+# run with a fresh deterministic FaultPlan per example — injected device
+# dispatch failures at up to 20% per program.  The transactional guard
+# (snapshot → restore → retry) must keep every structure exactly
+# oracle-equivalent: zero lost ops, zero duplicated ops, mirrors intact.
+def _fault_machine_case(machine_cls):
+    machine_cls.TestCase.settings = _SETTINGS
+    machine_cls.TestCase.pytestmark = [pytest.mark.faults]
+    return machine_cls.TestCase
+
+
+TestFaultyShardedPQMachine = _fault_machine_case(
+    make_pq_machine(
+        make_faulty_factory(
+            lambda fault_plan: ShardedBatchedPQ(
+                512, c_max=8, n_shards=2, fault_plan=fault_plan)),
+        c_max=8))
+
+TestFaultyShardedMapMachine = _fault_machine_case(
+    make_map_machine(
+        make_faulty_factory(
+            lambda fault_plan: ShardedMap(
+                128, c_max=8, n_shards=4, key_range=(0.0, 100.0),
+                fault_plan=fault_plan))))
+
+TestFaultyDeviceGraphMachine = _fault_machine_case(
+    make_graph_machine(
+        make_faulty_factory(
+            lambda fault_plan: DeviceGraph(
+                N, edge_capacity=256, c_max=8, n_shards=2,
+                fault_plan=fault_plan)), N))
