@@ -12,15 +12,17 @@ pass — EXPERIMENTS §Ablations) over the reduced qwen2 model.  The
 opt-in via ``schedulers=``, not in the default run — Pallas interpret
 mode on a CPU backend is too slow for a benchmark row.
 
-``--workload graph`` serves the §5.1 dynamic-graph application through
-the same schedulers (``GraphExecutor`` over the device-resident
-``DeviceGraph``, DESIGN.md §11) with ``--read-pct`` read share; rows land
-in bench_serving_graph.json.
+``--workload <structure>`` serves ANY registered batched structure
+(``repro.core.substrate``, DESIGN.md §16 — graph, map, pq, sketch,
+unionfind, ...) through the same schedulers via the generic
+``StructureExecutor`` with ``--read-pct`` read share; rows land in
+bench_serving_<structure>.json.
 """
 from __future__ import annotations
 
 import argparse
 
+from repro.core import substrate
 from repro.launch.serve import run_serving
 
 from ._timing import median_iqr
@@ -70,7 +72,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--tokens", type=int, default=6)
-    ap.add_argument("--workload", choices=["decode", "graph"],
+    ap.add_argument("--workload",
+                    choices=["decode"] + substrate.names(),
                     default="decode")
     ap.add_argument("--read-pct", type=int, default=90)
     ap.add_argument("--requests", type=int, default=3)

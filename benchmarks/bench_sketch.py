@@ -1,0 +1,166 @@
+"""Counting/top-k sketch throughput — the first registry-proven workload
+(DESIGN.md §16), enrolled through its ``StructureSpec.bench`` row.
+
+Workload: prepopulate S random key→count pairs; each thread issues reads
+with probability c% — an even mix of ``count`` (known key), ``total``,
+``distinct`` and ``topk`` — and ``add`` updates (70% revisiting a known
+hot key, else a fresh one) otherwise.  Increments commute, so the fused
+update pass is the paper's best case: the combiner nets a whole batch to
+one scatter-add per shard.
+
+Implementations:
+
+* ``FC host`` — flat combining over the sequential sketch
+  (``core/seq_sketch.py``): the host baseline.
+* ``Lock`` — global mutex over the same host sketch (calibration row).
+* ``PC-K{1,4}`` — ``batched_read_optimized`` over the K-sharded
+  device-resident ``ShardedSketch`` (hash routed): fused donated add
+  passes, one read program per combined read batch, one blocking fetch.
+* ``PC-K4 nodonate`` / ``PC-K4 pallas`` — ablation twins (copy-per-pass
+  dispatch; the scatter-add through the ``grid=(K,)`` Pallas kernel,
+  interpret mode off-TPU).
+* ``PC-K4 guarded`` — fault-free transactional-guard twin (DESIGN.md
+  §15): snapshot per pass, no plan.
+* ``PC-adaptive`` — tier routing by the online cost model (§14).
+
+Every row reports median-of-N with IQR via ``benchmarks._timing.measure``;
+rows are keyed (impl, read_pct, threads) for the CI regression gate
+(``check_regression.py --bench sketch``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.batched_sketch import ShardedSketch
+from repro.core.locks import LockDS
+from repro.core.pc_sketch import fc_sketch, pc_adaptive_sketch, pc_sketch
+from repro.core.seq_sketch import SequentialSketch
+
+from ._timing import measure
+from .bench_pq import shard_capacity
+from .common import save
+
+C_MAX = 16
+KEY_RANGE = (0.0, 1000.0)
+
+DEFAULT_IMPLS = ("FC host", "Lock", "PC-K1", "PC-K4", "PC-K4 nodonate",
+                 "PC-K4 pallas", "PC-K4 guarded", "PC-adaptive")
+
+
+def _items(rng, n_keys):
+    """n_keys distinct f32 keys from KEY_RANGE with integer counts."""
+    grid = np.linspace(KEY_RANGE[0], KEY_RANGE[1], 8 * n_keys,
+                       endpoint=False).astype(np.float32)
+    keys = rng.choice(grid, n_keys, replace=False)
+    return [(float(k), float(int(rng.integers(1, 10)))) for k in keys]
+
+
+def _make_impl(name, items, capacity):
+    """Returns the engine/wrapper object; call ``.execute`` on it."""
+    if name == "FC host":
+        return fc_sketch(items)
+    if name == "Lock":
+        return LockDS(SequentialSketch(items))
+    if name == "PC-adaptive":
+        return pc_adaptive_sketch(shard_capacity(capacity, 4, c_max=C_MAX),
+                                  c_max=C_MAX, n_shards=4, items=items)
+    if name.startswith("PC-K"):
+        parts = name.split()
+        K = int(parts[0][len("PC-K"):])
+        flavor = parts[1] if len(parts) > 1 else ""
+        # hash routing is i.i.d. per shard: binomial-tail sizing applies
+        s = ShardedSketch(shard_capacity(capacity, K, c_max=C_MAX),
+                          c_max=C_MAX, n_shards=K, items=items,
+                          use_pallas=flavor == "pallas",
+                          donate=flavor != "nodonate",
+                          guard=True if flavor == "guarded" else None)
+        return pc_sketch(s)
+    raise ValueError(f"unknown impl {name!r}")
+
+
+def bench_sketch(n_keys=2000, read_pcts=(50, 90, 100),
+                 threads=(1, 2, 4, 8), ops=200, seed=0,
+                 impls=DEFAULT_IMPLS, repeats=5):
+    results = []
+    rng = np.random.default_rng(seed)
+    items = _items(rng, n_keys)
+    known = np.asarray([k for k, _ in items], np.float32)
+
+    def warmup(ex):
+        """Exercise every op path (fused add pass, every read kind) so
+        jit compile time stays out of the timed rows."""
+        ex("add", (KEY_RANGE[1] - 1.0, 1.0))
+        ex("count", KEY_RANGE[1] - 1.0)
+        ex("total", None)
+        ex("distinct", None)
+        ex("topk", 4)
+
+    for c in read_pcts:
+        for P in threads:
+            for name in impls:
+                # bound the live key set: warmup + repeats timed runs add
+                # at most (repeats+2)·P·ops fresh keys on top of S
+                cap = n_keys + (repeats + 2) * P * ops + 2
+                eng = _make_impl(name, items, cap)
+                ex = eng.execute
+                warmup(ex)
+                td = getattr(eng, "tier_decisions", None)
+                if td is not None:      # count the timed window only
+                    for k in td:
+                        td[k] = 0
+
+                def body(tid, ex=ex):
+                    r = np.random.default_rng(1000 + tid)
+                    for _ in range(ops):
+                        p = r.random() * 100
+                        if p < c:
+                            q = int(r.integers(0, 4))
+                            if q == 0:
+                                ex("count",
+                                   float(known[r.integers(len(known))]))
+                            elif q == 1:
+                                ex("total", None)
+                            elif q == 2:
+                                ex("distinct", None)
+                            else:
+                                ex("topk", int(r.integers(1, 8)))
+                        else:
+                            if r.random() < 0.7:
+                                key = float(known[r.integers(len(known))])
+                            else:
+                                key = float(np.float32(
+                                    r.uniform(*KEY_RANGE)))
+                            ex("add", (key, float(int(r.integers(1, 10)))))
+
+                row = measure(P, ops, body, repeats=repeats)
+                row.update({"read_pct": c, "threads": P, "impl": name,
+                            "n_keys": n_keys})
+                if td is not None:
+                    row["tier_decisions"] = dict(td)
+                results.append(row)
+                print(f"[sketch] c={c}% P={P} {name:16s}"
+                      f" {row['ops_per_s']:9.0f} ops/s "
+                      f"(iqr {row['iqr']:.0f})")
+    save("bench_sketch", results)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--keys", type=int, default=2000)
+    ap.add_argument("--ops", type=int, default=200)
+    ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--reads", type=int, nargs="+", default=[50, 90, 100])
+    ap.add_argument("--impls", nargs="+", default=list(DEFAULT_IMPLS))
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed repeats per row (median + IQR reported)")
+    a = ap.parse_args(argv)
+    bench_sketch(n_keys=a.keys, ops=a.ops, threads=tuple(a.threads),
+                 read_pcts=tuple(a.reads), impls=tuple(a.impls),
+                 repeats=a.repeats)
+
+
+if __name__ == "__main__":
+    main()

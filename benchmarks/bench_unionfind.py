@@ -1,0 +1,139 @@
+"""Batched union-find throughput — the second registry-proven workload
+(DESIGN.md §16), enrolled through its ``StructureSpec.bench`` row.
+
+Workload: n vertices, initially singleton; each thread issues reads with
+probability c% — an even mix of ``find``, ``connected`` and
+``components`` — and ``union`` updates otherwise (50% chain edges, the
+long-merge-path stress case for the contracted fixpoint, else random
+links).  Unions are idempotent on state, so the fused merge pass nets a
+combined batch to one contracted scatter-min fixpoint per pass.
+
+Implementations:
+
+* ``FC host`` — flat combining over the sequential union-find
+  (``core/seq_union_find.py``): the host baseline.
+* ``Lock`` — global mutex over the same host structure (calibration).
+* ``PC`` — ``batched_read_optimized`` over the device-resident
+  ``BatchedUnionFind``: fused donated merge passes, one read program per
+  combined read batch, one blocking fetch per pass.
+* ``PC nodonate`` / ``PC pallas`` — ablation twins (copy-per-pass
+  dispatch; the label fixpoint through the ``grid=(K,)`` Pallas kernel,
+  interpret mode off-TPU).
+* ``PC guarded`` — fault-free transactional-guard twin (DESIGN.md §15).
+* ``PC-adaptive`` — tier routing by the online cost model (§14).
+
+Every row reports median-of-N with IQR via ``benchmarks._timing.measure``;
+rows are keyed (impl, read_pct, threads) for the CI regression gate
+(``check_regression.py --bench unionfind``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.locks import LockDS
+from repro.core.pc_union_find import (fc_union_find,
+                                      pc_adaptive_union_find,
+                                      pc_batched_union_find)
+from repro.core.seq_union_find import SequentialUnionFind
+
+from ._timing import measure
+from .common import save
+
+C_MAX = 16
+
+DEFAULT_IMPLS = ("FC host", "Lock", "PC", "PC nodonate", "PC pallas",
+                 "PC guarded", "PC-adaptive")
+
+
+def _make_impl(name, n):
+    """Returns the engine/wrapper object; call ``.execute`` on it."""
+    if name == "FC host":
+        return fc_union_find(n)
+    if name == "Lock":
+        return LockDS(SequentialUnionFind(n))
+    if name == "PC-adaptive":
+        return pc_adaptive_union_find(n, c_max=C_MAX)
+    if name == "PC" or name.startswith("PC "):
+        flavor = name[3:]
+        return pc_batched_union_find(
+            n, c_max=C_MAX,
+            n_shards=4 if flavor == "pallas" else 1,
+            use_pallas=flavor == "pallas",
+            donate=flavor != "nodonate",
+            guard=True if flavor == "guarded" else None)
+    raise ValueError(f"unknown impl {name!r}")
+
+
+def bench_unionfind(n=1024, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
+                    ops=200, seed=0, impls=DEFAULT_IMPLS, repeats=5):
+    results = []
+
+    def warmup(ex):
+        """Exercise every op path before the timed section."""
+        ex("union", (0, 1))
+        ex("find", 0)
+        ex("connected", (0, 2))
+        ex("components", None)
+
+    for c in read_pcts:
+        for P in threads:
+            for name in impls:
+                eng = _make_impl(name, n)
+                ex = eng.execute
+                warmup(ex)
+                td = getattr(eng, "tier_decisions", None)
+                if td is not None:      # count the timed window only
+                    for k in td:
+                        td[k] = 0
+
+                def body(tid, ex=ex):
+                    r = np.random.default_rng(1000 + tid)
+                    for _ in range(ops):
+                        p = r.random() * 100
+                        if p < c:
+                            q = int(r.integers(0, 3))
+                            if q == 0:
+                                ex("find", int(r.integers(n)))
+                            elif q == 1:
+                                ex("connected", (int(r.integers(n)),
+                                                 int(r.integers(n))))
+                            else:
+                                ex("components", None)
+                        else:
+                            u = int(r.integers(n))
+                            v = ((u + 1) % n if r.random() < 0.5
+                                 else int(r.integers(n)))
+                            ex("union", (u, v))
+
+                row = measure(P, ops, body, repeats=repeats)
+                row.update({"read_pct": c, "threads": P, "impl": name,
+                            "n": n})
+                if td is not None:
+                    row["tier_decisions"] = dict(td)
+                results.append(row)
+                print(f"[unionfind] c={c}% P={P} {name:16s}"
+                      f" {row['ops_per_s']:9.0f} ops/s "
+                      f"(iqr {row['iqr']:.0f})")
+    save("bench_unionfind", results)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=1024)
+    ap.add_argument("--ops", type=int, default=200)
+    ap.add_argument("--threads", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--reads", type=int, nargs="+", default=[50, 90, 100])
+    ap.add_argument("--impls", nargs="+", default=list(DEFAULT_IMPLS))
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed repeats per row (median + IQR reported)")
+    a = ap.parse_args(argv)
+    bench_unionfind(n=a.vertices, ops=a.ops, threads=tuple(a.threads),
+                    read_pcts=tuple(a.reads), impls=tuple(a.impls),
+                    repeats=a.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,8 @@ KEYS = {
     "pq": ("impl", "size", "threads"),
     "graph": ("impl", "workload", "read_pct", "threads"),
     "map": ("impl", "read_pct", "threads"),
+    "sketch": ("impl", "read_pct", "threads"),
+    "unionfind": ("impl", "read_pct", "threads"),
 }
 
 

@@ -1,15 +1,21 @@
 """Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
 
-Runs one benchmark per paper table/figure (quick settings — the full
-sweeps are CLI flags on each module) plus the roofline aggregation over
-the dry-run artifacts.  ``--repeats`` plumbs the shared timing
-discipline (``benchmarks/_timing.py``: warmup + median-of-N + IQR)
-through every row.
+Structure benchmarks AUTO-ENROLL from the workload registry
+(``repro.core.substrate``, DESIGN.md §16): every registered
+:class:`StructureSpec` with a ``bench`` module contributes one step,
+driven by its ``bench_smoke`` quick-sweep argv — registering a new
+structure adds its bench row here with zero edits to this file.  The
+fixed steps (batch scaling, serving, roofline) follow.  ``--repeats``
+plumbs the shared timing discipline (``benchmarks/_timing.py``: warmup +
+median-of-N + IQR) through every row.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import time
+
+from repro.core import substrate
 
 
 def main(argv=None) -> None:
@@ -20,43 +26,41 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     repeats = args.repeats
 
+    enrolled = [s for s in substrate.specs() if s.bench]
+    n_steps = len(enrolled) + 3
     t0 = time.time()
-    print("=" * 70)
-    print("[1/6] Fig.2 — priority queue throughput (PC vs FC vs Lock)")
-    print("=" * 70)
-    from .bench_pq import bench_pq
-    bench_pq(sizes=(20_000,), threads=(1, 2, 4), ops=150, repeats=repeats)
 
-    print("=" * 70)
-    print("[2/6] Fig.1 — dynamic graph throughput (PC vs Lock vs RW vs FC)")
-    print("=" * 70)
-    from .bench_graph import bench_graph
-    bench_graph(n_vertices=300, read_pcts=(50, 100), threads=(1, 4),
-                ops=60, repeats=repeats)
+    step = 0
+    for spec in enrolled:
+        step += 1
+        print("=" * 70)
+        print(f"[{step}/{n_steps}] {spec.title or spec.name} "
+              f"({spec.bench}, registry-enrolled)")
+        print("=" * 70)
+        mod = importlib.import_module(spec.bench)
+        mod.main(list(spec.bench_smoke) + ["--repeats", str(repeats)])
 
+    step += 1
     print("=" * 70)
-    print("[3/6] Batched ordered map (PC vs FC host, read-fraction sweep)")
-    print("=" * 70)
-    from .bench_map import bench_map
-    bench_map(n_keys=1000, read_pcts=(50, 100), threads=(1, 4), ops=60,
-              impls=("FC host", "PC-K1", "PC-K4"), repeats=repeats)
-
-    print("=" * 70)
-    print("[4/6] Thm.4 — batched heap cost scaling O(c log c + log n)")
+    print(f"[{step}/{n_steps}] Thm.4 — batched heap cost scaling "
+          f"O(c log c + log n)")
     print("=" * 70)
     from .bench_batch_scaling import bench_scaling
     bench_scaling(n_fixed=1 << 13, c_list=(2, 8, 32),
                   n_list=(1 << 10, 1 << 13, 1 << 16))
 
+    step += 1
     print("=" * 70)
-    print("[5/6] Serving — PC scheduler vs serial dispatch")
+    print(f"[{step}/{n_steps}] Serving — PC scheduler vs serial dispatch")
     print("=" * 70)
     from .bench_serving import bench_serving
     bench_serving(session_counts=(1, 4), requests=2, tokens=4,
                   repeats=repeats)
 
+    step += 1
     print("=" * 70)
-    print("[6/6] Roofline — 3-term analysis over the dry-run artifacts")
+    print(f"[{step}/{n_steps}] Roofline — 3-term analysis over the "
+          f"dry-run artifacts")
     print("=" * 70)
     try:
         from .roofline import main as roofline_main

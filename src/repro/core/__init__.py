@@ -22,6 +22,11 @@ from .dynamic_graph import DynamicGraph
 from .device_graph import DeviceGraph, GraphState
 from .seq_map import SequentialSortedMap
 from .batched_map import BatchedMap, MapState, ShardedMap
+from .seq_sketch import SequentialSketch
+from .batched_sketch import ShardedSketch, SketchState
+from .seq_union_find import SequentialUnionFind
+from .batched_union_find import BatchedUnionFind, UFState
+from . import substrate
 
 __all__ = [
     "ParallelCombiner", "PublicationRecord", "Request", "Status",
@@ -33,4 +38,7 @@ __all__ = [
     "batched_read_optimized", "read_optimized_combining",
     "DynamicGraph", "DeviceGraph", "GraphState",
     "SequentialSortedMap", "BatchedMap", "MapState", "ShardedMap",
+    "SequentialSketch", "ShardedSketch", "SketchState",
+    "SequentialUnionFind", "BatchedUnionFind", "UFState",
+    "substrate",
 ]

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import substrate
 from repro.kernels.sorted_merge import (merge_compact_sharded,
                                         merge_compact_xla)
 
@@ -387,7 +388,7 @@ class AsyncMapUpdate:
 # ---------------------------------------------------------------------------
 # Host-facing wrappers
 # ---------------------------------------------------------------------------
-class ShardedMap:
+class ShardedMap(substrate.BatchedStructure):
     """K-sharded device-resident ordered map with combining passes.
 
     Args:
@@ -413,6 +414,7 @@ class ShardedMap:
     they were (regression-tested; the sharded-PQ overflow audit).
     """
 
+    structure = "map"
     read_only: Set[str] = {"lookup", "range_count", "range_sum",
                            "kth_smallest"}
 
@@ -483,6 +485,9 @@ class ShardedMap:
     # -- occupancy guard ------------------------------------------------------
     def _refresh_sizes(self, sizes) -> None:
         self._sizes_ub = np.asarray(sizes, np.int64).copy()
+
+    def occupancy_mirror(self):
+        return {"sizes_ub": self._sizes_ub}
 
     def _guard_slices(self, slices) -> None:
         """Atomic sync-free overflow guard over ALL slices of a batch:
@@ -595,10 +600,7 @@ class ShardedMap:
         self._refresh_sizes(fetched[1])
         return fetched[2]
 
-    def update_batch(self, methods: Sequence[str],
-                     inputs: Sequence[Any]) -> List[bool]:
-        """Blocking ``update_batch_async`` (one fetch, at return)."""
-        return self.update_batch_async(methods, inputs).result()
+    # ``update_batch`` / generic ``apply`` inherit from BatchedStructure
 
     def insert(self, key: float, value: float) -> bool:
         return self.update_batch(["insert"], [(key, value)])[0]
@@ -659,12 +661,6 @@ class ShardedMap:
     def kth_smallest(self, k: int) -> Optional[float]:
         return self.read_batch(["kth_smallest"], [k])[0]
 
-    # -- generic apply (Lock / FC wrappers, fuzz loops) -----------------------
-    def apply(self, method: str, input: Any = None) -> Any:
-        if method in _UPDATE_CODE:
-            return self.update_batch([method], [input])[0]
-        return self.read_batch([method], [input])[0]
-
     # -- debug / test helpers -------------------------------------------------
     def items(self) -> List[Tuple[float, float]]:
         """Host copy of the live (key, value) pairs, ascending (one
@@ -687,3 +683,124 @@ class BatchedMap(ShardedMap):
         super().__init__(capacity, c_max=c_max, n_shards=1, items=items,
                          use_pallas=use_pallas, donate=donate,
                          fault_plan=fault_plan, guard=guard)
+
+
+# ---------------------------------------------------------------------------
+# Registration (DESIGN.md §16) — factories + op generators + adaptive hooks
+# ---------------------------------------------------------------------------
+from . import read_opt as _read_opt
+from .seq_map import SequentialSortedMap
+
+_KEY_RANGE = (0.0, 100.0)
+
+
+def _gen_update(rng, k, ctx):
+    """Pool-biased mixed batches: 60% revisit a known key (so deletes and
+    assigns actually hit), insert/assign/delete at 50/25/25."""
+    pool = ctx.setdefault("keys", [])
+    methods, inputs = [], []
+    for _ in range(k):
+        if pool and rng.random() < 0.6:
+            key = pool[int(rng.integers(len(pool)))]
+        else:
+            key = _qkey(float(rng.uniform(_KEY_RANGE[0], _KEY_RANGE[1])))
+            pool.append(key)
+        r = rng.random()
+        if r < 0.5:
+            methods.append("insert")
+            inputs.append((key, _qval(float(rng.uniform(-50.0, 50.0)))))
+        elif r < 0.75:
+            methods.append("assign")
+            inputs.append((key, _qval(float(rng.uniform(-50.0, 50.0)))))
+        else:
+            methods.append("delete")
+            inputs.append(key)
+    return methods, inputs
+
+
+def _gen_read(rng, k, ctx):
+    pool = ctx.setdefault("keys", [])
+    methods, inputs = [], []
+    for _ in range(k):
+        r = rng.random()
+        if r < 0.35 and pool:
+            methods.append("lookup")
+            inputs.append(pool[int(rng.integers(len(pool)))])
+        elif r < 0.5:
+            methods.append("lookup")
+            inputs.append(_qkey(float(rng.uniform(_KEY_RANGE[0],
+                                                  _KEY_RANGE[1]))))
+        elif r < 0.7:
+            lo, hi = sorted((float(rng.uniform(*_KEY_RANGE)),
+                             float(rng.uniform(*_KEY_RANGE))))
+            methods.append("range_count")
+            inputs.append((_qkey(lo), _qkey(hi)))
+        elif r < 0.85:
+            lo, hi = sorted((float(rng.uniform(*_KEY_RANGE)),
+                             float(rng.uniform(*_KEY_RANGE))))
+            methods.append("range_sum")
+            inputs.append((_qkey(lo), _qkey(hi)))
+        else:
+            methods.append("kth_smallest")
+            inputs.append(int(rng.integers(1, 21)))
+    return methods, inputs
+
+
+def _result_ok(method: str, got: Any, want: Any) -> bool:
+    if method == "range_sum":
+        return abs(got - want) <= 1e-3 + 1e-5 * abs(want)
+    if method in ("lookup", "kth_smallest"):
+        if got is None or want is None:
+            return got is None and want is None
+        return abs(got - want) <= 1e-6 * max(1.0, abs(want))
+    return got == want
+
+
+def _refusal_batch(ds: ShardedMap):
+    """capacity + 1 distinct keys packed into the lowest quarter of shard
+    0's key range: every one routes to shard 0, so the batch must be
+    refused whatever the other shards hold."""
+    lo, hi = ds.key_range if ds.key_range else _KEY_RANGE
+    sliver = lo + (hi - lo) / (4.0 * ds.n_shards)
+    n = ds.capacity + 1
+    ks = [_qkey(float(x)) for x in
+          np.linspace(lo, sliver, num=4 * n).tolist()]
+    ks = sorted(set(ks))[:n]
+    assert len(ks) == n
+    return (["insert"] * n, [(k, 1.0) for k in ks])
+
+
+def _make(capacity: int = 256, c_max: int = 8, n_shards: int = 4,
+          **kw) -> ShardedMap:
+    kw.setdefault("key_range", _KEY_RANGE)
+    return ShardedMap(capacity, c_max=c_max, n_shards=n_shards, **kw)
+
+
+def _dump_compare(ds: ShardedMap, oracle) -> None:
+    got, want = ds.items(), oracle.items()
+    assert len(got) == len(want), (got, want)
+    if got:
+        gk, gv = zip(*got)
+        wk, wv = zip(*want)
+        assert np.allclose(gk, wk) and np.allclose(gv, wv), (got, want)
+
+
+substrate.register(substrate.StructureSpec(
+    name="map",
+    module="repro.core.batched_map",
+    title="batched ordered map",
+    make=_make,
+    make_host=lambda ds: SequentialSortedMap(ds.items()),
+    gen_update=_gen_update,
+    gen_read=_gen_read,
+    result_ok=_result_ok,
+    dump_compare=_dump_compare,
+    canon=_read_opt._canon_map_op,
+    compact=_read_opt._compact_map,
+    refusal_batch=_refusal_batch,
+    bench="benchmarks.bench_map",
+    bench_smoke=("--keys", "1000", "--reads", "50", "100",
+                 "--threads", "1", "4", "--ops", "60",
+                 "--impls", "FC host", "PC-K1", "PC-K4"),
+    extras={"serve_kw": dict(capacity=512, c_max=64, n_shards=4)},
+))

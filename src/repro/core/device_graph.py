@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.kernels.label_prop import connected_components, merge_labels
 
+from . import substrate
 from .faults import make_guard
 
 # All device→host transfers on the graph hot path route through this hook
@@ -319,7 +320,7 @@ class AsyncUpdateResult:
 # ---------------------------------------------------------------------------
 # Host-facing wrapper
 # ---------------------------------------------------------------------------
-class DeviceGraph:
+class DeviceGraph(substrate.BatchedStructure):
     """Device-resident dynamic graph with batched combining passes.
 
     Args:
@@ -346,6 +347,7 @@ class DeviceGraph:
     refresh+read pass per read batch, one blocking fetch per pass.
     """
 
+    structure = "graph"
     read_only: Set[str] = {"connected"}
 
     def __init__(self, n_vertices: int, *, edge_capacity: int = 4096,
@@ -547,10 +549,11 @@ class DeviceGraph:
             self._unresolved.remove(h)
         return fetched[1]
 
-    def update_batch(self, methods: Sequence[str],
-                     inputs: Sequence[Any]) -> List[Any]:
-        """Blocking ``update_batch_async`` (one fetch, at return)."""
-        return self.update_batch_async(methods, inputs).result()
+    # ``update_batch`` / generic ``apply`` inherit from BatchedStructure
+
+    def occupancy_mirror(self):
+        return {"n_edges": self._n_edges,
+                "outstanding_ins": self._outstanding_ins}
 
     def insert_batch(self, edges: Sequence[Tuple[int, int]]) -> List[bool]:
         """Insert a batch of edges; per-edge "was new" results."""
@@ -612,16 +615,6 @@ class DeviceGraph:
         assert all(m == "connected" for m in methods)
         return self.connected_batch(inputs)
 
-    # -- generic apply (Lock / RW-Lock / FC wrappers) -------------------------
-    def apply(self, method: str, input: Any = None) -> Any:
-        if method == "insert":
-            return self.insert(*input)
-        if method == "delete":
-            return self.delete(*input)
-        if method == "connected":
-            return self.connected(*input)
-        raise ValueError(f"unknown method {method!r}")
-
     # -- debug / test helpers -------------------------------------------------
     def full_rebuilds(self) -> int:
         """Device-side full-rebuild counter (the union-find fast-path
@@ -634,3 +627,88 @@ class DeviceGraph:
                                      self.state.valid))
         return {(int(u), int(v))
                 for u, v, ok in zip(eu, ev, valid) if ok}
+
+
+# ---------------------------------------------------------------------------
+# Registration (DESIGN.md §16) — factories + op generators + adaptive hooks
+# ---------------------------------------------------------------------------
+from . import read_opt as _read_opt
+from .dynamic_graph import DynamicGraph as _DynamicGraph
+
+_N_DEFAULT = 24
+
+
+def _gen_update(rng, k, ctx):
+    """Pool-biased edge batches: 60% revisit a known edge (deletes and
+    duplicate inserts actually collide), insert/delete at 65/35."""
+    pool = ctx.setdefault("edges", [])
+    n = ctx.get("n", _N_DEFAULT)
+    methods, inputs = [], []
+    for _ in range(k):
+        if pool and rng.random() < 0.6:
+            u, v = pool[int(rng.integers(len(pool)))]
+        else:
+            u = int(rng.integers(n))
+            v = int(rng.integers(n))
+            pool.append((u, v))
+        methods.append("insert" if rng.random() < 0.65 else "delete")
+        inputs.append((u, v))
+    return methods, inputs
+
+
+def _gen_read(rng, k, ctx):
+    n = ctx.get("n", _N_DEFAULT)
+    return (["connected"] * k,
+            [(int(rng.integers(n)), int(rng.integers(n)))
+             for _ in range(k)])
+
+
+def _refusal_batch(ds: DeviceGraph):
+    """capacity + 1 distinct fresh edge classes: the whole-batch edge
+    bound must refuse before any slice dispatches."""
+    need = ds.capacity + 1
+    pairs = [(u, v) for u in range(ds.n) for v in range(u + 1, ds.n)]
+    assert len(pairs) >= need, "vertex count too small for refusal probe"
+    return (["insert"] * need, pairs[:need])
+
+
+def _make(n: int = _N_DEFAULT, edge_capacity: int = 256, c_max: int = 8,
+          n_shards: int = 2, **kw) -> DeviceGraph:
+    return DeviceGraph(n, edge_capacity=edge_capacity, c_max=c_max,
+                       n_shards=n_shards, **kw)
+
+
+def _make_host(ds: DeviceGraph) -> _DynamicGraph:
+    host = _DynamicGraph(ds.n)
+    for u, v in sorted(ds.edges()):
+        host.insert(u, v)
+    return host
+
+
+def _edge_set(obj):
+    edges = obj.edges() if callable(obj.edges) else obj.edges
+    return {(min(u, v), max(u, v)) for u, v in edges}
+
+
+def _dump_compare(ds: DeviceGraph, oracle) -> None:
+    got, want = _edge_set(ds), _edge_set(oracle)
+    assert got == want, (sorted(got), sorted(want))
+
+
+substrate.register(substrate.StructureSpec(
+    name="graph",
+    module="repro.core.device_graph",
+    title="dynamic connectivity graph",
+    make=_make,
+    make_host=_make_host,
+    gen_update=_gen_update,
+    gen_read=_gen_read,
+    new_ctx=lambda: {"n": _N_DEFAULT},
+    dump_compare=_dump_compare,
+    compact=_read_opt._compact_graph,
+    refusal_batch=_refusal_batch,
+    bench="benchmarks.bench_graph",
+    bench_smoke=("--vertices", "300", "--reads", "50", "100",
+                 "--threads", "1", "4", "--ops", "60"),
+    extras={"serve_kw": dict(c_max=64, n_shards=4)},
+))

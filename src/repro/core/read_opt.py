@@ -23,6 +23,7 @@ from __future__ import annotations
 import contextlib
 from typing import Any, Callable, List, Optional, Protocol, Sequence, Set, Tuple
 
+from . import substrate
 from .combining import (TIER_DEVICE, TIER_ELIMINATE, TIER_HOST,
                         ParallelCombiner, Request, RequestFailure, Status,
                         TierRouter)
@@ -199,6 +200,39 @@ def _canon_map_op(method: str, input: Any) -> Any:
     return input                     # kth_smallest: integer rank
 
 
+def _compact_map(log: List[Tuple[str, Any]],
+                 host) -> List[Tuple[str, Any]]:
+    """Map log compaction: collapse same-key chains to the final mirror
+    state per key (the host knows it exactly via ``lookup``)."""
+    chains: dict = {}                   # key → ops, first-seen order
+    for m, i in log:
+        k = i if m == "delete" else i[0]
+        chains.setdefault(k, []).append((m, i))
+    out: List[Tuple[str, Any]] = []
+    for k, chain in chains.items():
+        if len(chain) == 1:             # nothing to collapse
+            out.extend(chain)
+            continue
+        v = host.lookup(k)
+        if v is None:
+            out.append(("delete", k))   # no-op when never present
+        else:
+            # upsert as insert-then-assign (covers both presences)
+            out.append(("insert", (k, v)))
+            out.append(("assign", (k, v)))
+    return out
+
+
+def _compact_graph(log: List[Tuple[str, Any]],
+                   host) -> List[Tuple[str, Any]]:
+    """Graph log compaction: the LAST op per edge class alone decides
+    final presence."""
+    last = {}
+    for m, (u, v) in log:
+        last[(min(u, v), max(u, v))] = (m, (u, v))
+    return list(last.values())
+
+
 class AdaptiveReadWrite:
     """Tier-routed read/write structure (DESIGN.md §14): a device-resident
     structure and a host mirror behind ONE ``apply``/``update_batch``/
@@ -231,9 +265,19 @@ class AdaptiveReadWrite:
         self.host = host_ds
         self.read_only: Set[str] = set(device_ds.read_only)
         if structure is None:
-            structure = "map" if hasattr(host_ds, "lookup") else "graph"
-        self._canon = (_canon_map_op if hasattr(host_ds, "lookup")
-                       else lambda m, i: i)
+            structure = getattr(device_ds, "structure", "") or \
+                ("map" if hasattr(host_ds, "lookup") else "graph")
+        # registry-driven hooks (DESIGN.md §16): a registered structure
+        # brings its own op canonicalization + log compaction; ad-hoc
+        # structures fall back to the map/graph heuristics
+        spec = substrate.try_get(structure)
+        if spec is not None:
+            self._canon = spec.canon
+            self._compact_hook = spec.compact
+        else:
+            self._canon = (_canon_map_op if hasattr(host_ds, "lookup")
+                           else lambda m, i: i)
+            self._compact_hook = None
         self.router = router or TierRouter(
             structure, (TIER_HOST, TIER_DEVICE))
         self._dev_log: List[Tuple[str, Any]] = []   # device missed these
@@ -284,30 +328,13 @@ class AdaptiveReadWrite:
                 self.host.apply(m, i)
 
     def _compact(self, log: List[Tuple[str, Any]]) -> List[Tuple[str, Any]]:
-        """Collapse same-key chains to the final mirror state per key."""
+        """Collapse the replay log via the structure's registered
+        compaction rule (DESIGN.md §16), else the map/graph heuristics."""
+        if self._compact_hook is not None:
+            return self._compact_hook(log, self.host)
         if hasattr(self.host, "lookup"):        # ordered map
-            chains: dict = {}                   # key → ops, first-seen order
-            for m, i in log:
-                k = i if m == "delete" else i[0]
-                chains.setdefault(k, []).append((m, i))
-            out: List[Tuple[str, Any]] = []
-            for k, chain in chains.items():
-                if len(chain) == 1:             # nothing to collapse
-                    out.extend(chain)
-                    continue
-                v = self.host.lookup(k)
-                if v is None:
-                    out.append(("delete", k))   # no-op when never present
-                else:
-                    # upsert as insert-then-assign (covers both presences)
-                    out.append(("insert", (k, v)))
-                    out.append(("assign", (k, v)))
-            return out
-        # graph: the LAST op per edge class alone decides final presence
-        last = {}
-        for m, (u, v) in log:
-            last[(min(u, v), max(u, v))] = (m, (u, v))
-        return list(last.values())
+            return _compact_map(log, self.host)
+        return _compact_graph(log, self.host)
 
     def _flush_device(self) -> None:
         """Replay (compacted) host-served ops on the device.  The handle
@@ -330,8 +357,15 @@ class AdaptiveReadWrite:
         with ctx:
             if tier == TIER_HOST:
                 self._replay_host()
-                res = [self.host.apply(m, i)
-                       for m, i in zip(methods, inputs)]
+                # prefer the host's native batch entry: structures with
+                # batch-boundary semantics (the union-find's pre-batch
+                # snapshot rule) answer identically on either tier only
+                # when the host sees the same batches the device would
+                if hasattr(self.host, "update_batch"):
+                    res = self.host.update_batch(list(methods), inputs)
+                else:
+                    res = [self.host.apply(m, i)
+                           for m, i in zip(methods, inputs)]
                 self._dev_log.extend(zip(methods, inputs))
                 return _DoneHandle(res)
             # device: the pending replay fuses into THIS dispatch
@@ -387,6 +421,14 @@ class AdaptiveReadWrite:
     def edges(self):
         self._flush_device()
         return self.device.edges()
+
+    def counters(self):
+        self._flush_device()
+        return self.device.counters()
+
+    def labels(self):
+        self._flush_device()
+        return self.device.labels()
 
 
 def adaptive_read_engine(device_ds, host_ds, *, structure: str,

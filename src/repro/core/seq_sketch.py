@@ -1,0 +1,95 @@
+"""Sequential counting/top-k sketch — the host tier + differential
+oracle for the device-resident batched sketch (DESIGN.md §16).
+
+A bounded table of ``key -> count`` counters with integer-valued f32
+weights (exact f32 sums by construction, so the device tier's vectorized
+adds can be compared bit-for-bit).  ``add`` returns True iff the op
+*created* the counter; reads are ``count`` / ``total`` / ``distinct`` /
+``topk`` (descending count, ascending-key tie-break — the deterministic
+order both tiers share).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from .sharded_pq import host_key
+
+
+def _qk(x: float) -> float:
+    """The exact f32 key image the device sketch stores (DESIGN.md §7)."""
+    k = float(np.float32(x))
+    if np.isnan(k) or np.isinf(k):
+        raise ValueError("sketch keys must be finite f32")
+    return host_key(k)
+
+
+def _qw(w: float) -> float:
+    """Weights are positive integers stored as f32 (exact sums)."""
+    wi = int(w)
+    if wi < 1 or wi != w:
+        raise ValueError("sketch weights must be positive integers")
+    return float(np.float32(wi))
+
+
+class SequentialSketch:
+    """Pure-python counter table; the batched sketch's oracle/host tier."""
+
+    read_only: Set[str] = {"count", "total", "distinct", "topk"}
+
+    def __init__(self, items=None):
+        self._c: Dict[float, float] = {}
+        for k, w in (items or []):
+            self._c[_qk(k)] = self._c.get(_qk(k), 0.0) + _qw(w)
+
+    def __len__(self) -> int:
+        return len(self._c)
+
+    # -- updates -------------------------------------------------------------
+    def add(self, key: float, w: float = 1.0) -> bool:
+        k, wq = _qk(key), _qw(w)
+        created = k not in self._c
+        self._c[k] = self._c.get(k, 0.0) + wq
+        return created
+
+    # -- reads ---------------------------------------------------------------
+    def count(self, key: float) -> float:
+        return float(self._c.get(_qk(key), 0.0))
+
+    def total(self) -> float:
+        return float(sum(self._c.values()))
+
+    def distinct(self) -> int:
+        return len(self._c)
+
+    def topk(self, k: int) -> List[Tuple[float, float]]:
+        """Top-k (key, count) pairs, count descending, key ascending."""
+        ranked = sorted(self._c.items(), key=lambda kv: (-kv[1], kv[0]))
+        return [(float(a), float(b)) for a, b in ranked[: int(k)]]
+
+    # -- batch facade (protocol-shaped, for the adaptive tier / kit) ---------
+    def apply(self, method: str, input: Any = None) -> Any:
+        if method == "add":
+            return self.add(*input)
+        if method == "count":
+            return self.count(input)
+        if method == "total":
+            return self.total()
+        if method == "distinct":
+            return self.distinct()
+        if method == "topk":
+            return self.topk(input)
+        raise ValueError(f"unknown method {method!r}")
+
+    def update_batch(self, methods: Sequence[str],
+                     inputs: Sequence[Any]) -> List[Any]:
+        return [self.apply(m, i) for m, i in zip(methods, inputs)]
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        return [self.apply(m, i) for m, i in zip(methods, inputs)]
+
+    def items(self) -> List[Tuple[float, float]]:
+        """Live (key, count) pairs ascending by key."""
+        return sorted((float(k), float(v)) for k, v in self._c.items())

@@ -1,0 +1,100 @@
+"""Sequential union-find — the host tier + differential oracle for the
+device-resident batched union-find (DESIGN.md §16).
+
+Min-label convention: ``find(u)`` is the smallest vertex id in ``u``'s
+component, which makes the canonical labeling unique — the device tier's
+min-propagation fixpoint computes exactly the same function, so labels
+compare bit-for-bit.
+
+Batch semantics (the pre-batch snapshot rule, mirroring the PQ's
+"extracts see the pre-batch multiset"): within one ``update_batch``,
+every ``union``'s result is evaluated against the labeling at batch
+START — True iff the endpoints were then in different components — and
+all unions apply together.  Single-op ``apply`` degenerates to the usual
+sequential rule.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Set, Tuple
+
+
+class SequentialUnionFind:
+    """Pure-python min-label union-find over vertices ``[0, n)``."""
+
+    read_only: Set[str] = {"find", "connected", "components"}
+
+    def __init__(self, n: int):
+        if n < 1:
+            raise ValueError("n must be >= 1")
+        self.n = int(n)
+        self._label = list(range(self.n))
+
+    def _check(self, u) -> int:
+        u = int(u)
+        if not 0 <= u < self.n:
+            raise ValueError(f"vertex {u} outside [0, {self.n})")
+        return u
+
+    # -- reads ---------------------------------------------------------------
+    def find(self, u: int) -> int:
+        return self._label[self._check(u)]
+
+    def connected(self, u: int, v: int) -> bool:
+        return self.find(u) == self.find(v)
+
+    def components(self) -> int:
+        return sum(1 for i, l in enumerate(self._label) if i == l)
+
+    # -- updates -------------------------------------------------------------
+    def _merge(self, u: int, v: int) -> None:
+        lu, lv = self._label[u], self._label[v]
+        if lu == lv:
+            return
+        lo, hi = min(lu, lv), max(lu, lv)
+        self._label = [lo if l == hi else l for l in self._label]
+
+    def union(self, u: int, v: int) -> bool:
+        u, v = self._check(u), self._check(v)
+        merged = self._label[u] != self._label[v]
+        self._merge(u, v)
+        return merged
+
+    # -- batch facade (protocol-shaped) --------------------------------------
+    def update_batch(self, methods: Sequence[str],
+                     inputs: Sequence[Any]) -> List[Any]:
+        edges = []
+        for m, i in zip(methods, inputs):
+            if m != "union":
+                raise ValueError(f"unknown update method {m!r}")
+            edges.append((self._check(i[0]), self._check(i[1])))
+        # pre-batch snapshot rule: results against the batch-start labels
+        out = [self._label[u] != self._label[v] for u, v in edges]
+        for u, v in edges:
+            self._merge(u, v)
+        return out
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        out: List[Any] = []
+        for m, i in zip(methods, inputs):
+            if m == "find":
+                out.append(self.find(i))
+            elif m == "connected":
+                out.append(self.connected(*i))
+            elif m == "components":
+                out.append(self.components())
+            else:
+                raise ValueError(f"unknown read method {m!r}")
+        return out
+
+    def apply(self, method: str, input: Any = None) -> Any:
+        if method in self.read_only:
+            return self.read_batch([method], [input])[0]
+        return self.update_batch([method], [input])[0]
+
+    def labels(self) -> List[int]:
+        """The full canonical (min-label) labeling — the state dump."""
+        return list(self._label)
+
+    def edges(self) -> List[Tuple[int, int]]:  # adaptive-tier dump parity
+        raise NotImplementedError

@@ -46,12 +46,14 @@ combining passes for the price of one dispatch.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import batched_pq as _bpq
+from . import substrate
 from .faults import make_guard
 from .batched_pq import (
     INF,
@@ -315,7 +317,31 @@ sharded_apply_rounds_undonated = jax.jit(_sharded_rounds_impl,
 # ---------------------------------------------------------------------------
 # Host-facing wrapper (same interface as BatchedPriorityQueue)
 # ---------------------------------------------------------------------------
-class ShardedBatchedPQ:
+class _PQBatchHandle:
+    """Protocol-shaped view of an :class:`AsyncBatchResult`: per-op
+    results in arrival order — ``extract_min`` ops get the batch's
+    ascending extracted values (None-padded past the live size, matching
+    the oracle's pop order), ``insert`` ops get None."""
+
+    def __init__(self, batch_handle: Optional[AsyncBatchResult],
+                 methods: List[str]):
+        self._h = batch_handle
+        self._methods = methods
+
+    def result(self) -> List[Any]:
+        vals = self._h.result() if self._h is not None else []
+        out: List[Any] = []
+        j = 0
+        for m in self._methods:
+            if m == "extract_min":
+                out.append(vals[j] if j < len(vals) else None)
+                j += 1
+            else:
+                out.append(None)
+        return out
+
+
+class ShardedBatchedPQ(substrate.BatchedStructure):
     """K-sharded device-resident PQ with combined batch application.
 
     Args:
@@ -349,6 +375,9 @@ class ShardedBatchedPQ:
     not thread-safe; confine each instance to one thread (the scheduler's
     combiner loop does).
     """
+
+    structure = "pq"
+    read_only: Set[str] = {"values"}
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 4,
                  values=None, key_range: Optional[Tuple[float, float]] = None,
@@ -545,3 +574,203 @@ class ShardedBatchedPQ:
         for k in range(self.n_shards):
             out.extend(a[k, 1 : sizes[k] + 1].tolist())
         return sorted(out)
+
+    # -- BatchedStructure protocol surface (DESIGN.md §16) --------------------
+    # The native combined-batch entry stays ``apply(extracts, inserts)``
+    # (the §4 interface the scheduler drives); the protocol's generic
+    # single-op entry is ``apply_op``.
+    def update_batch_async(self, methods: Sequence[str],
+                           inputs: Sequence[Any]) -> _PQBatchHandle:
+        """Protocol adapter: a mixed insert/extract_min op list becomes
+        ONE combined ``apply_async(ne, inserts)`` batch (extracts see the
+        pre-batch multiset, §4 semantics)."""
+        ne = 0
+        ins: List[float] = []
+        for m, i in zip(methods, inputs):
+            if m == "insert":
+                ins.append(float(i))
+            elif m == "extract_min":
+                ne += 1
+            else:
+                raise ValueError(f"unknown update method {m!r}")
+        if ne == 0 and not ins:
+            return _PQBatchHandle(None, list(methods))
+        return _PQBatchHandle(self.apply_async(ne, ins), list(methods))
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        """Answer ``values`` reads with ONE blocking fetch (late-bound
+        through ``batched_pq._host_fetch`` so sync-counting tests see
+        it), which also re-tightens the occupancy mirror."""
+        for m in methods:
+            if m != "values":
+                raise ValueError(f"unknown read method {m!r}")
+        if not methods:
+            return []
+        # `+ 0` detaches from buffers the next donated apply would eat
+        a, sizes = _bpq._host_fetch((self.state.a + 0,
+                                     self.state.size + 0))
+        self._refresh_sizes(sizes)
+        a = np.asarray(a)
+        vals: List[float] = []
+        for k in range(self.n_shards):
+            vals.extend(a[k, 1 : int(sizes[k]) + 1].tolist())
+        vals.sort()
+        return [list(vals) for _ in methods]
+
+    def apply_op(self, method: str, input: Any = None) -> Any:
+        """Generic single-op entry (the protocol's ``apply`` under a
+        non-clashing name — ``apply`` keeps the §4 batch signature)."""
+        return substrate.BatchedStructure.apply(self, method, input)
+
+    def occupancy_mirror(self):
+        return {"sizes_ub": self._sizes_ub, "total": self._total}
+
+
+# ---------------------------------------------------------------------------
+# Registration (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+class SequentialBatchedPQ:
+    """Protocol-shaped PQ oracle/host mirror with the §4 batch rule,
+    INCLUDING the slicing rule for oversized batches: one
+    ``update_batch`` lowers onto ≤ c_max slices with extracts and
+    inserts advancing together (exactly :func:`expand_rounds`), each
+    slice's extracts seeing the pre-SLICE multiset, answered ascending
+    with per-slice None padding past the live size; inserts return None.
+    ``c_max=None`` means one unbounded slice (the pre-batch rule)."""
+
+    read_only: Set[str] = {"values"}
+
+    def __init__(self, values=None, c_max: Optional[int] = None):
+        self._v: List[float] = sorted(
+            host_key(float(np.float32(v))) for v in (values or []))
+        self.c_max = c_max
+
+    def __len__(self) -> int:
+        return len(self._v)
+
+    def update_batch(self, methods: Sequence[str],
+                     inputs: Sequence[Any]) -> List[Any]:
+        ne = 0
+        ins: List[float] = []
+        for m, i in zip(methods, inputs):
+            if m == "insert":
+                ins.append(host_key(float(np.float32(i))))
+            elif m == "extract_min":
+                ne += 1
+            else:
+                raise ValueError(f"unknown update method {m!r}")
+        c = self.c_max if self.c_max is not None else max(1, ne, len(ins))
+        take: List[Any] = []
+        while ne > 0 or ins:
+            k_e, k_i = min(ne, c), min(len(ins), c)
+            vals, self._v = self._v[:k_e], self._v[k_e:]
+            take.extend(vals)
+            take.extend([None] * (k_e - len(vals)))   # empty-queue pads
+            self._v = sorted(self._v + ins[:k_i])
+            ne -= k_e
+            ins = ins[k_i:]
+        out: List[Any] = []
+        j = 0
+        for m in methods:
+            if m == "extract_min":
+                out.append(take[j])
+                j += 1
+            else:
+                out.append(None)
+        return out
+
+    def read_batch(self, methods: Sequence[str],
+                   inputs: Sequence[Any]) -> List[Any]:
+        for m in methods:
+            if m != "values":
+                raise ValueError(f"unknown read method {m!r}")
+        return [list(self._v) for _ in methods]
+
+    def apply(self, method: str, input: Any = None) -> Any:
+        if method == "values":
+            return self.read_batch([method], [input])[0]
+        return self.update_batch([method], [input])[0]
+
+    def values(self) -> List[float]:
+        return list(self._v)
+
+
+def _gen_update(rng, k, ctx):
+    """Mixed insert/extract batches; inserts draw fresh f32 keys, ~40%
+    of lanes extract (crossing the empty-queue boundary regularly)."""
+    methods, inputs = [], []
+    for _ in range(k):
+        if rng.random() < 0.4:
+            methods.append("extract_min")
+            inputs.append(None)
+        else:
+            methods.append("insert")
+            inputs.append(float(np.float32(rng.uniform(-1000.0, 1000.0))))
+    return methods, inputs
+
+
+def _gen_read(rng, k, ctx):
+    return ["values"] * k, [None] * k
+
+
+def _result_ok(method: str, got: Any, want: Any) -> bool:
+    def close(g, w):
+        if g is None or w is None:
+            return g is None and w is None
+        return abs(g - w) <= 1e-6 * max(1.0, abs(w))
+
+    if method == "values":
+        return (len(got) == len(want)
+                and all(close(g, w) for g, w in zip(got, want)))
+    return close(got, want)
+
+
+def _dump_compare(ds: ShardedBatchedPQ, oracle) -> None:
+    got, want = ds.values(), oracle.values()
+    assert len(got) == len(want), (got, want)
+    assert all(abs(g - w) <= 1e-6 * max(1.0, abs(w))
+               for g, w in zip(got, want)), (got, want)
+    # device heap invariant: slot 0 of every shard is the +inf scratch,
+    # parents never exceed children (the §4 layout)
+    a = np.asarray(ds.state.a)
+    sizes = np.asarray(ds.state.size)
+    for k in range(ds.n_shards):
+        assert np.isinf(a[k, 0]), a[k, 0]
+        n = int(sizes[k])
+        for v in range(2, n + 1):
+            assert a[k, v >> 1] <= a[k, v], (k, v, a[k])
+
+
+def _refusal_batch(ds: ShardedBatchedPQ):
+    """More inserts than total slot capacity: pigeonhole forces one
+    shard past ``capacity - 1`` live slots whatever the routing does."""
+    n = (ds.capacity - 1) * ds.n_shards + 1
+    return (["insert"] * n, [1000.0 + 2.0 * i for i in range(n)])
+
+
+def _make(capacity: int = 512, c_max: int = 8, n_shards: int = 2,
+          **kw) -> ShardedBatchedPQ:
+    return ShardedBatchedPQ(capacity, c_max=c_max, n_shards=n_shards, **kw)
+
+
+substrate.register(substrate.StructureSpec(
+    name="pq",
+    module="repro.core.batched_pq",
+    title="sharded batched priority queue",
+    make=_make,
+    make_host=lambda ds: SequentialBatchedPQ(ds.values(),
+                                             c_max=ds.c_max),
+    gen_update=_gen_update,
+    gen_read=_gen_read,
+    result_ok=_result_ok,
+    dump_compare=_dump_compare,
+    refusal_batch=_refusal_batch,
+    # the PQ's documented contract is one fetch per CONSUMED apply
+    # (AsyncBatchResult), not read-resolves-updates
+    reads_resolve_updates=False,
+    bench="benchmarks.bench_pq",
+    bench_smoke=("--size", "20000", "--threads", "1", "2", "4",
+                 "--ops", "150"),
+    extras={"serve_kw": dict(capacity=4096, c_max=16, n_shards=4)},
+))

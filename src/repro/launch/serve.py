@@ -25,8 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.batched_map import ShardedMap
-from repro.core.device_graph import DeviceGraph
+from repro.core import substrate
 from repro.core.faults import FaultPlan
 from repro.models import lm, transformer
 from repro.serving import PCScheduler, SerialScheduler
@@ -76,110 +75,41 @@ class DecodeExecutor:
         return [out[i, : int(r["n_tokens"])] for i, r in enumerate(reqs)]
 
 
-class GraphExecutor:
-    """Graph-query executor — the scheduler's ``graph`` workload
-    (DESIGN.md §11), beside the decode workload above.
+class StructureExecutor:
+    """Registry-driven structure executor (DESIGN.md §16) — ONE executor
+    class serves EVERY registered :class:`~repro.core.substrate.
+    StructureSpec` workload (graph, map, pq, sketch, union-find, and any
+    future registration) through the protocol surface alone.
 
-    Each combined batch is a list of ``{'op': 'insert'|'delete'|
-    'connected', 'edge': (u, v)}`` requests.  Updates are applied first in
-    arrival order (ONE fused mixed-op device pass per ≤ c_max slice via
-    ``DeviceGraph.update_batch``), then ALL reads are answered with one
-    gather/compare device call — the §3.3 read-optimized transform with
-    the scheduler's combiner loop playing the combiner.
+    Each combined batch is a list of ``{'method': ..., 'input': ...}``
+    requests.  Updates are applied first in arrival order (ONE fused
+    mixed-op device pass per ≤ c_max slice via ``update_batch_async``,
+    result masks left on device), then ALL reads are answered with one
+    vectorized read program whose single fetch also resolves the update
+    handles — the §3.3 read-optimized transform with the scheduler's
+    combiner loop playing the combiner.
     """
 
-    def __init__(self, n_vertices: int = 512, *, edge_capacity: int = 8192,
-                 c_max: int = 64, n_shards: int = 4,
-                 use_pallas: bool = False, donate: bool = True,
-                 fault_plan: Optional[FaultPlan] = None):
-        self.graph = DeviceGraph(n_vertices, edge_capacity=edge_capacity,
-                                 c_max=c_max, n_shards=n_shards,
-                                 use_pallas=use_pallas, donate=donate,
-                                 fault_plan=fault_plan)
+    def __init__(self, spec: substrate.StructureSpec, **make_kw):
+        self.spec = spec
+        self.ds = spec.make(**make_kw)
         self.device_steps = 0
-
-    def __call__(self, reqs: List[Dict[str, Any]]) -> List[bool]:
-        methods = [r["op"] for r in reqs]
-        upd = [i for i, m in enumerate(methods) if m != "connected"]
-        reads = [i for i, m in enumerate(methods) if m == "connected"]
-        out: List[Any] = [None] * len(reqs)
-        handle = None
-        if upd:
-            # ONE fused mixed-op program (update_rounds scans the ≤ c_max
-            # slices, DESIGN.md §12); result masks ride the read fetch
-            handle = self.graph.update_batch_async(
-                [methods[i] for i in upd], [reqs[i]["edge"] for i in upd])
-            self.device_steps += 1
-        if reads:
-            res = self.graph.read_batch(
-                ["connected"] * len(reads),
-                [reqs[i]["edge"] for i in reads])
-            for i, r in zip(reads, res):
-                out[i] = r
-            self.device_steps += 1
-        if handle is not None:
-            for i, r in zip(upd, handle.result()):
-                out[i] = r
-        return out
-
-
-class MapExecutor:
-    """Ordered-map executor — the scheduler's ``map`` workload
-    (DESIGN.md §13), beside the decode and graph workloads.
-
-    Each combined batch is a list of ``{'op': ..., 'key': ..., 'val':
-    ..., 'lo': ..., 'hi': ..., 'k': ...}`` requests over the K-sharded
-    batched map.  Updates are applied first in arrival order (ONE fused
-    mixed-op pass per ≤ c_max slice, masks left on device), then ALL
-    reads are answered with one vectorized read program whose single
-    fetch also resolves the update masks — the §3.3 read-optimized
-    transform with the scheduler's combiner loop playing the combiner.
-    """
-
-    def __init__(self, n_keys: int = 512, *, key_range=(0.0, 1000.0),
-                 c_max: int = 64, n_shards: int = 4,
-                 use_pallas: bool = False, donate: bool = True,
-                 seed: int = 0, fault_plan: Optional[FaultPlan] = None):
-        rng = np.random.default_rng(seed)
-        keys = rng.choice(np.linspace(key_range[0], key_range[1],
-                                      8 * n_keys, endpoint=False),
-                          n_keys, replace=False).astype(np.float32)
-        items = [(float(k), float(rng.uniform(0, 10))) for k in keys]
-        capacity = -(-2 * n_keys // n_shards) + 2 * c_max
-        self.map = ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
-                              key_range=key_range, items=items,
-                              use_pallas=use_pallas, donate=donate,
-                              fault_plan=fault_plan)
-        self.device_steps = 0
-
-    @staticmethod
-    def _decode(req):
-        op = req["op"]
-        if op in ("insert", "assign"):
-            return op, (req["key"], req["val"])
-        if op == "delete":
-            return op, req["key"]
-        if op == "lookup":
-            return op, req["key"]
-        if op == "kth_smallest":
-            return op, req["k"]
-        return op, (req["lo"], req["hi"])
 
     def __call__(self, reqs: List[Dict[str, Any]]) -> List[Any]:
-        ops = [self._decode(r) for r in reqs]
-        upd = [i for i, (m, _) in enumerate(ops)
-               if m not in self.map.read_only]
-        reads = [i for i, (m, _) in enumerate(ops)
-                 if m in self.map.read_only]
+        methods = [r["method"] for r in reqs]
+        inputs = [r["input"] for r in reqs]
+        ro = self.ds.read_only
+        upd = [i for i, m in enumerate(methods) if m not in ro]
+        reads = [i for i, m in enumerate(methods) if m in ro]
         out: List[Any] = [None] * len(reqs)
         handle = None
         if upd:
-            handle = self.map.update_batch_async(
-                [ops[i][0] for i in upd], [ops[i][1] for i in upd])
+            handle = self.ds.update_batch_async(
+                [methods[i] for i in upd], [inputs[i] for i in upd])
             self.device_steps += 1
         if reads:
-            res = self.map.read_batch([ops[i][0] for i in reads],
-                                      [ops[i][1] for i in reads])
+            res = self.ds.read_batch([methods[i] for i in reads],
+                                     [inputs[i] for i in reads])
             for i, r in zip(reads, res):
                 out[i] = r
             self.device_steps += 1
@@ -187,6 +117,29 @@ class MapExecutor:
             for i, r in zip(upd, handle.result()):
                 out[i] = r
         return out
+
+
+def _structure_requests(spec: substrate.StructureSpec, rng, sessions: int,
+                        requests_per_session: int, read_pct: int,
+                        serve_kw: Dict[str, Any]) -> List[List[dict]]:
+    """Synthetic per-session request tables from the spec's registered
+    op generators: ``read_pct``% reads, the rest updates, drawn from ONE
+    shared ctx so sessions revisit each other's keys (the duplicate /
+    delete-reinsert schedules the combiner nets out)."""
+    ctx = spec.new_ctx()
+    if isinstance(ctx, dict) and "n" in serve_kw:
+        ctx["n"] = serve_kw["n"]          # sizing knob the generators read
+    tab = []
+    for _ in range(sessions):
+        row = []
+        for _ in range(requests_per_session):
+            gen = (spec.gen_read
+                   if spec.gen_read is not None
+                   and rng.random() * 100 < read_pct else spec.gen_update)
+            ms, ins = gen(rng, 1, ctx)
+            row.append({"method": ms[0], "input": ins[0]})
+        tab.append(row)
+    return tab
 
 
 def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
@@ -210,17 +163,18 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     (the PQ's combining passes run as shard-grid Pallas kernels,
     DESIGN.md §10).
 
-    ``workload``: "decode" (LM decode batches over ``DecodeExecutor``),
-    "graph" (dynamic-graph queries over ``GraphExecutor`` — the §5.1
-    read-dominated application served through the same scheduler;
-    ``read_pct`` sets each session's share of ``connected`` queries) or
-    "map" (ordered-map queries over ``MapExecutor`` — DESIGN.md §13;
-    ``read_pct`` sets the share of lookup/range/kth reads, the rest
-    split across insert/assign/delete).  Under the graph and map
-    workloads the ablation scheduler modes apply to the engine too:
-    "pc-nodonate" un-donates its passes and "pc-pallas" routes label
-    rebuilds / merge-compacts through the shard-grid kernels
-    (DESIGN.md §11, §13).
+    ``workload``: "decode" (LM decode batches over ``DecodeExecutor``)
+    or the name of ANY registered batched structure (``repro.core.
+    substrate`` — "graph", "map", "pq", "sketch", "unionfind", ...),
+    served through the generic :class:`StructureExecutor` with request
+    streams drawn from the spec's registered op generators;
+    ``read_pct`` sets each session's share of read queries.  Structure
+    sizing comes from the spec's ``extras["serve_kw"]`` (falling back to
+    the registered defaults); for the graph workload ``n_vertices``
+    still overrides the vertex count.  Under the structure workloads the
+    ablation scheduler modes apply to the engine too: "pc-nodonate"
+    un-donates its passes and "pc-pallas" routes rebuilds through the
+    shard-grid kernels (DESIGN.md §11, §13).
 
     ``tier``: ordering-tier override for the PC schedulers
     (DESIGN.md §14) — ``eliminate`` (default, the static pre-§14
@@ -236,61 +190,24 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     state land in the returned ``faults`` stats entry.
     """
     rng = np.random.default_rng(seed)
-    if workload == "map":
-        key_lo, key_hi = 0.0, 1000.0
-        ex = MapExecutor(max(64, n_vertices),
-                         key_range=(key_lo, key_hi), n_shards=4,
-                         use_pallas=scheduler == "pc-pallas",
-                         donate=scheduler != "pc-nodonate", seed=seed,
-                         fault_plan=fault_plan)
-        reqs_tab = []
-        for s in range(sessions):
-            row = []
-            for _ in range(requests_per_session):
-                p = rng.random() * 100
-                key = float(np.float32(rng.uniform(key_lo, key_hi)))
-                if p < read_pct:
-                    r = int(rng.integers(0, 4))
-                    if r == 0:
-                        row.append({"op": "lookup", "key": key})
-                    elif r == 1:
-                        row.append({"op": "kth_smallest",
-                                    "k": int(rng.integers(1, 64))})
-                    else:
-                        lo = min(key, key_hi - 50.0)
-                        op = "range_count" if r == 2 else "range_sum"
-                        row.append({"op": op, "lo": lo, "hi": lo + 50.0})
-                else:
-                    r = int(rng.integers(0, 3))
-                    val = float(np.float32(rng.uniform(0, 10)))
-                    op = ("insert", "assign", "delete")[r]
-                    if op == "delete":
-                        row.append({"op": op, "key": key})
-                    else:
-                        row.append({"op": op, "key": key, "val": val})
-            reqs_tab.append(row)
-    elif workload == "graph":
-        ex: Any = GraphExecutor(
-            n_vertices, n_shards=4,
-            use_pallas=graph_use_pallas or scheduler == "pc-pallas",
-            donate=scheduler != "pc-nodonate", fault_plan=fault_plan)
-        tree = [(int(i), int(rng.integers(0, max(1, i))))
-                for i in range(1, n_vertices)]
-        reqs_tab = []
-        for s in range(sessions):
-            row = []
-            for _ in range(requests_per_session):
-                p = rng.random() * 100
-                edge = tree[int(rng.integers(0, len(tree)))]
-                if p < read_pct:
-                    row.append({"op": "connected",
-                                "edge": (int(rng.integers(0, n_vertices)),
-                                         int(rng.integers(0, n_vertices)))})
-                elif p < read_pct + (100 - read_pct) / 2:
-                    row.append({"op": "insert", "edge": edge})
-                else:
-                    row.append({"op": "delete", "edge": edge})
-            reqs_tab.append(row)
+    if workload != "decode" and substrate.try_get(workload) is not None:
+        spec = substrate.get(workload)
+        if not spec.serve:
+            raise ValueError(f"structure {workload!r} is not enrolled "
+                             f"for serving (spec.serve=False)")
+        serve_kw = dict(spec.extras.get("serve_kw", {}))
+        if workload == "graph":
+            serve_kw["n"] = n_vertices
+            serve_kw.setdefault("edge_capacity", 16 * n_vertices)
+        use_pallas = scheduler == "pc-pallas" or (
+            workload == "graph" and graph_use_pallas)
+        ex: Any = StructureExecutor(
+            spec, use_pallas=use_pallas,
+            donate=scheduler != "pc-nodonate", fault_plan=fault_plan,
+            **serve_kw)
+        reqs_tab = _structure_requests(spec, rng, sessions,
+                                       requests_per_session, read_pct,
+                                       serve_kw)
     elif workload == "decode":
         cfg = configs.get_reduced(arch_id)
         ex = DecodeExecutor(cfg, max_batch=max_batch,
@@ -392,7 +309,8 @@ def main():
                     choices=["pc", "pc-async", "pc-nodonate", "pc-pallas",
                              "serial"],
                     default="pc")
-    ap.add_argument("--workload", choices=["decode", "graph", "map"],
+    ap.add_argument("--workload",
+                    choices=["decode"] + substrate.names(),
                     default="decode")
     ap.add_argument("--read-pct", type=int, default=90)
     ap.add_argument("--rounds-cap", type=int, default=4,

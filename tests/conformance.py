@@ -1,0 +1,376 @@
+"""Pluggable conformance kit for :class:`repro.core.substrate.BatchedStructure`
+implementations (DESIGN.md §16).
+
+A structure earns its place in the repo by registering a
+``StructureSpec`` (factory + host oracle + op generators) and passing
+this battery — ZERO structure-specific test code beyond that spec.  The
+kit instantiates, for any spec:
+
+* :func:`check_differential` — seeded differential fuzz vs the oracle:
+  mixed duplicate-heavy update batches (wider than ``c_max``: the scan
+  rounds path), mixed read batches, empty batches, periodic whole-state
+  ``dump_compare``.
+* :func:`check_one_sync` — monkeypatch-counts the structure module's
+  ``_host_fetch`` hook: async dispatch costs ZERO fetches, a read batch
+  costs exactly ONE, and outstanding update handles resolve through that
+  same fetch (``reads_resolve_updates=False`` structures — the PQ —
+  instead budget one fetch per consumed handle, re-consume free).
+* :func:`check_donation` — the donated apply pass must consume (delete)
+  the previous state buffers; the ``donate=False`` ablation twin must
+  leave them alive (the DESIGN.md §10 zero-copy contract).
+* :func:`check_atomic_refusal` — ``spec.refusal_batch`` must raise
+  ``ValueError`` while leaving every device state leaf AND the host
+  occupancy mirror bit-identical, and the structure must keep answering
+  the oracle exactly afterwards.
+* :func:`check_rounds_equiv` — ONE oversized batch (the pow2-padded
+  ``lax.scan`` rounds program) must leave the same state as applying the
+  same ops as a sequence of ≤ ``c_max`` single-pass batches, and both
+  must match the oracle throughout.
+* :func:`check_fault_exactly_once` — the differential loop under an
+  injected dispatch-failure plan (DESIGN.md §15): the transactional
+  guard must make every injected failure invisible — zero lost ops,
+  zero duplicated ops, mirrors intact.
+* :func:`make_structure_machine` — a hypothesis rule-based state machine
+  driving the SAME generators/oracle under hypothesis' adversarial
+  scheduling + shrinking (only when hypothesis is installed).
+
+``tests/test_conformance.py`` parametrizes the whole battery over every
+registered spec; ``tests/test_differential.py`` layers the engine
+variants (sharded, no-donate, pallas, adaptive-tier, fault-mode) on the
+same entry points via the ``make=``/``make_oracle=`` overrides.
+"""
+from __future__ import annotations
+
+import contextlib
+import importlib
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.faults import FaultPlan
+from repro.core.substrate import StructureSpec
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, rule
+
+    HAVE_HYPOTHESIS = True
+except ImportError:          # tier-1 containers without the extra
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Shared drive loop
+# ---------------------------------------------------------------------------
+def _oracle_update(oracle, methods, inputs) -> List[Any]:
+    """Oracles with a native ``update_batch`` own their in-batch rule
+    (the union-find's pre-batch snapshot); per-op ``apply`` otherwise
+    (the arrival-order chain rule reduces to it)."""
+    if hasattr(oracle, "update_batch"):
+        return oracle.update_batch(list(methods), list(inputs))
+    return [oracle.apply(m, i) for m, i in zip(methods, inputs)]
+
+
+def run_differential(ds, oracle, spec: StructureSpec, rng, iters: int, *,
+                     update_frac: float = 0.6, max_batch: int = 13,
+                     dump_every: int = 7, ctx: Any = None) -> None:
+    """Drive ``ds`` and ``oracle`` with the spec's own op generators and
+    assert result- and state-equivalence throughout.  ``ctx`` overrides
+    the generator context (e.g. a different graph vertex count)."""
+    if ctx is None:
+        ctx = spec.new_ctx()
+    for it in range(iters):
+        k = int(rng.integers(0, max_batch))   # 0: the empty-batch edge
+        if rng.random() < update_frac:
+            m, i = spec.gen_update(rng, k, ctx)
+            # _oracle_update on BOTH sides: structures without a native
+            # update_batch (the host dynamic graph) apply per op
+            got = _oracle_update(ds, m, i)
+            want = _oracle_update(oracle, m, i)
+        else:
+            m, i = spec.gen_read(rng, k, ctx)
+            got = ds.read_batch(list(m), list(i))
+            want = [oracle.apply(mm, ii) for mm, ii in zip(m, i)]
+        assert len(got) == len(want) == len(m)
+        for mm, g, w in zip(m, got, want):
+            assert spec.result_ok(mm, g, w), (spec.name, it, mm, g, w)
+        if spec.dump_compare is not None and it % dump_every == 0:
+            spec.dump_compare(ds, oracle)
+    if spec.dump_compare is not None:
+        spec.dump_compare(ds, oracle)
+
+
+def check_differential(spec: StructureSpec, *, seed: int = 0,
+                       iters: int = 40,
+                       make: Optional[Callable[[], Any]] = None,
+                       make_oracle: Optional[Callable] = None,
+                       **drive_kw) -> None:
+    """Differential fuzz battery stage.  ``make``/``make_oracle``
+    override the spec factories for engine variants (no-donate, pallas,
+    adaptive tier, fault mode) — the only per-variant surface."""
+    rng = np.random.default_rng(seed)
+    ds = (make or spec.make)()
+    oracle = (make_oracle or spec.make_host)(ds)
+    run_differential(ds, oracle, spec, rng, iters, **drive_kw)
+
+
+# ---------------------------------------------------------------------------
+# One-sync counting (the async one-fetch contract)
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def count_fetches(spec: StructureSpec):
+    """Count calls through ``spec.module``'s late-bound ``_host_fetch``
+    hook — every blocking device→host transfer the structure makes."""
+    mod = importlib.import_module(spec.module)
+    orig = mod._host_fetch
+    counter = {"n": 0}
+
+    def counting(tree):
+        counter["n"] += 1
+        return orig(tree)
+
+    mod._host_fetch = counting
+    try:
+        yield counter
+    finally:
+        mod._host_fetch = orig
+
+
+def check_one_sync(spec: StructureSpec, *, seed: int = 123,
+                   make: Optional[Callable[[], Any]] = None) -> None:
+    """Async dispatch is sync-free; reads cost exactly ONE fetch."""
+    ds = (make or spec.make)()
+    rng = np.random.default_rng(seed)
+    ctx = spec.new_ctx()
+    # warm every program variant OUTSIDE the counting window (compilation
+    # is not a structure fetch, but warm-up code paths may fetch)
+    m, i = spec.gen_update(rng, 6, ctx)
+    ds.update_batch(list(m), list(i))
+    mr, ir = spec.gen_read(rng, 4, ctx)
+    ds.read_batch(list(mr), list(ir))
+    with count_fetches(spec) as c:
+        m1, i1 = spec.gen_update(rng, 5, ctx)
+        h1 = ds.update_batch_async(list(m1), list(i1))
+        m2, i2 = spec.gen_update(rng, 5, ctx)
+        h2 = ds.update_batch_async(list(m2), list(i2))
+        assert c["n"] == 0, \
+            f"{spec.name}: async dispatch must not synchronize"
+        if spec.reads_resolve_updates:
+            mr, ir = spec.gen_read(rng, 4, ctx)
+            ds.read_batch(list(mr), list(ir))
+            assert c["n"] == 1, \
+                f"{spec.name}: a read batch must cost exactly ONE fetch"
+            h1.result()
+            h2.result()
+            assert c["n"] == 1, (f"{spec.name}: update handles must "
+                                 "resolve through the read's fetch")
+        else:
+            # the PQ contract: one fetch per CONSUMED apply
+            h1.result()
+            assert c["n"] == 1, \
+                f"{spec.name}: consuming a handle costs one fetch"
+            h1.result()
+            assert c["n"] == 1, \
+                f"{spec.name}: re-consuming a handle must not refetch"
+            h2.result()
+            assert c["n"] <= 2
+            n0 = c["n"]
+            mr, ir = spec.gen_read(rng, 4, ctx)
+            ds.read_batch(list(mr), list(ir))
+            assert c["n"] == n0 + 1, \
+                f"{spec.name}: a read batch must cost exactly ONE fetch"
+
+
+# ---------------------------------------------------------------------------
+# Donation aliasing (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def check_donation(spec: StructureSpec, *, seed: int = 7) -> None:
+    """donate=True consumes the old state buffers; the ablation twin
+    keeps them alive."""
+    for donate, expect in ((True, True), (False, False)):
+        ds = spec.make(donate=donate)
+        rng = np.random.default_rng(seed)
+        ctx = spec.new_ctx()
+        observed = None
+        for _ in range(4):      # a batch may net to a no-op; retry
+            old = jax.tree_util.tree_leaves(ds.state)
+            m, i = spec.gen_update(rng, 6, ctx)
+            ds.update_batch(list(m), list(i))
+            new = jax.tree_util.tree_leaves(ds.state)
+            if any(o is not nn for o, nn in zip(old, new)):
+                observed = any(o.is_deleted() for o in old)
+                break
+        assert observed is not None, \
+            f"{spec.name}: no update batch dispatched in 4 tries"
+        assert observed == expect, \
+            (f"{spec.name}: donate={donate} must "
+             f"{'consume' if expect else 'preserve'} the old buffers")
+
+
+# ---------------------------------------------------------------------------
+# Atomic refusal (the sync-free guard contract)
+# ---------------------------------------------------------------------------
+def _fingerprint(ds) -> List[np.ndarray]:
+    """Bit-exact host image of every device state leaf + the occupancy
+    mirror (fetched through plain device_get: never donated away)."""
+    leaves = [np.asarray(jax.device_get(x))
+              for x in jax.tree_util.tree_leaves(ds.state)]
+    for key in sorted(ds.occupancy_mirror()):
+        leaves.append(np.asarray(ds.occupancy_mirror()[key]))
+    return leaves
+
+
+def check_atomic_refusal(spec: StructureSpec, *, seed: int = 11,
+                         make: Optional[Callable[[], Any]] = None) -> None:
+    """``spec.refusal_batch`` raises; state + mirror stay bit-identical;
+    the structure still answers the oracle exactly afterwards."""
+    assert spec.refusal_batch is not None, \
+        f"{spec.name}: spec ships no refusal probe"
+    rng = np.random.default_rng(seed)
+    ds = (make or spec.make)()
+    oracle = spec.make_host(ds)
+    ctx = spec.new_ctx()
+    # reach a non-trivial, fully-settled state (mirror re-tightened)
+    m, i = spec.gen_update(rng, 6, ctx)
+    got = ds.update_batch(list(m), list(i))
+    want = _oracle_update(oracle, m, i)
+    mr, ir = spec.gen_read(rng, 3, ctx)
+    ds.read_batch(list(mr), list(ir))
+    before = _fingerprint(ds)
+    bm, bi = spec.refusal_batch(ds)
+    raised = False
+    try:
+        ds.update_batch(list(bm), list(bi))
+    except ValueError:
+        raised = True
+    assert raised, \
+        f"{spec.name}: the refusal probe was accepted instead of refused"
+    after = _fingerprint(ds)
+    assert len(before) == len(after)
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(
+            b, a, err_msg=f"{spec.name}: refusal was not atomic")
+    # and the structure keeps working against the oracle
+    run_differential(ds, oracle, spec, rng, 8)
+
+
+# ---------------------------------------------------------------------------
+# Rounds lowering ≡ sequence of single passes
+# ---------------------------------------------------------------------------
+def check_rounds_equiv(spec: StructureSpec, *, seed: int = 29,
+                       n_ops: int = 27) -> None:
+    """One oversized batch (non-pow2 round count through the scan
+    program) vs the same ops chunked into ≤ c_max single passes: both
+    must match the oracle op-for-op (each against ITS batch boundaries —
+    the in-batch rule is per batch) and land in the same state."""
+    rng = np.random.default_rng(seed)
+    ds_a = spec.make()
+    ds_b = spec.make()
+    oracle_a = spec.make_host(ds_a)
+    oracle_b = spec.make_host(ds_b)
+    ctx = spec.new_ctx()
+    m, i = spec.gen_update(rng, n_ops, ctx)
+    c_max = getattr(ds_a, "c_max", 8)
+    assert n_ops > 2 * c_max, "probe must force the multi-round path"
+
+    got_a = ds_a.update_batch(list(m), list(i))
+    want_a = _oracle_update(oracle_a, m, i)
+    for mm, g, w in zip(m, got_a, want_a):
+        assert spec.result_ok(mm, g, w), (spec.name, "rounds", mm, g, w)
+
+    for lo in range(0, n_ops, c_max):
+        chunk_m, chunk_i = m[lo:lo + c_max], i[lo:lo + c_max]
+        got_b = ds_b.update_batch(list(chunk_m), list(chunk_i))
+        want_b = _oracle_update(oracle_b, chunk_m, chunk_i)
+        for mm, g, w in zip(chunk_m, got_b, want_b):
+            assert spec.result_ok(mm, g, w), (spec.name, "chunk", mm, g, w)
+
+    # state equivalence: both land exactly on the (shared) oracle state.
+    # Raw device leaves may legitimately differ (the graph's stored edge
+    # orientation and slot order follow dispatch history), so the
+    # canonical dump is the comparison surface.
+    if spec.dump_compare is not None:
+        spec.dump_compare(ds_a, oracle_a)
+        spec.dump_compare(ds_b, oracle_b)
+    else:            # pragma: no cover — every builtin ships a dump
+        np.testing.assert_array_equal(
+            [np.asarray(jax.device_get(x)).tolist()
+             for x in jax.tree_util.tree_leaves(ds_a.state)],
+            [np.asarray(jax.device_get(x)).tolist()
+             for x in jax.tree_util.tree_leaves(ds_b.state)],
+            err_msg=f"{spec.name}: rounds diverged from chunked passes")
+
+
+# ---------------------------------------------------------------------------
+# Fault-plan exactly-once recovery (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def check_fault_exactly_once(spec: StructureSpec, *, seed: int = 0,
+                             rate: float = 0.2, iters: int = 25) -> None:
+    """The differential loop under injected dispatch failures: the
+    transactional guard retries behind the scenes and the oracle must
+    never see a lost or duplicated op.  Rates stay ≤ 0.2 — with the
+    guard's 8 retries, exhaustion odds are ≤ 0.2⁹ ≈ 5e-7."""
+    plan = FaultPlan(seed=seed, dispatch_fail_rate=rate)
+    ds = spec.make(fault_plan=plan)
+    oracle = spec.make_host(ds)
+    rng = np.random.default_rng(seed)
+    run_differential(ds, oracle, spec, rng, iters)
+    assert plan.counters.faults_injected > 0, \
+        f"{spec.name}: the fault plan never fired — probe is vacuous"
+    assert plan.counters.snapshot()["restores"] > 0, \
+        f"{spec.name}: injected failures were never rolled back"
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis rule-based state machine (generic over any spec)
+# ---------------------------------------------------------------------------
+def make_structure_machine(spec: StructureSpec,
+                           factory: Optional[Callable[[], Any]] = None,
+                           make_oracle: Optional[Callable] = None,
+                           max_update: int = 13, max_read: int = 9,
+                           with_dump: bool = True):
+    """Rule-based state machine driving ``spec``'s own generators under
+    hypothesis' adversarial rule scheduling and shrinking.  Rules draw a
+    seed + width, so a failing schedule shrinks to a minimal seeded op
+    sequence.  ``max_update`` caps the update-batch width (variants whose
+    contract only covers ≤ c_max batches pass ``max_update=c_max``)."""
+    if not HAVE_HYPOTHESIS:       # pragma: no cover
+        raise RuntimeError("hypothesis is not installed")
+
+    seed_s = st.integers(0, 2**32 - 1)
+
+    class StructureMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.ds = (factory or spec.make)()
+            self.oracle = (make_oracle or spec.make_host)(self.ds)
+            self.ctx = spec.new_ctx()
+
+        @rule(seed=seed_s, k=st.integers(0, max_update))
+        def update_batch(self, seed, k):
+            rng = np.random.default_rng(seed)
+            m, i = spec.gen_update(rng, k, self.ctx)
+            # _oracle_update on BOTH sides: hosts without a native
+            # update_batch (the dynamic graph) apply per op
+            got = _oracle_update(self.ds, m, i)
+            want = _oracle_update(self.oracle, m, i)
+            for mm, g, w in zip(m, got, want):
+                assert spec.result_ok(mm, g, w), (mm, i, g, w)
+
+        @rule(seed=seed_s, k=st.integers(0, max_read))
+        def read_batch(self, seed, k):
+            rng = np.random.default_rng(seed)
+            m, i = spec.gen_read(rng, k, self.ctx)
+            got = self.ds.read_batch(list(m), list(i))
+            want = [self.oracle.apply(mm, ii) for mm, ii in zip(m, i)]
+            for mm, g, w in zip(m, got, want):
+                assert spec.result_ok(mm, g, w), (mm, i, g, w)
+
+        @rule()
+        def state_agrees(self):
+            if with_dump and spec.dump_compare is not None:
+                spec.dump_compare(self.ds, self.oracle)
+
+    StructureMachine.__name__ = f"{spec.name.title()}Machine"
+    return StructureMachine

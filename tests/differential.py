@@ -1,38 +1,25 @@
-"""Shared differential-fuzz harness for the repo's combined data
-structures (ISSUE 3 satellite): ONE oracle + fuzz-loop + hypothesis
-state-machine toolkit used by BOTH the sharded batched PQ and the dynamic
-graph engines, so every engine is exercised by the same adversarial
-schedules — interleaved op streams, duplicate ops inside one batch,
-delete-reinsert cycles, self-loops, empty batches.
+"""Shared differential-test ingredients (DESIGN.md §16).
 
-Three layers:
+The per-structure fuzz loops and hypothesis machines that used to live
+here are GONE — the registry-driven conformance kit
+(``tests/conformance.py``) instantiates differential loops, state
+machines and the whole battery for any registered
+:class:`~repro.core.substrate.StructureSpec` with zero per-structure
+code.  What remains here are the test-only ingredients the kit's
+instantiations plug in:
 
-* ``BFSOracle`` / ``SequentialHeap`` — pure-python semantic oracles.
-* ``fuzz_graph_vs_oracle`` / ``fuzz_pq_vs_oracle`` — deterministic
-  seeded fuzz loops (no hypothesis dependency) used by the tier-1 tests.
-* ``make_graph_machine`` / ``make_pq_machine`` — hypothesis rule-based
-  state machines (only available when hypothesis is installed; the
-  factories raise otherwise).  ``test_differential.py`` instantiates
-  them per engine.
+* :class:`BFSOracle` — the independent pure-python graph oracle (edge
+  set + BFS reachability).  The graph spec's registered host mirror is
+  ``DynamicGraph``, itself a device-accelerated structure; the BFS
+  oracle is the trust anchor both are checked against.
+* :func:`make_faulty_factory` — wraps a structure factory so every
+  instantiation gets a FRESH deterministic fault plan (DESIGN.md §15).
 """
 from __future__ import annotations
 
-from typing import Callable, List, Set, Tuple
-
-import numpy as np
+from typing import Callable, Set, Tuple
 
 from repro.core.faults import FaultPlan
-from repro.core.seq_map import SequentialSortedMap
-from repro.core.seq_pq import SequentialHeap
-from repro.core.sharded_pq import host_key
-
-try:
-    from hypothesis import strategies as st
-    from hypothesis.stateful import RuleBasedStateMachine, rule
-
-    HAVE_HYPOTHESIS = True
-except ImportError:          # tier-1 containers without the extra
-    HAVE_HYPOTHESIS = False
 
 
 # ---------------------------------------------------------------------------
@@ -92,175 +79,6 @@ class BFSOracle:
 
 
 # ---------------------------------------------------------------------------
-# Deterministic fuzz loops (tier-1: no hypothesis needed)
-# ---------------------------------------------------------------------------
-def _rand_edge(rng, n: int, pool: List[Tuple[int, int]]):
-    """Mostly-fresh edges, but revisit the pool often enough to generate
-    duplicate inserts, failed deletes and delete-reinsert cycles."""
-    if pool and rng.random() < 0.5:
-        return pool[int(rng.integers(0, len(pool)))]
-    e = (int(rng.integers(0, n)), int(rng.integers(0, n)))
-    pool.append(e)
-    return e
-
-
-def fuzz_graph_vs_oracle(graph, rng, steps: int, *, n: int,
-                         batch: bool = True) -> None:
-    """Interleaved insert/delete/connected fuzz against ``BFSOracle``.
-
-    Exercises single ops, duplicate-heavy mixed update batches (via
-    ``update_batch`` when the engine has one, else sequential ``apply``),
-    batched reads, self-loops, and delete-reinsert cycles — the schedules
-    the pre-harness oracle loop never generated."""
-    oracle = BFSOracle(n)
-    pool: List[Tuple[int, int]] = []
-    for step in range(steps):
-        kind = int(rng.integers(0, 5 if batch else 3))
-        if kind == 0:
-            u, v = _rand_edge(rng, n, pool)
-            assert graph.insert(u, v) == oracle.insert(u, v), \
-                (step, "insert", u, v)
-        elif kind == 1:
-            u, v = _rand_edge(rng, n, pool)
-            assert graph.delete(u, v) == oracle.delete(u, v), \
-                (step, "delete", u, v)
-        elif kind == 2:
-            u, v = _rand_edge(rng, n, pool)
-            assert graph.connected(u, v) == oracle.connected(u, v), \
-                (step, "connected", u, v)
-        elif kind == 3:
-            # mixed update batch, duplicates very likely (small pool slice)
-            k = int(rng.integers(1, 9))
-            methods = [("insert", "delete")[int(rng.integers(0, 2))]
-                       for _ in range(k)]
-            edges = [_rand_edge(rng, n, pool) for _ in range(k)]
-            if hasattr(graph, "update_batch"):
-                got = graph.update_batch(methods, edges)
-            else:
-                got = [graph.apply(m, e) for m, e in zip(methods, edges)]
-            want = [oracle.apply(m, e) for m, e in zip(methods, edges)]
-            assert got == want, (step, "update_batch", methods, edges,
-                                 got, want)
-        else:
-            k = int(rng.integers(1, 9))
-            queries = [(int(rng.integers(0, n)), int(rng.integers(0, n)))
-                       for _ in range(k)]
-            got = graph.read_batch(["connected"] * k, queries)
-            want = [oracle.connected(u, v) for (u, v) in queries]
-            assert got == want, (step, "read_batch", queries, got, want)
-
-
-def fuzz_pq_vs_oracle(pq, rng, steps: int, *, c_max: int,
-                      value_range: float = 1000.0) -> None:
-    """Combined extract/insert batches vs ``SequentialHeap`` (empty-queue
-    extracts included).  Engine contract: extracts see the pre-batch
-    multiset, answers ascending, None-padded."""
-    from repro.core.batched_pq import check_heap_property
-
-    oracle = SequentialHeap()
-    for v in pq.values():
-        oracle.insert(v)
-    for _ in range(steps):
-        ne = int(rng.integers(0, c_max + 1))
-        ni = int(rng.integers(0, c_max + 1))
-        ins = rng.uniform(0, value_range, ni).astype(np.float32).tolist()
-        got = pq.apply(ne, ins)
-        exp = [oracle.extract_min() for _ in range(ne)]
-        for x in ins:
-            oracle.insert(x)
-        got_real = sorted(g for g in got if g is not None)
-        exp_real = sorted(e for e in exp if e is not None)
-        assert got.count(None) == exp.count(None)
-        np.testing.assert_allclose(got_real, exp_real, rtol=1e-6)
-        np.testing.assert_allclose(pq.values(), oracle.values(), rtol=1e-6)
-        a = np.asarray(pq.state.a)
-        sizes = np.atleast_1d(np.asarray(pq.state.size))
-        for k in range(sizes.shape[0]):
-            row = a[k] if a.ndim == 2 else a
-            assert check_heap_property(row, int(sizes[k]))
-            assert row[0] == np.inf          # scratch slot invariant
-
-
-def _q32(x) -> float:
-    """The f32 key image the device map stores — quantize BOTH sides of
-    a differential pair at the boundary.  Delegates to ``host_key`` so
-    the harness can never drift from the production quantization rule
-    (f32 + flush-to-zero + finite clamp, DESIGN.md §7)."""
-    return host_key(float(np.float32(x)))
-
-
-def _rand_key(rng, pool: List[float], key_hi: float = 100.0) -> float:
-    """Mostly-known keys (duplicate inserts, assign/delete hits), but
-    fresh often enough to exercise growth; f32-exact values only."""
-    if pool and rng.random() < 0.6:
-        return pool[int(rng.integers(0, len(pool)))]
-    k = float(np.float32(rng.uniform(0, key_hi)))
-    pool.append(k)
-    return k
-
-
-def _map_op(rng, pool: List[float], key_hi: float):
-    """One random update op as a (method, input) pair."""
-    m = ("insert", "delete", "assign")[int(rng.integers(0, 3))]
-    k = _rand_key(rng, pool, key_hi)
-    if m == "delete":
-        return m, k
-    return m, (k, float(np.float32(rng.uniform(0, 100))))
-
-
-def _map_read(rng, pool: List[float], key_hi: float, n_live: int):
-    r = int(rng.integers(0, 4))
-    if r == 0:
-        return "lookup", _rand_key(rng, pool, key_hi)
-    if r == 1:
-        return "kth_smallest", int(rng.integers(0, n_live + 3))
-    lo = float(np.float32(rng.uniform(-10, key_hi)))
-    hi = float(np.float32(lo + rng.uniform(0, key_hi / 2)))
-    return ("range_count" if r == 2 else "range_sum"), (lo, hi)
-
-
-def _check_map_reads(got, want, methods, ctx) -> None:
-    """Compare read results; range_sum tolerates f32 prefix-sum
-    association error, everything else is exact."""
-    for g, w, m in zip(got, want, methods):
-        if m == "range_sum":
-            assert abs(g - w) <= 1e-3 + 1e-5 * abs(w), (ctx, m, g, w)
-        else:
-            assert g == w, (ctx, m, g, w)
-
-
-def fuzz_map_vs_oracle(m, rng, steps: int, *, key_hi: float = 100.0
-                       ) -> None:
-    """Interleaved mixed-update / mixed-read fuzz vs
-    ``SequentialSortedMap``: duplicate-key batches (chain-rule results),
-    delete-reinsert cycles, assign-on-absent, oversized batches (the
-    scan rounds path), empty and out-of-range range queries."""
-    oracle = SequentialSortedMap(m.items())
-    pool: List[float] = []
-    for step in range(steps):
-        if int(rng.integers(0, 2)) == 0:
-            k = int(rng.integers(1, 20))       # > c_max sometimes: rounds
-            ops = [_map_op(rng, pool, key_hi) for _ in range(k)]
-            got = m.update_batch([o[0] for o in ops], [o[1] for o in ops])
-            want = [oracle.apply(mm, ii) for mm, ii in ops]
-            assert got == want, (step, ops, got, want)
-        else:
-            k = int(rng.integers(1, 9))
-            ops = [_map_read(rng, pool, key_hi, len(oracle))
-                   for _ in range(k)]
-            got = m.read_batch([o[0] for o in ops], [o[1] for o in ops])
-            want = [oracle.apply(mm, ii) for mm, ii in ops]
-            _check_map_reads(got, want, [o[0] for o in ops], (step, ops))
-        if step % 7 == 0:
-            got_items = m.items()
-            want_items = oracle.items()
-            assert [k for k, _ in got_items] == [k for k, _ in want_items]
-            np.testing.assert_allclose([v for _, v in got_items],
-                                       [v for _, v in want_items],
-                                       rtol=1e-6)
-
-
-# ---------------------------------------------------------------------------
 # Fault-mode factories (DESIGN.md §15)
 # ---------------------------------------------------------------------------
 def make_faulty_factory(ctor: Callable[..., object],
@@ -281,177 +99,3 @@ def make_faulty_factory(ctor: Callable[..., object],
         return ctor(fault_plan=plan)
 
     return factory
-
-
-# ---------------------------------------------------------------------------
-# Hypothesis rule-based state machines
-# ---------------------------------------------------------------------------
-def make_graph_machine(graph_factory: Callable[[], object], n: int):
-    """Rule-based state machine fuzzing a graph engine vs ``BFSOracle``.
-
-    Rules cover single ops on fresh and previously-touched edges
-    (delete-reinsert cycles), duplicate-edge mixed update batches, and
-    batched reads — shared by the host and device graph tiers.
-    """
-    if not HAVE_HYPOTHESIS:       # pragma: no cover
-        raise RuntimeError("hypothesis is not installed")
-
-    vertex = st.integers(0, n - 1)
-    method = st.sampled_from(["insert", "delete"])
-
-    class GraphMachine(RuleBasedStateMachine):
-        def __init__(self):
-            super().__init__()
-            self.g = graph_factory()
-            self.o = BFSOracle(n)
-            self.pool: List[Tuple[int, int]] = [(0, 0)]
-
-        def _edge(self, data, fresh_uv):
-            if data.draw(st.booleans()):
-                return data.draw(st.sampled_from(self.pool))
-            self.pool.append(fresh_uv)
-            return fresh_uv
-
-        @rule(data=st.data(), u=vertex, v=vertex)
-        def single_insert(self, data, u, v):
-            e = self._edge(data, (u, v))
-            assert self.g.insert(*e) == self.o.insert(*e)
-
-        @rule(data=st.data(), u=vertex, v=vertex)
-        def single_delete(self, data, u, v):
-            e = self._edge(data, (u, v))
-            assert self.g.delete(*e) == self.o.delete(*e)
-
-        @rule(u=vertex, v=vertex)
-        def query(self, u, v):
-            assert self.g.connected(u, v) == self.o.connected(u, v)
-
-        @rule(data=st.data(),
-              ops=st.lists(method, min_size=1, max_size=8),
-              fresh=st.lists(st.tuples(vertex, vertex), min_size=8,
-                             max_size=8))
-        def mixed_batch(self, data, ops, fresh):
-            edges = [self._edge(data, fresh[i]) for i in range(len(ops))]
-            if hasattr(self.g, "update_batch"):
-                got = self.g.update_batch(ops, edges)
-            else:
-                got = [self.g.apply(m, e) for m, e in zip(ops, edges)]
-            want = [self.o.apply(m, e) for m, e in zip(ops, edges)]
-            assert got == want, (ops, edges, got, want)
-
-        @rule(queries=st.lists(st.tuples(vertex, vertex), min_size=1,
-                               max_size=8))
-        def batched_read(self, queries):
-            got = self.g.read_batch(["connected"] * len(queries), queries)
-            want = [self.o.connected(u, v) for (u, v) in queries]
-            assert got == want
-
-    return GraphMachine
-
-
-def make_map_machine(map_factory: Callable[[], object],
-                     key_hi: float = 100.0):
-    """Rule-based state machine fuzzing an ordered map vs
-    ``SequentialSortedMap``.
-
-    Rules cover duplicate-key mixed update batches (the arrival-order
-    chain rule), delete-reinsert cycles, assign-on-absent, and mixed
-    read batches over lookup / range_count / range_sum / kth_smallest —
-    shared by the single and K-sharded map tiers.
-    """
-    if not HAVE_HYPOTHESIS:       # pragma: no cover
-        raise RuntimeError("hypothesis is not installed")
-
-    key = st.floats(0, key_hi, width=32)
-    val = st.floats(0, 100, width=32)
-    method = st.sampled_from(["insert", "delete", "assign"])
-
-    class MapMachine(RuleBasedStateMachine):
-        def __init__(self):
-            super().__init__()
-            self.m = map_factory()
-            self.o = SequentialSortedMap(self.m.items())
-            self.pool: List[float] = [0.0]
-
-        def _key(self, data, fresh):
-            if data.draw(st.booleans()):
-                return data.draw(st.sampled_from(self.pool))
-            k = _q32(fresh)
-            self.pool.append(k)
-            return k
-
-        @rule(data=st.data(),
-              ops=st.lists(st.tuples(method, key, val), min_size=1,
-                           max_size=12))
-        def mixed_batch(self, data, ops):
-            methods, inputs = [], []
-            for m, k, v in ops:
-                k = self._key(data, k)
-                methods.append(m)
-                inputs.append(k if m == "delete" else (k, float(v)))
-            got = self.m.update_batch(methods, inputs)
-            want = [self.o.apply(m, i) for m, i in zip(methods, inputs)]
-            assert got == want, (methods, inputs, got, want)
-
-        @rule(data=st.data(),
-              kinds=st.lists(st.integers(0, 3), min_size=1, max_size=8),
-              fresh=st.lists(key, min_size=8, max_size=8),
-              ks=st.lists(st.integers(0, 40), min_size=8, max_size=8))
-        def read_batch(self, data, kinds, fresh, ks):
-            methods, inputs = [], []
-            for i, r in enumerate(kinds):
-                if r == 0:
-                    methods.append("lookup")
-                    inputs.append(self._key(data, fresh[i]))
-                elif r == 1:
-                    methods.append("kth_smallest")
-                    inputs.append(ks[i])
-                else:
-                    lo = self._key(data, fresh[i])
-                    methods.append("range_count" if r == 2
-                                   else "range_sum")
-                    inputs.append((lo, _q32(lo + ks[i])))
-            got = self.m.read_batch(methods, inputs)
-            want = [self.o.apply(m, i) for m, i in zip(methods, inputs)]
-            _check_map_reads(got, want, methods, (methods, inputs))
-
-        @rule()
-        def items_agree(self):
-            got, want = self.m.items(), self.o.items()
-            assert [k for k, _ in got] == [k for k, _ in want]
-            np.testing.assert_allclose([v for _, v in got],
-                                       [v for _, v in want], rtol=1e-6)
-
-    return MapMachine
-
-
-def make_pq_machine(pq_factory: Callable[[], object], c_max: int):
-    """Rule-based state machine fuzzing a batched PQ vs SequentialHeap."""
-    if not HAVE_HYPOTHESIS:       # pragma: no cover
-        raise RuntimeError("hypothesis is not installed")
-
-    class PQMachine(RuleBasedStateMachine):
-        def __init__(self):
-            super().__init__()
-            self.pq = pq_factory()
-            self.o = SequentialHeap()
-            for v in self.pq.values():
-                self.o.insert(v)
-
-        @rule(ne=st.integers(0, 8),
-              ins=st.lists(st.floats(0, 1e6, width=32), max_size=8))
-        def combined_batch(self, ne, ins):
-            tiny = float(np.finfo(np.float32).tiny)
-            ins = [0.0 if abs(x) < tiny else x for x in ins]
-            got = self.pq.apply(ne, ins)
-            exp = [self.o.extract_min() for _ in range(ne)]
-            for x in ins:
-                self.o.insert(x)
-            assert got.count(None) == exp.count(None)
-            np.testing.assert_allclose(
-                sorted(g for g in got if g is not None),
-                sorted(e for e in exp if e is not None), rtol=1e-6)
-            np.testing.assert_allclose(self.pq.values(), self.o.values(),
-                                       rtol=1e-6)
-
-    return PQMachine

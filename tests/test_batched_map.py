@@ -5,10 +5,13 @@ import numpy as np
 import pytest
 
 import repro.core.batched_map as bm
-from differential import fuzz_map_vs_oracle
+from conformance import run_differential
+from repro.core import substrate
 from repro.core.batched_map import BatchedMap, ShardedMap
 from repro.core.pc_map import fc_map, pc_map
 from repro.core.seq_map import SequentialSortedMap
+
+substrate.load_builtins()
 
 KR = (0.0, 100.0)
 
@@ -244,11 +247,14 @@ def test_pc_map_engine_end_to_end():
 
 
 # ---------------------------------------------------------------------------
-# seeded differential fuzz (the acceptance gate: K ∈ {1, 4, 8})
+# seeded differential fuzz (the acceptance gate: K ∈ {1, 4, 8}),
+# driven by the registry-level conformance kit
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("K", [1, 4, 8])
 def test_differential_fuzz_vs_sorted_map_oracle(K):
+    spec = substrate.get("map")
     m = ShardedMap(192, c_max=8, n_shards=K,
                    key_range=None if K == 1 else KR,
                    items=[(float(j), float(j)) for j in range(0, 20, 2)])
-    fuzz_map_vs_oracle(m, np.random.default_rng(100 + K), steps=30)
+    run_differential(m, spec.make_host(m), spec,
+                     np.random.default_rng(100 + K), 30)

@@ -161,6 +161,29 @@ def test_fault_free_guarded_row_still_gates(tmp_path):
     assert check("map", fresh_path=fresh, baseline_path=base) == 1
 
 
+def test_new_structure_benches_have_gate_keys():
+    """The two registry-proven workloads (ISSUE 8) are enrolled in the
+    perf gate with the (impl, read_pct, threads) row identity their
+    bench modules emit."""
+    from benchmarks.check_regression import KEYS
+    for name in ("sketch", "unionfind"):
+        assert KEYS[name] == ("impl", "read_pct", "threads")
+
+
+def test_sketch_and_unionfind_gate_end_to_end(tmp_path):
+    """The gate runs for both new benches: a matched PC row regression
+    fails, a first run with no baseline is informational."""
+    for name in ("sketch", "unionfind"):
+        fresh = _write(tmp_path, f"fresh_{name}.json",
+                       [_row("PC-K4" if name == "sketch" else "PC", 10.0)])
+        base = _write(tmp_path, f"base_{name}.json",
+                      _baseline([_row("PC-K4" if name == "sketch"
+                                      else "PC", 100.0)]))
+        assert check(name, fresh_path=fresh, baseline_path=base) == 1
+        missing = str(tmp_path / f"nope_{name}.json")
+        assert check(name, fresh_path=fresh, baseline_path=missing) == 0
+
+
 def test_config_drift_with_gating_baseline_still_fails(tmp_path):
     """ZERO overlap against a baseline that HAS gating rows is still the
     silent-no-op-gate failure (the PR-4 contract)."""

@@ -1,0 +1,214 @@
+"""The conformance battery (DESIGN.md §16), parametrized over every
+registered :class:`~repro.core.substrate.StructureSpec` — pq, map,
+graph, sketch, union-find all run the SAME stages from nothing but
+their spec (factory + oracle + op generators):
+
+* differential fuzz (plain + no-donate ablation) — tier-1
+* one-sync fetch counting, donation aliasing, atomic refusal
+  bit-identity, rounds ≡ chunked single passes — tier-1
+* fault-plan exactly-once recovery — ``faults`` job
+* hypothesis state machines — ``slow``/``fuzz`` job
+  (tests/test_differential.py)
+
+The broken-toy section proves the battery has teeth: deliberately
+defective subclasses (stale guard, double fetch, non-atomic refusal)
+must each be CAUGHT by the stage that owns that contract.
+"""
+import numpy as np
+import pytest
+
+from conformance import (check_atomic_refusal, check_differential,
+                         check_donation, check_fault_exactly_once,
+                         check_one_sync, check_rounds_equiv,
+                         count_fetches, run_differential)
+
+from repro.core import substrate
+
+substrate.load_builtins()
+
+SPECS = sorted(substrate.names())
+
+
+@pytest.fixture(params=SPECS)
+def spec(request):
+    return substrate.get(request.param)
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 battery — every registered structure, zero per-structure code
+# ---------------------------------------------------------------------------
+def test_registry_conformance(spec):
+    ds = spec.make()
+    assert substrate.conforms(ds), spec.name
+    assert ds.structure == spec.name
+
+
+def test_differential(spec):
+    check_differential(spec, seed=0, iters=30)
+
+
+def test_differential_nodonate(spec):
+    check_differential(spec, seed=1, iters=18,
+                       make=lambda: spec.make(donate=False))
+
+
+def test_one_sync(spec):
+    check_one_sync(spec)
+
+
+def test_donation(spec):
+    check_donation(spec)
+
+
+def test_atomic_refusal(spec):
+    check_atomic_refusal(spec)
+
+
+def test_rounds_equiv(spec):
+    check_rounds_equiv(spec)
+
+
+@pytest.mark.faults
+def test_fault_exactly_once(spec):
+    check_fault_exactly_once(spec)
+
+
+# ---------------------------------------------------------------------------
+# Broken toys — each defect is caught by the stage that owns the contract
+# ---------------------------------------------------------------------------
+def _sketch_spec():
+    return substrate.get("sketch")
+
+
+class _StaleGuardSketch:
+    """Toy defect: the occupancy guard never consults (or grows) the
+    host mirror — an overflowing batch sails through."""
+
+    def __call__(self):
+        from repro.core.batched_sketch import ShardedSketch
+
+        class Broken(ShardedSketch):
+            def _guard_slices(self, slices):
+                return          # forgot the mirror entirely
+
+        return Broken(64, c_max=8, n_shards=2)
+
+
+def test_battery_catches_stale_guard():
+    spec = _sketch_spec()
+    with pytest.raises(AssertionError, match="accepted instead"):
+        check_atomic_refusal(spec, make=_StaleGuardSketch())
+
+
+class _DoubleFetchSketch:
+    """Toy defect: the read path fetches twice — the one-sync contract
+    everyone inherits is silently broken."""
+
+    def __call__(self):
+        from repro.core import batched_sketch as _mod
+        from repro.core.batched_sketch import ShardedSketch
+
+        class Broken(ShardedSketch):
+            def read_batch(self, methods, inputs):
+                out = super().read_batch(methods, inputs)
+                _mod._host_fetch(self.state.size + 0)   # the extra sync
+                return out
+
+        return Broken(512, c_max=8, n_shards=2)
+
+
+def test_battery_catches_double_fetch():
+    spec = _sketch_spec()
+    with pytest.raises(AssertionError, match="ONE fetch"):
+        check_one_sync(spec, make=_DoubleFetchSketch())
+
+
+class _NonAtomicRefusalSketch:
+    """Toy defect: the guard grows the mirror slice-by-slice and raises
+    midway WITHOUT restoring — a refused batch corrupts the mirror."""
+
+    def __call__(self):
+        from repro.core.batched_sketch import ShardedSketch
+        from repro.core.batched_sketch import route_hash_host
+
+        class Broken(ShardedSketch):
+            def _guard_slices(self, slices):
+                for opk, nc in slices:
+                    if nc:
+                        shards = route_hash_host(opk[:nc], self.n_shards)
+                        # defect: mutates the LIVE mirror slice-by-slice
+                        self._sizes_ub = self._sizes_ub + np.bincount(
+                            shards, minlength=self.n_shards
+                        ).astype(np.int64)
+                    if np.any(self._sizes_ub > self.capacity):
+                        raise ValueError("per-shard capacity exceeded")
+
+        return Broken(64, c_max=8, n_shards=2)
+
+
+def test_battery_catches_non_atomic_refusal():
+    spec = _sketch_spec()
+    with pytest.raises(AssertionError, match="not atomic"):
+        check_atomic_refusal(spec, make=_NonAtomicRefusalSketch())
+
+
+class _StaleMirrorMap:
+    """Toy defect: reads never re-tighten the occupancy upper bound, so
+    the guard drifts conservative until it refuses legal batches."""
+
+    def __call__(self):
+        from repro.core.batched_map import ShardedMap
+
+        class Broken(ShardedMap):
+            def _refresh_sizes(self, sizes):
+                return          # mirror never re-tightens
+
+        return Broken(24, c_max=8, n_shards=4, key_range=(0.0, 100.0))
+
+
+def test_battery_catches_stale_mirror():
+    spec = substrate.get("map")
+    # every insert grows the bound forever; with capacity 24 the
+    # differential loop's legal schedule eventually draws a spurious
+    # refusal the oracle would have accepted
+    with pytest.raises(ValueError, match="capacity"):
+        check_differential(spec, seed=3, iters=200,
+                           make=_StaleMirrorMap())
+
+
+def test_count_fetches_is_restored():
+    """The counting hook must restore the module's fetch on exit."""
+    import importlib
+    spec = _sketch_spec()
+    mod = importlib.import_module(spec.module)
+    orig = mod._host_fetch
+    with count_fetches(spec) as c:
+        assert mod._host_fetch is not orig
+    assert mod._host_fetch is orig
+    assert c["n"] == 0
+
+
+def test_run_differential_rejects_result_drift():
+    """An oracle that lies about one result must fail the loop — the
+    comparison itself is load-bearing."""
+    spec = _sketch_spec()
+
+    class LyingOracle:
+        def __init__(self, real):
+            self.real = real
+
+        def update_batch(self, methods, inputs):
+            out = self.real.update_batch(methods, inputs)
+            return [not r if isinstance(r, bool) else r for r in out]
+
+        def apply(self, m, i):
+            return self.real.apply(m, i)
+
+        def items(self):
+            return self.real.items()
+
+    ds = spec.make()
+    oracle = LyingOracle(spec.make_host(ds))
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        run_differential(ds, oracle, spec, rng, 10, update_frac=1.0)

@@ -10,9 +10,11 @@ import threading
 import numpy as np
 import pytest
 
-from differential import BFSOracle, fuzz_graph_vs_oracle
+from conformance import run_differential
+from differential import BFSOracle
 
 import repro.core.dynamic_graph as dyng
+from repro.core import substrate
 from repro.core.dynamic_graph import DynamicGraph
 from repro.core.locks import LockDS, RWLockDS
 from repro.core.read_opt import batched_read_optimized
@@ -44,7 +46,9 @@ def test_dynamic_graph_shared_harness_fuzz(trial):
     edges inside one batch, delete-reinsert cycles, self-loops, batched
     reads — via the SAME fuzz loop the device engine runs."""
     rng = np.random.default_rng(40 + trial)
-    fuzz_graph_vs_oracle(DynamicGraph(25), rng, steps=60, n=25)
+    substrate.load_builtins()
+    run_differential(DynamicGraph(25), BFSOracle(25),
+                     substrate.get("graph"), rng, 40, ctx={"n": 25})
 
 
 def test_insert_delete_results_match_oracle():

@@ -7,11 +7,16 @@ one-blocking-fetch contract, and the lazy-refresh staleness fixes.
 import numpy as np
 import pytest
 
-from differential import BFSOracle, fuzz_graph_vs_oracle
+from conformance import run_differential
+from differential import BFSOracle
 
 import repro.core.device_graph as dg
+from repro.core import substrate
 from repro.core.device_graph import DeviceGraph
 from repro.core.read_opt import batched_read_optimized
+
+substrate.load_builtins()
+_SPEC = substrate.get("graph")
 
 
 def _mk(n=30, **kw):
@@ -20,14 +25,19 @@ def _mk(n=30, **kw):
     return DeviceGraph(n, **kw)
 
 
+def _fuzz(g, rng, steps, *, n):
+    """Kit-driven differential fuzz vs the independent BFS oracle."""
+    run_differential(g, BFSOracle(n), _SPEC, rng, steps, ctx={"n": n})
+
+
 # ---------------------------------------------------------------------------
-# differential fuzz vs the BFS oracle (shared harness)
+# differential fuzz vs the BFS oracle (conformance kit)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("n_shards", [1, 2, 4])
 def test_device_graph_vs_bfs_oracle(n_shards):
     rng = np.random.default_rng(100 + n_shards)
     g = _mk(n_shards=n_shards)
-    fuzz_graph_vs_oracle(g, rng, steps=60, n=30)
+    _fuzz(g, rng, steps=40, n=30)
     # host mirrors stayed exact
     assert len(g) == len(g.edges())
 
@@ -37,13 +47,13 @@ def test_device_graph_fuzz_pallas_path():
     CI) must be observationally identical."""
     rng = np.random.default_rng(7)
     g = _mk(n=20, n_shards=4, use_pallas=True)
-    fuzz_graph_vs_oracle(g, rng, steps=30, n=20)
+    _fuzz(g, rng, steps=25, n=20)
 
 
 def test_device_graph_fuzz_nodonate_ablation():
     rng = np.random.default_rng(11)
     g = _mk(donate=False)
-    fuzz_graph_vs_oracle(g, rng, steps=40, n=30)
+    _fuzz(g, rng, steps=30, n=30)
 
 
 def test_device_and_host_graph_agree():

@@ -1,8 +1,9 @@
-"""Hypothesis rule-based differential fuzz (ISSUE 3 satellite): the SAME
-state-machine harness (tests/differential.py) drives the host dynamic
-graph, the device-resident graph engine, and the sharded batched PQ
-against pure-python oracles — interleaved ops, duplicate-edge batches and
-delete-reinsert cycles included.
+"""Hypothesis rule-based differential fuzz — ONE generic state machine
+(``conformance.make_structure_machine``) instantiated from the registry
+for every structure and engine variant: plain, no-donate ablation,
+adaptive tier (live cost-model routing), and fault mode.  The only
+per-variant surface is a factory + oracle pair — the rules, generators
+and comparisons all come from each structure's registered spec.
 
 Marked ``slow`` + ``fuzz``: the tier-1 CI job deselects them
 (``-m "not slow"``); the dedicated fuzz job runs ``-m fuzz``.
@@ -14,122 +15,160 @@ pytest.importorskip(
     reason="state-machine fuzz needs hypothesis (pip install -e .[test])")
 from hypothesis import HealthCheck, settings  # noqa: E402
 
-from differential import (make_faulty_factory,  # noqa: E402
-                          make_graph_machine, make_map_machine,
-                          make_pq_machine)
+from conformance import make_structure_machine  # noqa: E402
+from differential import BFSOracle, make_faulty_factory  # noqa: E402
 
-from repro.core.batched_map import ShardedMap  # noqa: E402
+from repro.core import substrate  # noqa: E402
 from repro.core.combining import (TIER_DEVICE, TIER_HOST,  # noqa: E402
                                   TierRouter)
-from repro.core.device_graph import DeviceGraph  # noqa: E402
 from repro.core.dynamic_graph import DynamicGraph  # noqa: E402
 from repro.core.pc_pq import AdaptivePQ  # noqa: E402
 from repro.core.read_opt import AdaptiveReadWrite  # noqa: E402
-from repro.core.seq_map import SequentialSortedMap  # noqa: E402
-from repro.core.sharded_pq import ShardedBatchedPQ  # noqa: E402
+from repro.core.sharded_pq import SequentialBatchedPQ  # noqa: E402
+
+substrate.load_builtins()
 
 pytestmark = [pytest.mark.slow, pytest.mark.fuzz]
 
-N = 24
 _SETTINGS = settings(max_examples=12, stateful_step_count=24,
                      deadline=None,
                      suppress_health_check=[HealthCheck.too_slow,
                                             HealthCheck.data_too_large])
 
 
-def _machine_case(machine_cls):
+def _case(machine_cls, *marks):
     machine_cls.TestCase.settings = _SETTINGS
+    if marks:
+        machine_cls.TestCase.pytestmark = list(marks)
     return machine_cls.TestCase
 
 
-TestHostGraphMachine = _machine_case(
-    make_graph_machine(lambda: DynamicGraph(N), N))
+# ---------------------------------------------------------------------------
+# Plain + no-donate ablation machines: every registered structure
+# ---------------------------------------------------------------------------
+for _name in sorted(substrate.names()):
+    _spec = substrate.get(_name)
+    globals()[f"Test{_name.title()}Machine"] = _case(
+        make_structure_machine(_spec))
+    globals()[f"Test{_name.title()}NoDonateMachine"] = _case(
+        make_structure_machine(
+            _spec,
+            factory=(lambda s: lambda: s.make(donate=False))(_spec)))
 
-TestDeviceGraphMachine = _machine_case(
-    make_graph_machine(
-        lambda: DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2), N))
+# the single-shard map core structure (the K-sharded default above
+# routes; K=1 must behave identically without the partition)
+TestSingleShardMapMachine = _case(
+    make_structure_machine(
+        substrate.get("map"),
+        factory=lambda: substrate.get("map").make(capacity=256,
+                                                  n_shards=1)))
 
-TestDeviceGraphNoDonateMachine = _machine_case(
-    make_graph_machine(
-        lambda: DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2,
-                            donate=False), N))
-
-TestShardedPQMachine = _machine_case(
-    make_pq_machine(lambda: ShardedBatchedPQ(512, c_max=8, n_shards=2),
-                    c_max=8))
-
-# ordered map (DESIGN.md §13): single-shard, K-sharded, and the
-# copy-per-pass ablation twin — all against SequentialSortedMap
-TestBatchedMapMachine = _machine_case(
-    make_map_machine(lambda: ShardedMap(256, c_max=8)))
-
-TestShardedMapMachine = _machine_case(
-    make_map_machine(lambda: ShardedMap(128, c_max=8, n_shards=4,
-                                        key_range=(0.0, 100.0))))
-
-TestShardedMapNoDonateMachine = _machine_case(
-    make_map_machine(lambda: ShardedMap(128, c_max=8, n_shards=4,
-                                        key_range=(0.0, 100.0),
-                                        donate=False)))
+# the host dynamic graph vs the independent BFS oracle — the trust
+# anchor under the registered DynamicGraph mirror (the graph dump hook
+# normalizes attribute- and method-style edge sets alike)
+TestHostGraphMachine = _case(
+    make_structure_machine(
+        substrate.get("graph"),
+        factory=lambda: DynamicGraph(24),
+        make_oracle=lambda ds: BFSOracle(24)))
 
 
-# tier=auto variants (PR-6 satellite; DESIGN.md §14): the adaptive
-# wrappers routed by the LIVE cost model must stay oracle-equivalent no
-# matter which tier each pass lands on.  explore_every=2 keeps the
-# router crossing tiers for the whole run, so the host↔device log-sync
-# and dedup-compaction paths are exercised under every interleaving the
-# machines generate — not just the converged steady state.
+# ---------------------------------------------------------------------------
+# tier=auto variants (DESIGN.md §14): the adaptive wrappers routed by
+# the LIVE cost model must stay oracle-equivalent no matter which tier
+# each pass lands on.  explore_every=2 keeps the router crossing tiers
+# for the whole run, so the host↔device log-sync and dedup-compaction
+# paths are exercised under every interleaving the machines generate.
+# ---------------------------------------------------------------------------
 def _auto_router(structure):
     return TierRouter(structure, (TIER_HOST, TIER_DEVICE),
                       explore_min=1, explore_every=2)
 
 
-TestAdaptivePQMachine = _machine_case(
-    make_pq_machine(
-        lambda: AdaptivePQ(ShardedBatchedPQ(512, c_max=8, n_shards=2),
-                           router=_auto_router("pq")), c_max=8))
-
-TestAdaptiveMapMachine = _machine_case(
-    make_map_machine(
-        lambda: AdaptiveReadWrite(
-            ShardedMap(128, c_max=8, n_shards=4, key_range=(0.0, 100.0)),
-            SequentialSortedMap(), router=_auto_router("map"))))
-
-TestAdaptiveGraphMachine = _machine_case(
-    make_graph_machine(
-        lambda: AdaptiveReadWrite(
-            DeviceGraph(N, edge_capacity=256, c_max=8, n_shards=2),
-            DynamicGraph(N), router=_auto_router("graph")), N))
+def _adaptive_factory(spec):
+    def factory():
+        ds = spec.make()
+        return AdaptiveReadWrite(ds, spec.make_host(ds),
+                                 router=_auto_router(spec.name))
+    return factory
 
 
-# fault-mode machines (PR-7 satellite; DESIGN.md §15): the SAME rule sets
-# run with a fresh deterministic FaultPlan per example — injected device
-# dispatch failures at up to 20% per program.  The transactional guard
+for _name in ("map", "graph", "sketch", "unionfind"):
+    _spec = substrate.get(_name)
+    globals()[f"TestAdaptive{_name.title()}Machine"] = _case(
+        make_structure_machine(
+            _spec, factory=_adaptive_factory(_spec),
+            make_oracle=(lambda s: lambda ds: s.make_host(ds.device))(
+                _spec)))
+
+
+class _AdaptivePQProtocol:
+    """Protocol adapter over :class:`AdaptivePQ` (its native interface is
+    the strict ``apply(ne, ins)`` batch): op lists in, per-op results
+    out — the same mapping the sharded PQ's ``_PQBatchHandle`` does."""
+
+    read_only = {"values"}
+    structure = "pq"
+
+    def __init__(self, apq):
+        self.apq = apq
+        self.c_max = apq.c_max
+
+    def update_batch(self, methods, inputs):
+        ne = 0
+        ins = []
+        for m, i in zip(methods, inputs):
+            if m == "insert":
+                ins.append(float(i))
+            else:
+                assert m == "extract_min"
+                ne += 1
+        vals = self.apq.apply(ne, ins) if (ne or ins) else []
+        out, j = [], 0
+        for m in methods:
+            if m == "extract_min":
+                out.append(vals[j] if j < len(vals) else None)
+                j += 1
+            else:
+                out.append(None)
+        return out
+
+    def read_batch(self, methods, inputs):
+        assert all(m == "values" for m in methods)
+        vs = sorted(self.apq.values())
+        return [list(vs) for _ in methods]
+
+    def values(self):
+        return self.apq.values()
+
+
+# batches capped at c_max: AdaptivePQ's contract is the single-slice
+# pre-batch rule on both tiers (oversized batches are the device
+# engines' slicing contract, covered by the plain machines above)
+TestAdaptivePqMachine = _case(
+    make_structure_machine(
+        substrate.get("pq"),
+        factory=lambda: _AdaptivePQProtocol(
+            AdaptivePQ(substrate.get("pq").make(),
+                       router=_auto_router("pq"))),
+        make_oracle=lambda ds: SequentialBatchedPQ(ds.values(),
+                                                   c_max=None),
+        max_update=8, with_dump=False))
+
+
+# ---------------------------------------------------------------------------
+# fault-mode machines (DESIGN.md §15): the SAME rule sets run with a
+# fresh deterministic FaultPlan per example — injected device dispatch
+# failures at up to 20% per program.  The transactional guard
 # (snapshot → restore → retry) must keep every structure exactly
 # oracle-equivalent: zero lost ops, zero duplicated ops, mirrors intact.
-def _fault_machine_case(machine_cls):
-    machine_cls.TestCase.settings = _SETTINGS
-    machine_cls.TestCase.pytestmark = [pytest.mark.faults]
-    return machine_cls.TestCase
-
-
-TestFaultyShardedPQMachine = _fault_machine_case(
-    make_pq_machine(
-        make_faulty_factory(
-            lambda fault_plan: ShardedBatchedPQ(
-                512, c_max=8, n_shards=2, fault_plan=fault_plan)),
-        c_max=8))
-
-TestFaultyShardedMapMachine = _fault_machine_case(
-    make_map_machine(
-        make_faulty_factory(
-            lambda fault_plan: ShardedMap(
-                128, c_max=8, n_shards=4, key_range=(0.0, 100.0),
-                fault_plan=fault_plan))))
-
-TestFaultyDeviceGraphMachine = _fault_machine_case(
-    make_graph_machine(
-        make_faulty_factory(
-            lambda fault_plan: DeviceGraph(
-                N, edge_capacity=256, c_max=8, n_shards=2,
-                fault_plan=fault_plan)), N))
+# ---------------------------------------------------------------------------
+for _name in sorted(substrate.names()):
+    _spec = substrate.get(_name)
+    globals()[f"TestFaulty{_name.title()}Machine"] = _case(
+        make_structure_machine(
+            _spec,
+            factory=make_faulty_factory(
+                (lambda s: lambda fault_plan: s.make(
+                    fault_plan=fault_plan))(_spec))),
+        pytest.mark.faults)

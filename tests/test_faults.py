@@ -404,30 +404,32 @@ def test_scheduler_submit_after_close_raises():
 # state-machine variants live in test_differential.py behind the fuzz
 # marker — these loops need no extra dependency and run in tier-1)
 # ---------------------------------------------------------------------------
-def test_faulty_pq_oracle_equivalent(rng):
-    from differential import fuzz_pq_vs_oracle
+def _fuzz_vs_spec_oracle(name, ds, rng, iters, **drive_kw):
+    from conformance import run_differential
+    from repro.core import substrate
 
+    substrate.load_builtins()
+    spec = substrate.get(name)
+    run_differential(ds, spec.make_host(ds), spec, rng, iters, **drive_kw)
+
+def test_faulty_pq_oracle_equivalent(rng):
     plan = FaultPlan(2, dispatch_fail_rate=0.2)
     pq = ShardedBatchedPQ(512, c_max=8, n_shards=2, fault_plan=plan,
                           guard=DispatchGuard(plan, **_NOSLEEP))
-    fuzz_pq_vs_oracle(pq, rng, 40, c_max=8)
+    _fuzz_vs_spec_oracle("pq", pq, rng, 40)
     assert plan.counters.dispatch_failures >= 1
     assert plan.counters.restores == plan.counters.retries
 
 def test_faulty_map_oracle_equivalent(rng):
-    from differential import fuzz_map_vs_oracle
-
     plan = FaultPlan(3, dispatch_fail_rate=0.2)
     m = ShardedMap(128, c_max=8, n_shards=4, key_range=(0.0, 100.0),
                    fault_plan=plan, guard=DispatchGuard(plan, **_NOSLEEP))
-    fuzz_map_vs_oracle(m, rng, 30)
+    _fuzz_vs_spec_oracle("map", m, rng, 30)
     assert plan.counters.dispatch_failures >= 1
 
 def test_faulty_graph_oracle_equivalent(rng):
-    from differential import fuzz_graph_vs_oracle
-
     plan = FaultPlan(4, dispatch_fail_rate=0.2)
     g = DeviceGraph(24, edge_capacity=256, c_max=8, n_shards=2,
                     fault_plan=plan, guard=DispatchGuard(plan, **_NOSLEEP))
-    fuzz_graph_vs_oracle(g, rng, 40, n=24)
+    _fuzz_vs_spec_oracle("graph", g, rng, 40, ctx={"n": 24})
     assert plan.counters.dispatch_failures >= 1

@@ -288,7 +288,7 @@ def _random_edges(rng, n, e):
             rng.integers(0, n, e).astype(np.int32))
 
 
-@pytest.mark.parametrize("n_shards", [1, 4, 8])
+@pytest.mark.parametrize("n_shards", [1, 3, 4, 5, 8])
 @pytest.mark.parametrize("trial", range(3))
 def test_label_step_kernel_bit_exact_across_shard_counts(n_shards, trial):
     """One scatter-min + pointer-jump iteration: the grid=(K,) kernel,
@@ -311,12 +311,14 @@ def test_label_step_kernel_bit_exact_across_shard_counts(n_shards, trial):
     np.testing.assert_array_equal(got_k, want)
 
 
-def test_label_step_empty_edge_set():
-    """The empty-batch edge case: zero edges must be identity (padding
-    edges are (0,0) self-loops — a no-op)."""
+@pytest.mark.parametrize("n_shards", [3, 4, 5])
+def test_label_step_empty_edge_set(n_shards):
+    """The zero-width batch edge case: zero edges must be identity
+    (padding edges are (0,0) self-loops — a no-op), including on
+    non-pow2 shard grids."""
     labels = jnp.arange(17, dtype=jnp.int32)
     out = label_step(labels, jnp.zeros((0,), jnp.int32),
-                     jnp.zeros((0,), jnp.int32), n_shards=4)
+                     jnp.zeros((0,), jnp.int32), n_shards=n_shards)
     np.testing.assert_array_equal(np.asarray(out), np.arange(17))
 
 
@@ -406,7 +408,7 @@ def test_merge_compact_kernel_bit_exact(trial):
         np.testing.assert_array_equal(np.asarray(got[1]), want[1])
 
 
-@pytest.mark.parametrize("n_shards", [1, 4, 8])
+@pytest.mark.parametrize("n_shards", [1, 3, 4, 5, 8])
 def test_merge_compact_sharded_per_shard_reference(n_shards):
     """ONE grid=(K,) dispatch merges every shard independently —
     per-shard output equals the per-shard oracle, for every K."""
@@ -465,3 +467,143 @@ def test_merge_compact_empty_and_full_cases():
                         jnp.int32(0))
     np.testing.assert_array_equal(np.asarray(got[0]), full_k)
     np.testing.assert_array_equal(np.asarray(got[1]), full_v)
+
+
+# ---------------------------------------------------------------------------
+# grid=(K,) parity sweep: non-pow2 shard counts (K=3, K=5) and
+# zero-width batches for EVERY sharded kernel.  Non-pow2 grids catch
+# tiling/padding assumptions baked into the pow2 happy path; zero-width
+# dispatches are what an idle shard sees on every combining pass.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("K", [3, 5])
+def test_heap_sift_sharded_nonpow2_grid(K):
+    """K=3/K=5 shard grids, last shard carrying ZERO active wavefronts —
+    per-shard output equals the per-shard oracle (identity for the idle
+    shard)."""
+    rng = np.random.default_rng(600 + K)
+    cap, c = 256, 8
+    A = np.stack([_random_heap(rng, int(rng.integers(16, 200)), cap)
+                  for _ in range(K)])
+    sizes = np.asarray([np.isfinite(A[k, 1:]).sum() for k in range(K)],
+                       np.int32)
+    starts = np.zeros((K, c), np.int32)
+    active = np.zeros((K, c), np.int32)
+    wants = []
+    for k in range(K):
+        if k == K - 1:                     # idle shard: zero-width batch
+            wants.append(A[k].copy())
+            continue
+        ss = sorted(rng.choice(np.arange(1, sizes[k] + 1), size=2,
+                               replace=False).tolist())
+        for i, s in enumerate(ss):
+            A[k, s] = rng.uniform(0, 150)
+            starts[k, i] = s
+            active[k, i] = 1
+        wants.append(sift_wavefront_reference(A[k], sizes[k], starts[k],
+                                              active[k]))
+    got = np.asarray(sift_wavefront_sharded(
+        jnp.asarray(A), jnp.asarray(sizes), jnp.asarray(starts),
+        jnp.asarray(active)))
+    np.testing.assert_array_equal(got, np.stack(wants))
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_heap_sift_sharded_zero_width_batch(K):
+    """All shards inactive: the dispatch must be a bit-exact no-op."""
+    rng = np.random.default_rng(610 + K)
+    A = np.stack([_random_heap(rng, 20 + 3 * k, 128) for k in range(K)])
+    sizes = np.asarray([20 + 3 * k for k in range(K)], np.int32)
+    got = np.asarray(sift_wavefront_sharded(
+        jnp.asarray(A), jnp.asarray(sizes),
+        jnp.zeros((K, 8), jnp.int32), jnp.zeros((K, 8), jnp.int32)))
+    np.testing.assert_array_equal(got, A)
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_heap_insert_sharded_nonpow2_grid(K):
+    rng = np.random.default_rng(620 + K)
+    cap, C = 512, 8
+    sizes = np.asarray([12 + 7 * k for k in range(K)], np.int32)
+    A = np.stack([_random_heap(rng, int(s), cap) for s in sizes])
+    ms = np.asarray([(k * 2 + 1) % (C + 1) for k in range(K)], np.int32)
+    ms[K // 2] = 0                         # one zero-width shard mid-grid
+    CV = np.full((K, C), np.inf, np.float32)
+    wants = []
+    for k in range(K):
+        if ms[k]:
+            lo = int(sizes[k]) + 1
+            level_end = (2 << int(math.floor(math.log2(lo)))) - 1
+            ms[k] = min(int(ms[k]), level_end - lo + 1)
+            CV[k, :ms[k]] = np.sort(
+                rng.uniform(0, 100, ms[k]).astype(np.float32))
+        w, _ = insert_chunk_reference(A[k], sizes[k], CV[k], ms[k],
+                                      c_max=C, max_depth=10)
+        wants.append(np.asarray(w))
+    got, new_sz = insert_chunk_sharded(
+        jnp.asarray(A), jnp.asarray(sizes), jnp.asarray(CV),
+        jnp.asarray(ms))
+    np.testing.assert_array_equal(np.asarray(got), np.stack(wants))
+    np.testing.assert_array_equal(np.asarray(new_sz), sizes + ms)
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_heap_insert_sharded_zero_width_batch(K):
+    """All shards insert nothing: heaps and sizes are unchanged."""
+    rng = np.random.default_rng(630 + K)
+    sizes = np.asarray([10 + k for k in range(K)], np.int32)
+    A = np.stack([_random_heap(rng, int(s), 256) for s in sizes])
+    got, new_sz = insert_chunk_sharded(
+        jnp.asarray(A), jnp.asarray(sizes),
+        jnp.full((K, 8), np.inf, jnp.float32), jnp.zeros((K,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), A)
+    np.testing.assert_array_equal(np.asarray(new_sz), sizes)
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_heap_kmin_sharded_nonpow2_grid(K):
+    rng = np.random.default_rng(640 + K)
+    cap, c_max = 256, 8
+    sizes = np.asarray([(17 * (k + 1)) % 60 for k in range(K)], np.int32)
+    sizes[K - 1] = 0                       # one empty shard
+    A = np.stack([_random_heap(rng, int(s), cap) for s in sizes])
+    ids, vals = k_smallest_sharded(jnp.asarray(A), jnp.asarray(sizes),
+                                   jnp.int32(4), c_max=c_max)
+    for k in range(K):
+        ir, vr = k_smallest_reference(A[k], sizes[k], 4, c_max)
+        np.testing.assert_array_equal(np.asarray(ids)[k], ir)
+        np.testing.assert_array_equal(np.asarray(vals)[k], vr)
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_heap_kmin_sharded_zero_width_batch(K):
+    """ne=0 across every shard: all-padding candidates, no reads past
+    the frontier."""
+    rng = np.random.default_rng(650 + K)
+    sizes = np.asarray([8 + 2 * k for k in range(K)], np.int32)
+    A = np.stack([_random_heap(rng, int(s), 128) for s in sizes])
+    ids, vals = k_smallest_sharded(jnp.asarray(A), jnp.asarray(sizes),
+                                   jnp.int32(0), c_max=8)
+    for k in range(K):
+        ir, vr = k_smallest_reference(A[k], sizes[k], 0, 8)
+        np.testing.assert_array_equal(np.asarray(ids)[k], ir)
+        np.testing.assert_array_equal(np.asarray(vals)[k], vr)
+
+
+@pytest.mark.parametrize("K", [3, 5])
+def test_merge_compact_sharded_zero_width_batch(K):
+    """Every shard merges an EMPTY B-run with keep-all: the grid=(K,)
+    dispatch must return the input runs bit-for-bit."""
+    rng = np.random.default_rng(660 + K)
+    n, c = 32, 4
+    ak = np.stack([np.concatenate([
+        np.sort(rng.permutation(np.arange(0, 512, dtype=np.float32))[:12]),
+        np.full((n - 12,), np.inf, np.float32)]) for _ in range(K)])
+    av = np.where(np.isinf(ak), np.inf,
+                  rng.uniform(-9, 9, ak.shape)).astype(np.float32)
+    keep = ~np.isinf(ak)
+    bk = np.full((K, c), np.inf, np.float32)
+    mk, mv = merge_compact_sharded(
+        jnp.asarray(ak), jnp.asarray(av), jnp.asarray(keep),
+        jnp.asarray(bk), jnp.asarray(bk), jnp.zeros((K,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(mk), ak)
+    np.testing.assert_array_equal(np.asarray(mv), av)
