@@ -18,6 +18,11 @@ Implementations:
   ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
 * ``PC-K4 guarded`` — the fault-free transactional-guard twin
   (DESIGN.md §15; EXPERIMENTS §Robustness): snapshot per pass, no plan.
+* ``PC-K4 megapass`` / ``PC-K4 alternating`` — the §17 fused megapass
+  pair (ISSUE 9): async-session clients publish to a
+  ``MegapassCombiner``; up to ``rounds_cap`` mixed insert/delete/
+  connected rounds ride ONE donated scan dispatch (vs one program per
+  round); both rows report ``rounds_per_dispatch``.
 * ``Lock`` (global mutex), ``RW Lock``, ``FC`` (flat combining) — the
   paper's host baselines.
 
@@ -48,7 +53,10 @@ C_MAX = 16
 
 DEFAULT_IMPLS = ("PC host", "PC-K1", "PC-K4", "PC-K8",
                  "PC-K4 nodonate", "PC-K4 pallas", "PC-K4 guarded",
-                 "PC-adaptive", "Lock", "RW Lock", "FC")
+                 "PC-adaptive", "PC-K4 megapass", "PC-K4 alternating",
+                 "Lock", "RW Lock", "FC")
+
+ROUNDS_CAP = 8
 
 
 def _random_tree(rng, n):
@@ -81,6 +89,17 @@ def _make_impl(name, n_vertices, edge_capacity):
         key = name.split()
         K = int(key[0][len("PC-K"):])
         flavor = key[1] if len(key) > 1 else ""
+        if flavor in ("megapass", "alternating"):
+            # §17 fused megapass pair (ISSUE 9); the conservative
+            # whole-megapass occupancy guard counts every insert lane of
+            # the backlog as outstanding until its fetch resolves, so
+            # give the edge buffer one megapass worth of headroom
+            from repro.core.read_opt import MegapassCombiner
+            g = _device_graph(n_vertices,
+                              edge_capacity + ROUNDS_CAP * C_MAX,
+                              n_shards=K)
+            return g, MegapassCombiner(g, rounds_cap=ROUNDS_CAP,
+                                       use_megapass=flavor == "megapass")
         g = _device_graph(n_vertices, edge_capacity, n_shards=K,
                           use_pallas=flavor == "pallas",
                           donate=flavor != "nodonate",
@@ -145,6 +164,9 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
             for P in threads:
                 for name in impls:
                     g, ex = _make_impl(name, n_vertices, edge_capacity)
+                    eng = None
+                    if not callable(ex):    # MegapassCombiner rows
+                        eng, ex = ex, ex.execute
                     prepopulate(g)
                     warmup(g, ex, trees[0][0], P)
                     td = getattr(g, "tier_decisions", None)
@@ -152,31 +174,46 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                         for k in td:
                             td[k] = 0
 
-                    def body(tid, ex=ex):
-                        r = np.random.default_rng(1000 + tid)
-                        for _ in range(ops):
-                            p = r.random() * 100
-                            if p < c:
-                                u = int(r.integers(0, n_vertices))
-                                v = int(r.integers(0, n_vertices))
-                                ex("connected", (u, v))
-                            else:
-                                t = trees[int(r.integers(0, len(trees)))]
-                                e = t[int(r.integers(0, len(t)))]
-                                if p < c + (100 - c) / 2:
-                                    ex("insert", e)
-                                else:
-                                    ex("delete", e)
+                    def _draw(r):
+                        p = r.random() * 100
+                        if p < c:
+                            return "connected", (
+                                int(r.integers(0, n_vertices)),
+                                int(r.integers(0, n_vertices)))
+                        t = trees[int(r.integers(0, len(trees)))]
+                        e = t[int(r.integers(0, len(t)))]
+                        return ("insert" if p < c + (100 - c) / 2
+                                else "delete"), e
+
+                    if eng is not None:
+                        # async session: publish, drain at the end
+                        def body(tid, eng=eng):
+                            r = np.random.default_rng(1000 + tid)
+                            futs = [eng.submit(*_draw(r))
+                                    for _ in range(ops)]
+                            for f in futs:
+                                f.result()
+                    else:
+                        def body(tid, ex=ex):
+                            r = np.random.default_rng(1000 + tid)
+                            for _ in range(ops):
+                                ex(*_draw(r))
 
                     row = measure(P, ops, body, repeats=repeats)
                     row.update({"workload": wl, "read_pct": c,
                                 "threads": P, "impl": name})
                     if td is not None:
                         row["tier_decisions"] = dict(td)
+                    extra = ""
+                    if eng is not None:
+                        row["rounds_per_dispatch"] = round(
+                            eng.rounds_per_dispatch, 2)
+                        extra = f" r/d {row['rounds_per_dispatch']:.2f}"
+                        eng.close()
                     results.append(row)
                     print(f"[graph] {wl} c={c}% P={P} {name:16s}"
                           f" {row['ops_per_s']:9.0f} ops/s "
-                          f"(iqr {row['iqr']:.0f})")
+                          f"(iqr {row['iqr']:.0f}){extra}")
     save("bench_graph", results)
     return results
 

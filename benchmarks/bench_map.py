@@ -23,6 +23,13 @@ Implementations:
   ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
 * ``PC-K4 guarded`` — the fault-free transactional-guard twin
   (DESIGN.md §15; EXPERIMENTS §Robustness): snapshot per pass, no plan.
+* ``PC-K4 megapass`` / ``PC-K4 alternating`` — the §17 fused megapass
+  pair (ISSUE 9): async-session clients publish their op stream to a
+  ``MegapassCombiner`` and drain futures at the end of the run; the
+  megapass row lowers up to ``rounds_cap`` mixed update+read rounds
+  onto ONE donated scan dispatch, the alternating twin sends the SAME
+  rounds as one device program each — the pair isolates exactly the
+  dispatch-fusion effect, and both report ``rounds_per_dispatch``.
 
 Every row reports median-of-N (default 5) with IQR via
 ``benchmarks._timing.measure``; rows are keyed (impl, read_pct, threads)
@@ -48,7 +55,31 @@ KEY_RANGE = (0.0, 1000.0)
 
 DEFAULT_IMPLS = ("FC host", "Lock", "PC-K1", "PC-K4", "PC-K8",
                  "PC-K4 nodonate", "PC-K4 pallas", "PC-K4 guarded",
-                 "PC-adaptive")
+                 "PC-adaptive", "PC-K4 megapass", "PC-K4 alternating")
+
+ROUNDS_CAP = 8
+
+
+def _draw_op(r, c, known, n_keys):
+    """One op from the benchmark mix: reads with probability c%, the
+    same distribution for every implementation row."""
+    p = r.random() * 100
+    if p < c:
+        q = int(r.integers(0, 4))
+        if q == 0:
+            return "lookup", float(known[r.integers(len(known))])
+        if q == 1:
+            return "kth_smallest", int(r.integers(1, n_keys))
+        lo = float(np.float32(r.uniform(0, KEY_RANGE[1] - 50)))
+        return ("range_count" if q == 2 else "range_sum"), (lo, lo + 50.0)
+    q = int(r.integers(0, 3))
+    if q == 0:
+        return "insert", (float(np.float32(r.uniform(*KEY_RANGE))),
+                          float(np.float32(r.uniform(0, 10))))
+    if q == 1:
+        return "assign", (float(known[r.integers(len(known))]),
+                          float(np.float32(r.uniform(0, 10))))
+    return "delete", float(known[r.integers(len(known))])
 
 
 def _items(rng, n_keys):
@@ -76,6 +107,16 @@ def _make_impl(name, items, capacity):
         parts = name.split()
         K = int(parts[0][len("PC-K"):])
         flavor = parts[1] if len(parts) > 1 else ""
+        if flavor in ("megapass", "alternating"):
+            # §17 fused megapass pair (ISSUE 9): same async drain loop,
+            # one fused scan (megapass) vs one program per round
+            # (alternating) — see module docstring
+            from repro.core.pc_map import pc_megapass_map
+            return pc_megapass_map(
+                shard_capacity(capacity, K, c_max=C_MAX), c_max=C_MAX,
+                n_shards=K, key_range=KEY_RANGE, items=items,
+                rounds_cap=ROUNDS_CAP,
+                use_megapass=flavor == "megapass")
         # key-range routing of near-uniform keys is i.i.d. per shard, so
         # the binomial-tail sizing of bench_pq.shard_capacity applies
         m = ShardedMap(shard_capacity(capacity, K, c_max=C_MAX),
@@ -123,47 +164,39 @@ def bench_map(n_keys=2000, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
                     for k in td:
                         td[k] = 0
 
-                def body(tid, ex=ex):
-                    r = np.random.default_rng(1000 + tid)
-                    for _ in range(ops):
-                        p = r.random() * 100
-                        if p < c:
-                            q = int(r.integers(0, 4))
-                            if q == 0:
-                                ex("lookup",
-                                   float(known[r.integers(len(known))]))
-                            elif q == 1:
-                                ex("kth_smallest",
-                                   int(r.integers(1, n_keys)))
-                            else:
-                                lo = float(np.float32(
-                                    r.uniform(0, KEY_RANGE[1] - 50)))
-                                ex("range_count" if q == 2 else
-                                   "range_sum", (lo, lo + 50.0))
-                        else:
-                            q = int(r.integers(0, 3))
-                            if q == 0:
-                                ex("insert",
-                                   (float(np.float32(r.uniform(
-                                       *KEY_RANGE))),
-                                    float(np.float32(r.uniform(0, 10)))))
-                            elif q == 1:
-                                ex("assign",
-                                   (float(known[r.integers(len(known))]),
-                                    float(np.float32(r.uniform(0, 10)))))
-                            else:
-                                ex("delete",
-                                   float(known[r.integers(len(known))]))
+                submit = getattr(eng, "submit", None)
+                if submit is not None:
+                    # megapass/alternating rows: async-session clients
+                    # publish the op stream and drain futures at the end
+                    # (the AsyncRoundsPQ client model of bench_pq)
+                    def body(tid, submit=submit):
+                        r = np.random.default_rng(1000 + tid)
+                        futs = [submit(*_draw_op(r, c, known, n_keys))
+                                for _ in range(ops)]
+                        for f in futs:
+                            f.result()
+                else:
+                    def body(tid, ex=ex):
+                        r = np.random.default_rng(1000 + tid)
+                        for _ in range(ops):
+                            ex(*_draw_op(r, c, known, n_keys))
 
                 row = measure(P, ops, body, repeats=repeats)
                 row.update({"read_pct": c, "threads": P, "impl": name,
                             "n_keys": n_keys})
                 if td is not None:
                     row["tier_decisions"] = dict(td)
+                rpd = getattr(eng, "rounds_per_dispatch", None)
+                if rpd is not None:
+                    row["rounds_per_dispatch"] = round(rpd, 2)
                 results.append(row)
+                extra = (f" r/d {row['rounds_per_dispatch']:.2f}"
+                         if "rounds_per_dispatch" in row else "")
                 print(f"[map] c={c}% P={P} {name:16s}"
                       f" {row['ops_per_s']:9.0f} ops/s "
-                      f"(iqr {row['iqr']:.0f})")
+                      f"(iqr {row['iqr']:.0f}){extra}")
+                if submit is not None:
+                    eng.close()
     save("bench_map", results)
     return results
 

@@ -27,6 +27,13 @@ Ablation rows (EXPERIMENTS §Ablations; DESIGN.md §10, §12):
               around every combining pass with NO fault plan attached:
               the fault-free snapshot overhead (EXPERIMENTS §Robustness,
               acceptance ≤10% vs the ungated PC-K4 row)
+  PC-K4 megapass / PC-K4 alternating — the §17 fused update+read
+              megapass pair (ISSUE 9) on a MIXED workload (25% insert,
+              25% extract_min, 50% peek_min): async-session clients
+              publish to a ``MegapassCombiner``; the megapass row
+              lowers up to R mixed rounds onto ONE donated scan
+              dispatch, the alternating twin sends the SAME rounds one
+              program each — both report ``rounds_per_dispatch``
 
 Every row reports median-of-N (default 5) with IQR via
 ``benchmarks._timing.measure`` — single-shot rows swung 2–3× run-to-run
@@ -56,6 +63,7 @@ from repro.core.batched_pq import BatchedPriorityQueue
 from repro.core.locks import LockDS
 from repro.core.pc_pq import (AsyncRoundsPQ, fc_priority_queue,
                               pc_adaptive_priority_queue,
+                              pc_megapass_priority_queue,
                               pc_priority_queue,
                               pc_sharded_priority_queue)
 from repro.core.seq_pq import SequentialHeap
@@ -91,7 +99,7 @@ def shard_capacity(n_keys: int, n_shards: int, c_max: int = C_MAX,
 def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
              value_range=2 ** 31 - 1, seed=0, shard_counts=(1, 4, 8),
              ablate_donation=True, ablate_pallas=None, ablate_rounds=True,
-             rounds_cap=4, repeats=5):
+             ablate_megapass=True, rounds_cap=4, repeats=5):
     if ablate_pallas is None:
         import jax
         ablate_pallas = jax.default_backend() == "tpu"
@@ -160,10 +168,20 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                 ShardedBatchedPQ(shard_capacity(n_keys, 4), c_max=C_MAX,
                                  n_shards=4, values=init))}
             impls["PC-adaptive"] = adaptive["PC-adaptive"].execute
-            return impls, rounds_impls, adaptive
+            # §17 fused megapass pair (ISSUE 9): mixed update+read
+            # workload — one fused scan vs one program per round
+            mega_impls = {}
+            if ablate_megapass:
+                cap4 = shard_capacity(n_keys, 4)
+                for mname, flag in (("PC-K4 megapass", True),
+                                    ("PC-K4 alternating", False)):
+                    mega_impls[mname] = pc_megapass_priority_queue(
+                        cap4, c_max=C_MAX, n_shards=4, values=init,
+                        rounds_cap=2 * rounds_cap, use_megapass=flag)
+            return impls, rounds_impls, mega_impls, adaptive
 
         for P in threads:
-            impls, rounds_impls, adaptive = make_impls(P)
+            impls, rounds_impls, mega_impls, adaptive = make_impls(P)
             for name, ex in impls.items():
                 # warm the jit caches outside the timed window
                 ex("insert", 0.5)
@@ -221,6 +239,43 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                       f"{row['ops_per_s']:10.0f} ops/s "
                       f"(iqr {row['iqr']:.0f})")
                 eng.close()
+            for name, eng in mega_impls.items():
+                # warm every fused program variant (update round, peek
+                # round, both megapass shapes) outside the timed window
+                eng.execute("insert", 0.5)
+                eng.execute("peek_min")
+                eng.execute("extract_min")
+                vals = rng.uniform(0, value_range, ops).astype(np.float32)
+
+                def body(tid, eng=eng, vals=vals):
+                    # async session over the MIXED workload: 25% insert,
+                    # 25% extract_min, 50% peek_min; drain at the end
+                    r = np.random.default_rng(tid)
+                    futs = []
+                    for i in range(ops):
+                        q = int(r.integers(0, 4))
+                        if q == 0:
+                            futs.append(eng.submit("insert",
+                                                   float(vals[i])))
+                        elif q == 1:
+                            futs.append(eng.submit("extract_min"))
+                        else:
+                            futs.append(eng.submit("peek_min"))
+                    for f in futs:
+                        f.result()
+
+                row = measure(P, ops, body, repeats=repeats)
+                row.update({"impl": name, "size": S, "threads": P,
+                            "rounds_cap": 2 * rounds_cap,
+                            "peek_pct": 50,
+                            "rounds_per_dispatch":
+                                round(eng.rounds_per_dispatch, 2)})
+                results.append(row)
+                print(f"[pq] S={S} P={P} {name:18s} "
+                      f"{row['ops_per_s']:10.0f} ops/s "
+                      f"(iqr {row['iqr']:.0f}) "
+                      f"r/d {row['rounds_per_dispatch']:.2f}")
+                eng.close()
     save("bench_pq", results)
     return results
 
@@ -259,6 +314,9 @@ def main(argv=None):
                          "mode on CPU is orders of magnitude slower)")
     ap.add_argument("--no-ablate-rounds", action="store_true",
                     help="skip the 'PC-K{K} rounds' fused multi-round rows")
+    ap.add_argument("--no-ablate-megapass", action="store_true",
+                    help="skip the 'PC-K4 megapass/alternating' mixed "
+                         "update+read rows")
     ap.add_argument("--rounds-cap", type=int, default=4,
                     help="R cap for the fused multi-round rows")
     ap.add_argument("--repeats", type=int, default=5,
@@ -269,6 +327,7 @@ def main(argv=None):
              ablate_donation=not a.no_ablate_donation,
              ablate_pallas=a.ablate_pallas,
              ablate_rounds=not a.no_ablate_rounds,
+             ablate_megapass=not a.no_ablate_megapass,
              rounds_cap=a.rounds_cap, repeats=a.repeats)
 
 

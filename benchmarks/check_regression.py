@@ -8,7 +8,12 @@ when any parallel-combining row's median throughput dropped by more than
 
 Only device-tier ``PC*`` rows gate — the host-native calibration rows
 (FC/Lock, and the graph bench's ``PC host`` tier) track the runner's
-CPU, not this repo's hot path.  Rows whose recorded baseline IQR reaches
+CPU, not this repo's hot path.  The ISSUE-9 megapass rows
+(``PC-K4 megapass`` / ``PC-K4 alternating``, carrying
+``rounds_per_dispatch``) ride the same identity keys: on their first
+recorded run they surface as "new row (no baseline)" — informational,
+the PR-5 convention — and gate like any PC row once a trajectory entry
+records them.  Rows whose recorded baseline IQR reaches
 their median are reported as ``UNSTABLE`` (with the comparison they
 would have made) and excluded from gating, plus a summary count — the
 gate would only measure container noise there, but the exclusion must be

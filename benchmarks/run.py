@@ -59,15 +59,11 @@ def main(argv=None) -> None:
 
     step += 1
     print("=" * 70)
-    print(f"[{step}/{n_steps}] Roofline — 3-term analysis over the "
-          f"dry-run artifacts")
+    print(f"[{step}/{n_steps}] Roofline — measured kernel bandwidth "
+          f"(+ dry-run cells when artifacts exist)")
     print("=" * 70)
-    try:
-        from .roofline import main as roofline_main
-        roofline_main()
-    except Exception as e:  # dry-run artifacts may be absent on a fresh tree
-        print(f"[roofline] skipped: {e!r} — run "
-              f"`python -m repro.launch.dryrun --all --mesh both` first")
+    from .roofline import main as roofline_main
+    roofline_main(repeats=max(repeats, 5))
 
     print(f"\n[benchmarks] all done in {time.time()-t0:.0f}s")
 

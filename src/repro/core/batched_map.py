@@ -346,6 +346,108 @@ read_pass = jax.jit(_read_impl)
 
 
 # ---------------------------------------------------------------------------
+# Fused mixed update+read megapass (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+MEGA_UPDATE, MEGA_READ = 0, 1
+
+
+def _mixed_impl(state: MapState, tags: jax.Array, op_a: jax.Array,
+                op_b: jax.Array, op_code: jax.Array, nb: jax.Array, *,
+                key_range: Optional[Tuple[float, float]] = None,
+                use_pallas: bool = False
+                ) -> Tuple[MapState, jax.Array, jax.Array]:
+    """R heterogeneous combining rounds as ONE donated scan program.
+
+    Each row is one tagged round slice: ``tags`` (R,) int32 selects the
+    fused apply pass (``MEGA_UPDATE``) or the vectorized read pass
+    (``MEGA_READ``) inside a ``lax.cond``, so interleaved update and
+    read rounds cost one dispatch instead of one each.  Row payloads
+    share lanes: ``op_a``/``op_b`` (R, c) f32 carry (keys, vals) for
+    updates and (qa, qb) for reads; ``op_code`` (R, c) int32 carries the
+    op code or the read kind; ``nb`` (R,) is the live lane count (reads
+    answer all c lanes — the host masks).  Returns ``(state, res, ok)``
+    with per-round (R, c) result slots: update rows fill ``res`` with
+    the +inf sentinel and ``ok`` with the arrival-order masks; read rows
+    leave the state untouched and fill both."""
+
+    def body(st, rnd):
+        tag, ra, rb, rc, rnb = rnd
+
+        def upd(s):
+            s2, ok = _apply_impl(s, ra, rb, rc, rnb, key_range=key_range,
+                                 use_pallas=use_pallas)
+            return s2, (jnp.full(ra.shape, INF, jnp.float32), ok)
+
+        def rd(s):
+            res, ok = _read_impl(s, ra, rb, rc)
+            return s, (res, ok)
+
+        st, out = jax.lax.cond(tag == MEGA_READ, rd, upd, st)
+        return st, out
+
+    state, (res, ok) = jax.lax.scan(body, state,
+                                    (tags, op_a, op_b, op_code, nb))
+    return state, res, ok
+
+
+mixed_pass = jax.jit(_mixed_impl, static_argnames=_STATIC,
+                     donate_argnums=(0,))
+mixed_pass_undonated = jax.jit(_mixed_impl, static_argnames=_STATIC)
+
+
+def _encode_update_ops(methods: Sequence[str], inputs: Sequence[Any]):
+    """Validate + quantize an update op list into (opk, opv, code) f32/
+    f32/int32 arrays — raises ``ValueError`` before anything dispatches."""
+    n_ops = len(methods)
+    opk = np.zeros((n_ops,), np.float32)
+    opv = np.zeros((n_ops,), np.float32)
+    code = np.zeros((n_ops,), np.int32)
+    for i, (m, inp) in enumerate(zip(methods, inputs)):
+        if m not in _UPDATE_CODE:
+            raise ValueError(f"unknown update method {m!r}")
+        code[i] = _UPDATE_CODE[m]
+        if m == "delete":
+            opk[i] = _qkey(inp)
+        else:
+            opk[i] = _qkey(inp[0])
+            opv[i] = _qval(inp[1])
+    return opk, opv, code
+
+
+def _encode_read_ops(methods: Sequence[str], inputs: Sequence[Any]):
+    """Validate + quantize a read op list into (qa, qb, kind) arrays."""
+    n = len(methods)
+    qa = np.zeros((n,), np.float32)
+    qb = np.full((n,), -1.0, np.float32)
+    kind = np.full((n,), RD_COUNT, np.int32)
+    for i, (m, inp) in enumerate(zip(methods, inputs)):
+        if m not in _READ_CODE:
+            raise ValueError(f"unknown read method {m!r}")
+        kind[i] = _READ_CODE[m]
+        if m == "lookup":
+            qa[i] = _qkey(inp)
+        elif m == "kth_smallest":
+            qa[i] = np.float32(int(inp))
+        else:
+            qa[i] = _qkey(inp[0])
+            qb[i] = _qkey(inp[1])
+    return qa, qb, kind
+
+
+def _convert_read_results(methods: Sequence[str], res_h, ok_h) -> List[Any]:
+    """Fetched (res, ok) lanes → per-op python results, arrival order."""
+    out: List[Any] = []
+    for i, m in enumerate(methods):
+        if m == "range_count":
+            out.append(int(res_h[i]))
+        elif m == "range_sum":
+            out.append(float(res_h[i]))
+        else:                          # lookup / kth_smallest
+            out.append(float(res_h[i]) if ok_h[i] else None)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Deferred update results (the one-sync contract, DESIGN.md §10/§11)
 # ---------------------------------------------------------------------------
 class AsyncMapUpdate:
@@ -385,6 +487,74 @@ class AsyncMapUpdate:
         return self._out
 
 
+class _MegapassFetch:
+    """The ONE deferred blocking fetch shared by every handle of a fused
+    megapass dispatch (DESIGN.md §17).
+
+    The (R, c) per-round result slots stay on device until the first
+    handle resolves; that resolution rides ``_resolve_through`` so it
+    also drains any OLDER outstanding update handles and re-tightens the
+    occupancy mirror — the whole megapass (updates, reads, sizes, and
+    prior batches) costs exactly one host sync."""
+
+    def __init__(self, owner: "ShardedMap", res_rows, ok_rows):
+        self._owner: Optional["ShardedMap"] = owner
+        self._res = res_rows
+        self._ok = ok_rows
+        self._upd: List[Tuple[AsyncMapUpdate, int, int]] = []
+        self._cache = None
+
+    def rows(self):
+        if self._cache is None:
+            got = self._owner._resolve_through(
+                None, extra=(self._res, self._ok))
+            res_h, ok_h = np.asarray(got[0]), np.asarray(got[1])
+            for inner, lo, hi in self._upd:
+                if inner._out is None:
+                    inner._resolve([ok_h[lo:hi]])
+            self._cache = (res_h, ok_h)
+            self._owner = self._res = self._ok = None
+            self._upd = []
+        return self._cache
+
+
+class _MegaUpdateRound:
+    """Handle for one update round of a megapass: per-op ok masks in
+    arrival order, resolved through the dispatch's shared fetch."""
+
+    def __init__(self, shared: _MegapassFetch, inner: AsyncMapUpdate):
+        self._shared = shared
+        self._inner = inner
+
+    def result(self) -> List[bool]:
+        if self._inner._out is None:
+            self._shared.rows()
+        return self._inner._out
+
+
+class _MegaReadRound:
+    """Handle for one read round of a megapass."""
+
+    def __init__(self, shared: _MegapassFetch, row_lo: int,
+                 counts: List[int], methods: List[str]):
+        self._shared = shared
+        self._row_lo = row_lo
+        self._counts = counts
+        self._methods = methods
+
+    def result(self) -> List[Any]:
+        res_h, ok_h = self._shared.rows()
+        res = np.concatenate(
+            [res_h[self._row_lo + r, :nc]
+             for r, nc in enumerate(self._counts)]) \
+            if self._counts else np.zeros((0,), np.float32)
+        ok = np.concatenate(
+            [ok_h[self._row_lo + r, :nc]
+             for r, nc in enumerate(self._counts)]) \
+            if self._counts else np.zeros((0,), bool)
+        return _convert_read_results(self._methods, res, ok)
+
+
 # ---------------------------------------------------------------------------
 # Host-facing wrappers
 # ---------------------------------------------------------------------------
@@ -417,6 +587,7 @@ class ShardedMap(substrate.BatchedStructure):
     structure = "map"
     read_only: Set[str] = {"lookup", "range_count", "range_sum",
                            "kth_smallest"}
+    supports_megapass = True
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 1,
                  key_range: Optional[Tuple[float, float]] = None,
@@ -516,18 +687,7 @@ class ShardedMap(substrate.BatchedStructure):
         (DESIGN.md §12).  NO blocking transfer: the per-op result masks
         stay on device and ride the next read's fetch."""
         n_ops = len(methods)
-        opk = np.zeros((n_ops,), np.float32)
-        opv = np.zeros((n_ops,), np.float32)
-        code = np.zeros((n_ops,), np.int32)
-        for i, (m, inp) in enumerate(zip(methods, inputs)):
-            if m not in _UPDATE_CODE:
-                raise ValueError(f"unknown update method {m!r}")
-            code[i] = _UPDATE_CODE[m]
-            if m == "delete":
-                opk[i] = _qkey(inp)
-            else:
-                opk[i] = _qkey(inp[0])
-                opv[i] = _qval(inp[1])
+        opk, opv, code = _encode_update_ops(methods, inputs)
         if n_ops == 0:
             handle = AsyncMapUpdate(self, [], [], self.c_max)
             handle._out = []
@@ -621,33 +781,16 @@ class ShardedMap(substrate.BatchedStructure):
         nq = len(methods)
         if nq == 0:
             return []
+        qa0, qb0, kind0 = _encode_read_ops(methods, inputs)
         qa = np.zeros((_pow2(nq),), np.float32)
         qb = np.full((_pow2(nq),), -1.0, np.float32)
         kind = np.full((_pow2(nq),), RD_COUNT, np.int32)  # pad: count 0
-        for i, (m, inp) in enumerate(zip(methods, inputs)):
-            if m not in _READ_CODE:
-                raise ValueError(f"unknown read method {m!r}")
-            kind[i] = _READ_CODE[m]
-            if m == "lookup":
-                qa[i] = _qkey(inp)
-            elif m == "kth_smallest":
-                qa[i] = np.float32(int(inp))
-            else:
-                qa[i] = _qkey(inp[0])
-                qb[i] = _qkey(inp[1])
+        qa[:nq], qb[:nq], kind[:nq] = qa0, qb0, kind0
         res, ok = read_pass(self.state, jnp.asarray(qa), jnp.asarray(qb),
                             jnp.asarray(kind))
         got = self._resolve_through(None, extra=(res, ok))
         res_h, ok_h = np.asarray(got[0]), np.asarray(got[1])
-        out: List[Any] = []
-        for i, m in enumerate(methods):
-            if m == "range_count":
-                out.append(int(res_h[i]))
-            elif m == "range_sum":
-                out.append(float(res_h[i]))
-            else:                      # lookup / kth_smallest
-                out.append(float(res_h[i]) if ok_h[i] else None)
-        return out
+        return _convert_read_results(methods, res_h, ok_h)
 
     def lookup(self, key: float) -> Optional[float]:
         return self.read_batch(["lookup"], [key])[0]
@@ -660,6 +803,115 @@ class ShardedMap(substrate.BatchedStructure):
 
     def kth_smallest(self, k: int) -> Optional[float]:
         return self.read_batch(["kth_smallest"], [k])[0]
+
+    # -- fused mixed update+read megapass (DESIGN.md §17) ---------------------
+    def mixed_rounds(self, rounds):
+        """R heterogeneous update/read rounds as ONE donated scan program.
+
+        Round r+1 observes all of round r's effects (the scan carry IS
+        the serial schedule); per-round results stack into never-donated
+        (R, c) output slots and every returned handle resolves through
+        ONE shared blocking fetch.  Refusal is atomic across the whole
+        megapass: the occupancy guard validates every update slice
+        before anything dispatches."""
+        c = self.c_max
+        tags: List[int] = []
+        ras: List[np.ndarray] = []
+        rbs: List[np.ndarray] = []
+        rcs: List[np.ndarray] = []
+        nbs: List[int] = []
+        plans: List[Tuple] = []
+        upd_slices = []
+        for kind, methods, inputs in rounds:
+            methods, inputs = list(methods), list(inputs)
+            n = len(methods)
+            row_lo = len(tags)
+            if kind == "update":
+                opk, opv, code = _encode_update_ops(methods, inputs)
+                lane_counts: List[int] = []
+                for r in range(-(-n // c) if n else 0):
+                    nc = min(c, n - r * c)
+                    ka = np.full((c,), np.inf, np.float32)
+                    va = np.zeros((c,), np.float32)
+                    ca = np.zeros((c,), np.int32)
+                    ka[:nc] = opk[r * c : r * c + nc]
+                    va[:nc] = opv[r * c : r * c + nc]
+                    ca[:nc] = code[r * c : r * c + nc]
+                    tags.append(MEGA_UPDATE)
+                    ras.append(ka); rbs.append(va); rcs.append(ca)
+                    nbs.append(nc)
+                    lane_counts.append(nc)
+                    upd_slices.append((ka, va, ca, nc))
+                plans.append(("update", row_lo, lane_counts))
+            elif kind == "read":
+                qa, qb, qk = _encode_read_ops(methods, inputs)
+                counts: List[int] = []
+                for r in range(-(-n // c) if n else 0):
+                    nc = min(c, n - r * c)
+                    aa = np.zeros((c,), np.float32)
+                    bb = np.full((c,), -1.0, np.float32)
+                    kk = np.full((c,), RD_COUNT, np.int32)
+                    aa[:nc] = qa[r * c : r * c + nc]
+                    bb[:nc] = qb[r * c : r * c + nc]
+                    kk[:nc] = qk[r * c : r * c + nc]
+                    tags.append(MEGA_READ)
+                    ras.append(aa); rbs.append(bb); rcs.append(kk)
+                    nbs.append(nc)
+                    counts.append(nc)
+                plans.append(("read", row_lo, counts, methods))
+            else:
+                raise ValueError(f"unknown round kind {kind!r} "
+                                 f"(want 'update' or 'read')")
+        n_rows = len(tags)
+        if n_rows == 0:
+            return [substrate._DoneReads([]) for _ in plans]
+        # pow2-pad the row count with no-op READ rows — reads are pure,
+        # so padding can never perturb the serial schedule
+        while len(tags) < _pow2(n_rows):
+            tags.append(MEGA_READ)
+            ras.append(np.zeros((c,), np.float32))
+            rbs.append(np.full((c,), -1.0, np.float32))
+            rcs.append(np.full((c,), RD_COUNT, np.int32))
+            nbs.append(0)
+        tags_a = np.asarray(tags, np.int32)
+        ra_a = np.stack(ras)
+        rb_a = np.stack(rbs)
+        rc_a = np.stack(rcs)
+        nb_a = np.asarray(nbs, np.int32)
+
+        def commit():
+            self._guard_slices(upd_slices)
+            fn = mixed_pass if self.donate else mixed_pass_undonated
+            self.state, res_rows, ok_rows = fn(
+                self.state, jnp.asarray(tags_a), jnp.asarray(ra_a),
+                jnp.asarray(rb_a), jnp.asarray(rc_a), jnp.asarray(nb_a),
+                key_range=self.key_range, use_pallas=self.use_pallas)
+            return res_rows, ok_rows
+
+        if self._guard is None:
+            res_rows, ok_rows = commit()
+        else:
+            res_rows, ok_rows = self._guard.run(
+                commit, self._snapshot, self._restore,
+                site="map.mixed_rounds")
+
+        shared = _MegapassFetch(self, res_rows, ok_rows)
+        handles: List[Any] = []
+        for plan in plans:
+            if plan[0] == "update":
+                _, row_lo, lane_counts = plan
+                inner = AsyncMapUpdate(self, [], lane_counts, c)
+                if not lane_counts:
+                    inner._out = []
+                else:
+                    shared._upd.append(
+                        (inner, row_lo, row_lo + len(lane_counts)))
+                handles.append(_MegaUpdateRound(shared, inner))
+            else:
+                _, row_lo, counts, methods = plan
+                handles.append(_MegaReadRound(shared, row_lo, counts,
+                                              methods))
+        return handles
 
     # -- debug / test helpers -------------------------------------------------
     def items(self) -> List[Tuple[float, float]]:
@@ -798,9 +1050,11 @@ substrate.register(substrate.StructureSpec(
     canon=_read_opt._canon_map_op,
     compact=_read_opt._compact_map,
     refusal_batch=_refusal_batch,
+    megapass=True,
     bench="benchmarks.bench_map",
     bench_smoke=("--keys", "1000", "--reads", "50", "100",
                  "--threads", "1", "4", "--ops", "60",
-                 "--impls", "FC host", "PC-K1", "PC-K4"),
+                 "--impls", "FC host", "PC-K1", "PC-K4",
+                 "PC-K4 megapass", "PC-K4 alternating"),
     extras={"serve_kw": dict(capacity=512, c_max=64, n_shards=4)},
 ))

@@ -133,6 +133,17 @@ class ParallelCombiner:
         # instrumentation
         self.passes = 0
         self.combined_sizes: List[int] = []
+        # megapass instrumentation (DESIGN.md §17): fused mixed
+        # update+read dispatches, and the combining rounds they carried
+        self.megapass_dispatches = 0
+        self.megapass_rounds = 0
+
+    @property
+    def rounds_per_dispatch(self) -> float:
+        """Mean combining rounds per fused megapass dispatch (0.0 when
+        no megapass was ever dispatched)."""
+        return (self.megapass_rounds / self.megapass_dispatches
+                if self.megapass_dispatches else 0.0)
 
     # -- publication list -------------------------------------------------
     def _record(self) -> PublicationRecord:

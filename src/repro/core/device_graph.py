@@ -227,6 +227,47 @@ read_pass = jax.jit(_read_impl, static_argnames=_READ_STATIC,
                     donate_argnums=(0,))
 read_pass_undonated = jax.jit(_read_impl, static_argnames=_READ_STATIC)
 
+# megapass row tags (DESIGN.md §17)
+MEGA_UPDATE, MEGA_READ = 0, 1
+
+
+def _mixed_rounds_impl(state: GraphState, tags: jax.Array, buv: jax.Array,
+                       flags: jax.Array, nb: jax.Array, *, n: int,
+                       e_bound: int, n_shards: int, use_pallas: bool
+                       ) -> Tuple[GraphState, jax.Array]:
+    """R heterogeneous update/read rounds as ONE ``lax.scan`` program
+    (DESIGN.md §17): per row, a ``lax.cond`` on the round tag picks the
+    fused mixed-op update pass or the fused refresh+gather read pass.
+    ``tags`` (R,), ``buv`` (R, 2, c) endpoints (update) or query pairs
+    (read), ``flags`` (R, c) insert selectors (ignored on read rows),
+    ``nb`` (R,) live lane counts (update rows only — reads answer every
+    lane and the host masks by count).  ``e_bound`` is one conservative
+    static compaction bound covering every read row in the pass.
+    Returns ``(state, oks (R, c))`` — update rows stack their ok masks,
+    read rows their connectivity answers, into the per-round slots."""
+
+    def body(st, rnd):
+        tag, ruv, rfl, rnb = rnd
+
+        def upd(s):
+            return _update_impl(s, ruv, rfl, rnb)
+
+        def rd(s):
+            return _read_impl(s, ruv, n=n, e_bound=e_bound,
+                              n_shards=n_shards, use_pallas=use_pallas)
+
+        st, ok = jax.lax.cond(tag == MEGA_READ, rd, upd, st)
+        return st, ok
+
+    state, oks = jax.lax.scan(body, state, (tags, buv, flags, nb))
+    return state, oks
+
+
+mixed_rounds_pass = jax.jit(_mixed_rounds_impl, static_argnames=_READ_STATIC,
+                            donate_argnums=(0,))
+mixed_rounds_pass_undonated = jax.jit(_mixed_rounds_impl,
+                                      static_argnames=_READ_STATIC)
+
 
 @jax.jit
 def _connected_pairs(labels: jax.Array, uv: jax.Array) -> jax.Array:
@@ -317,6 +358,66 @@ class AsyncUpdateResult:
         return self._out
 
 
+class _GraphMegaFetch:
+    """One shared blocking fetch for every handle of one megapass.
+
+    The dispatch leaves the stacked (R, c_max) per-round outputs on
+    device; the FIRST handle resolved — update or read, in any order —
+    triggers the single ``_host_fetch`` (which also drains any older
+    outstanding ``update_batch_async`` handles, preserving the one-fetch
+    contract), then resolves every megapass update round's inner handle
+    in dispatch order so the mirrors re-tighten exactly once."""
+
+    def __init__(self, owner: "DeviceGraph", oks: jax.Array):
+        self._owner: Optional["DeviceGraph"] = owner
+        self._oks = oks
+        self._upd: List[Tuple[AsyncUpdateResult, int, int]] = []
+        self._rows: Optional[np.ndarray] = None
+
+    def rows(self) -> np.ndarray:
+        if self._rows is None:
+            got = self._owner._resolve_through(None, extra=self._oks)
+            rows = np.asarray(got)
+            for inner, lo, hi in self._upd:
+                if inner._out is None:
+                    inner._resolve([rows[lo:hi]])
+            self._rows = rows
+            self._owner = self._oks = None
+            self._upd = []
+        return self._rows
+
+
+class _MegaUpdateHandle:
+    """Megapass update-round handle: resolves through the shared fetch
+    (the inner ``AsyncUpdateResult`` is NOT in ``_unresolved`` — its
+    mask rows live in the megapass output stack, not a separate device
+    array)."""
+
+    def __init__(self, shared: _GraphMegaFetch, inner: AsyncUpdateResult):
+        self._shared, self._inner = shared, inner
+
+    def result(self) -> List[bool]:
+        if self._inner._out is None:
+            self._shared.rows()
+        return self._inner._out
+
+
+class _GraphReadRound:
+    """Megapass read-round handle: one bool per query pair, masked out
+    of the round's (c_max,) output rows by per-row live counts."""
+
+    def __init__(self, shared: _GraphMegaFetch, row_lo: int,
+                 counts: List[int]):
+        self._shared, self._row_lo, self._counts = shared, row_lo, counts
+
+    def result(self) -> List[bool]:
+        rows = self._shared.rows()
+        out: List[bool] = []
+        for r, nc in enumerate(self._counts):
+            out.extend(bool(x) for x in rows[self._row_lo + r, :nc])
+        return out
+
+
 # ---------------------------------------------------------------------------
 # Host-facing wrapper
 # ---------------------------------------------------------------------------
@@ -349,6 +450,7 @@ class DeviceGraph(substrate.BatchedStructure):
 
     structure = "graph"
     read_only: Set[str] = {"connected"}
+    supports_megapass = True
 
     def __init__(self, n_vertices: int, *, edge_capacity: int = 4096,
                  c_max: int = 64, n_shards: int = 1,
@@ -615,6 +717,159 @@ class DeviceGraph(substrate.BatchedStructure):
         assert all(m == "connected" for m in methods)
         return self.connected_batch(inputs)
 
+    # -- megapass (DESIGN.md §17) --------------------------------------------
+    def mixed_rounds(self, rounds):
+        """R heterogeneous update/read rounds as ONE donated scan program.
+
+        Each update round gets the same elimination pre-pass as
+        ``update_batch_async`` (one lane per distinct edge class, host
+        chain rule for the rest); each round's lanes pack into ≤ c_max
+        rows of the tagged (R, 2, c_max) row stack, pow2-padded with
+        no-op UPDATE rows (nb=0 — a pad READ row would dispatch refresh
+        machinery and bump the rebuild counter).  The capacity guard
+        covers the WHOLE megapass conservatively (live bound + every
+        round's distinct-edge inserts) before anything dispatches, and
+        one static ``e_bound`` ≥ that bound serves every read row.  NO
+        blocking transfer at dispatch: all handles share one fetch
+        (:class:`_GraphMegaFetch`)."""
+        rounds = [(kind, list(methods), list(inputs))
+                  for kind, methods, inputs in rounds]
+        c = self.c_max
+        row_tags: List[int] = []
+        row_buv: List[np.ndarray] = []
+        row_flags: List[np.ndarray] = []
+        row_nb: List[int] = []
+        plans: List[Tuple] = []
+        total_lane_ins = 0
+        for kind, methods, inputs in rounds:
+            if kind == "update":
+                for m in methods:
+                    if m not in ("insert", "delete"):
+                        raise ValueError(f"unknown update method {m!r}")
+                arr = self._edge_array(inputs)
+                n_ops = arr.shape[1]
+                by_edge: Dict[Tuple[int, int],
+                              List[Tuple[int, bool]]] = {}
+                for i in range(n_ops):
+                    u, v = int(arr[0, i]), int(arr[1, i])
+                    if u == v:
+                        continue
+                    by_edge.setdefault((min(u, v), max(u, v)), []).append(
+                        (i, methods[i] == "insert"))
+                classes = list(by_edge.values())
+                d = len(classes)
+                self.eliminated_ops += n_ops - d
+                if d == 0:                    # empty / all self-loops
+                    handle = AsyncUpdateResult(self, [], n_ops, [], [], c)
+                    handle._resolve([])
+                    plans.append(("done", handle))
+                    continue
+                lane_ins = sum(ops[-1][1] for ops in classes)
+                total_lane_ins += lane_ins
+                row_lo = len(row_tags)
+                lane_counts: List[int] = []
+                for r in range(-(-d // c)):
+                    chunk = classes[r * c : (r + 1) * c]
+                    buv_r = np.zeros((2, c), np.int32)
+                    sel_r = np.zeros((c,), bool)
+                    for j, ops in enumerate(chunk):
+                        buv_r[:, j] = arr[:, ops[-1][0]]
+                        sel_r[j] = ops[-1][1]
+                    row_tags.append(MEGA_UPDATE)
+                    row_buv.append(buv_r)
+                    row_flags.append(sel_r)
+                    row_nb.append(len(chunk))
+                    lane_counts.append(len(chunk))
+                inner = AsyncUpdateResult(self, [], n_ops, classes,
+                                          lane_counts, c)
+                plans.append(("update", row_lo, len(row_tags), inner))
+            elif kind == "read":
+                if any(m != "connected" for m in methods):
+                    raise ValueError("graph read rounds take 'connected'")
+                arr = self._edge_array(inputs)
+                npairs = arr.shape[1]
+                if npairs == 0:
+                    plans.append(("done", substrate._DoneReads([])))
+                    continue
+                row_lo = len(row_tags)
+                counts: List[int] = []
+                for r in range(-(-npairs // c)):
+                    chunk = arr[:, r * c : (r + 1) * c]
+                    uv = np.zeros((2, c), np.int32)
+                    uv[:, :chunk.shape[1]] = chunk
+                    row_tags.append(MEGA_READ)
+                    row_buv.append(uv)
+                    row_flags.append(np.zeros((c,), bool))
+                    row_nb.append(chunk.shape[1])
+                    counts.append(chunk.shape[1])
+                plans.append(("read", row_lo, counts))
+            else:
+                raise ValueError(f"unknown round kind {kind!r} "
+                                 f"(want 'update' or 'read')")
+        # whole-megapass capacity guard, BEFORE any dispatch (atomic
+        # refusal: conservative — deletes inside the pass could free
+        # slots, but the refusal contract trades that for exactness)
+        if self._live_bound() + total_lane_ins > self.capacity:
+            raise ValueError(
+                f"edge capacity {self.capacity} exceeded: "
+                f"≤{self._live_bound()} live edges "
+                f"+ {total_lane_ins} distinct-edge inserts (megapass)")
+        if not row_tags:                      # nothing dispatches
+            return [p[1] for p in plans]
+        # staleness after the pass, from LIVE rows (pads are no-ops):
+        # an update row after the last read row leaves labels stale
+        has_read = MEGA_READ in row_tags
+        last_read = max((i for i, t in enumerate(row_tags)
+                         if t == MEGA_READ), default=-1)
+        upd_after = any(t == MEGA_UPDATE
+                        for t in row_tags[last_read + 1:])
+        # pow2-pad the row count with no-op UPDATE rows
+        target = 1 << (len(row_tags) - 1).bit_length()
+        while len(row_tags) < target:
+            row_tags.append(MEGA_UPDATE)
+            row_buv.append(np.zeros((2, c), np.int32))
+            row_flags.append(np.zeros((c,), bool))
+            row_nb.append(0)
+
+        def commit():
+            self._outstanding_ins += total_lane_ins
+            self._maybe_stale = (upd_after if has_read
+                                 else self._maybe_stale or upd_after)
+            # one conservative static compaction bound for every read
+            # row, through the same pow2 hysteresis as _rebuild_bound
+            lb = max(1, self._live_bound())
+            if lb > self._e_bound or 4 * lb <= self._e_bound:
+                self._e_bound = _pow2(lb)
+            fn = (mixed_rounds_pass if self.donate
+                  else mixed_rounds_pass_undonated)
+            self.state, oks = fn(
+                self.state, jnp.asarray(row_tags, jnp.int32),
+                jnp.asarray(np.stack(row_buv)),
+                jnp.asarray(np.stack(row_flags)),
+                jnp.asarray(row_nb, jnp.int32),
+                n=self.n, e_bound=self._e_bound,
+                n_shards=self.n_shards, use_pallas=self.use_pallas)
+            return oks
+
+        if self._guard is None:
+            oks = commit()
+        else:
+            oks = self._guard.run(commit, self._snapshot, self._restore,
+                                  site="graph.mixed_rounds")
+        shared = _GraphMegaFetch(self, oks)
+        handles: List[Any] = []
+        for plan in plans:
+            if plan[0] == "done":
+                handles.append(plan[1])
+            elif plan[0] == "update":
+                _, lo, hi, inner = plan
+                shared._upd.append((inner, lo, hi))
+                handles.append(_MegaUpdateHandle(shared, inner))
+            else:
+                _, lo, counts = plan
+                handles.append(_GraphReadRound(shared, lo, counts))
+        return handles
+
     # -- debug / test helpers -------------------------------------------------
     def full_rebuilds(self) -> int:
         """Device-side full-rebuild counter (the union-find fast-path
@@ -707,6 +962,7 @@ substrate.register(substrate.StructureSpec(
     dump_compare=_dump_compare,
     compact=_read_opt._compact_graph,
     refusal_batch=_refusal_batch,
+    megapass=True,
     bench="benchmarks.bench_graph",
     bench_smoke=("--vertices", "300", "--reads", "50", "100",
                  "--threads", "1", "4", "--ops", "60"),

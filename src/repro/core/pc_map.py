@@ -24,8 +24,31 @@ from .seq_map import SequentialSortedMap
 
 
 def pc_map(m: ShardedMap, **kw) -> ParallelCombiner:
-    """§3.3 batched-read combining over a device-resident map."""
+    """§3.3 batched-read combining over a device-resident map.
+
+    ``use_megapass=True`` (DESIGN.md §17) fuses each pass's update and
+    read rounds into ONE ``mixed_rounds`` dispatch instead of the
+    alternating update-dispatch/read-dispatch pair."""
     return batched_read_optimized(m, **kw)
+
+
+def pc_megapass_map(capacity: int, c_max: int, n_shards: int = 4,
+                    key_range: Optional[Tuple[float, float]] = None,
+                    items=None, use_pallas: bool = False,
+                    donate: bool = True, rounds_cap: int = 8,
+                    use_megapass: bool = True):
+    """Async megapass map engine (DESIGN.md §17): a
+    :class:`~repro.core.read_opt.MegapassCombiner` command queue over
+    the K-sharded map — up to ``rounds_cap`` alternating update/read
+    combining rounds per fused dispatch.  ``use_megapass=False`` is the
+    alternating-dispatch ablation twin."""
+    from .read_opt import MegapassCombiner
+
+    return MegapassCombiner(
+        ShardedMap(capacity, c_max=c_max, n_shards=n_shards,
+                   key_range=key_range, items=items, use_pallas=use_pallas,
+                   donate=donate),
+        rounds_cap=rounds_cap, use_megapass=use_megapass)
 
 
 def pc_sharded_map(capacity: int, c_max: int, n_shards: int = 4,
@@ -40,6 +63,7 @@ def pc_sharded_map(capacity: int, c_max: int, n_shards: int = 4,
     the copy-per-pass ablation).  ``fault_plan``/``guard`` thread the
     DESIGN.md §15 fault-tolerance layer through both the map
     (transactional dispatch) and the combining engine (lease takeover).
+    ``use_megapass`` rides through to :func:`pc_map` (DESIGN.md §17).
     """
     if fault_plan is not None:
         kw.setdefault("fault_plan", fault_plan)

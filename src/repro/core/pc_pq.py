@@ -521,6 +521,28 @@ def pc_sharded_priority_queue(capacity: int, c_max: int,
                          guard=guard), **kw)
 
 
+def pc_megapass_priority_queue(capacity: int, c_max: int,
+                               n_shards: int = 4, values=None,
+                               use_pallas: bool = False,
+                               donate: bool = True, rounds_cap: int = 8,
+                               use_megapass: bool = True):
+    """Async megapass PQ engine (DESIGN.md §17): a
+    :class:`~repro.core.read_opt.MegapassCombiner` command queue over the
+    K-sharded heap — insert/extract_min update rounds interleaved with
+    peek_min read rounds, up to ``rounds_cap`` rounds per fused
+    ``mixed_rounds`` dispatch.  ``use_megapass=False`` is the
+    alternating-dispatch ablation twin.  Unlike :class:`AsyncRoundsPQ`
+    this engine carries READ rounds in the same program, at the price of
+    skipping the host-side elimination pre-pass."""
+    from .read_opt import MegapassCombiner
+
+    return MegapassCombiner(
+        ShardedBatchedPQ(capacity, c_max=c_max, n_shards=n_shards,
+                         values=values, use_pallas=use_pallas,
+                         donate=donate),
+        rounds_cap=rounds_cap, use_megapass=use_megapass)
+
+
 def fc_priority_queue(**kw) -> ParallelCombiner:
     """Flat-combining binary heap (the paper's FC Binary baseline)."""
     from .flat_combining import flat_combining

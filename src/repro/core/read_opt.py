@@ -82,8 +82,21 @@ class BatchedReadDS(Protocol):
         ...
 
 
-def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
-    """TPU-native §3.3: the read batch is one vectorized device call."""
+def batched_read_optimized(ds: BatchedReadDS, *, use_megapass: bool = False,
+                           **kw) -> ParallelCombiner:
+    """TPU-native §3.3: the read batch is one vectorized device call.
+
+    ``use_megapass`` (DESIGN.md §17): when the structure exposes
+    ``mixed_rounds``, an epoch's updates AND reads lower onto ONE fused
+    dispatch — an update round followed by a read round in the same
+    donated scan program — instead of the alternating update-dispatch /
+    read-dispatch pair.  The epoch boundary is preserved exactly: the
+    read round is a later scan step than the update round, so a read
+    collected in epoch E observes ALL of epoch E's updates, including
+    the ones whose result masks are still on device (they resolve
+    through the megapass's shared fetch)."""
+
+    use_mp = bool(use_megapass) and hasattr(ds, "mixed_rounds")
 
     def is_update(method: str) -> bool:
         return method not in ds.read_only
@@ -105,6 +118,24 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
             pin(len(updates), len(reads))
         handle = None
         try:
+            if use_mp and updates and hasattr(ds, "update_batch_async"):
+                # megapass epoch (DESIGN.md §17): update round + read
+                # round in ONE dispatch; every handle shares one fetch
+                rounds = [("update", [r.method for r in updates],
+                           [r.input for r in updates])]
+                if reads:
+                    rounds.append(("read", [r.method for r in reads],
+                                   [r.input for r in reads]))
+                hs = ds.mixed_rounds(rounds)
+                engine.megapass_dispatches += 1
+                engine.megapass_rounds += len(rounds)
+                handle = hs[0]
+                if reads:
+                    for r, res in zip(reads, hs[1].result()):
+                        r.res = res
+                        r.status = Status.FINISHED
+                resolve_handle(handle, updates)
+                return
             if updates and hasattr(ds, "update_batch_async"):
                 # device-resident tier (DESIGN.md §11): the whole update
                 # list is dispatched as fused combining passes (arrival
@@ -153,6 +184,142 @@ def batched_read_optimized(ds: BatchedReadDS, **kw) -> ParallelCombiner:
 
 # canonical name for the TPU-native tier (see module docstring)
 BatchedReadOptimized = batched_read_optimized
+
+
+class MegapassCombiner:
+    """Async megapass combining engine (DESIGN.md §17) — the mixed
+    update+read counterpart of ``pc_pq.AsyncRoundsPQ``'s command queue.
+
+    Clients publish ops non-blockingly (:meth:`submit` returns a
+    ``concurrent.futures`` future; :meth:`execute` blocks on it).  A
+    dedicated combiner thread drains the backlog into alternating
+    same-kind runs (split on ``ds.read_only``), packs each run into
+    rounds of ≤ c_max ops, and lowers up to ``rounds_cap`` rounds onto
+    ONE fused ``mixed_rounds`` dispatch — R adaptive from the backlog;
+    the leftover stays queued for the next drain.  Linearization: ops in
+    one round are concurrent (their combining round), rounds are
+    sequential — and a read round observes every earlier round's
+    updates, because it IS a later step of the same scan program.
+
+    ``use_megapass=False`` is the alternating-dispatch ablation twin:
+    the same drain loop, but every round goes out as its own device
+    program (the base-class ``mixed_rounds`` fallback), so the pair
+    isolates exactly the dispatch-fusion effect the §Megapass ablation
+    measures.
+
+    Instrumentation matches the sync engines: ``megapass_dispatches``
+    (device programs), ``megapass_rounds`` (combining rounds executed),
+    ``rounds_per_dispatch`` (their ratio — the amortization factor).
+    """
+
+    def __init__(self, ds, *, rounds_cap: int = 8,
+                 use_megapass: bool = True):
+        import threading
+        from collections import deque
+
+        self.ds = ds
+        self.rounds_cap = max(1, int(rounds_cap))
+        self.use_megapass = bool(use_megapass)
+        self._ops = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self.megapass_dispatches = 0
+        self.megapass_rounds = 0
+        self._thread = threading.Thread(target=self._loop,
+                                        name="pc-megapass", daemon=True)
+        self._thread.start()
+
+    @property
+    def rounds_per_dispatch(self) -> float:
+        return (self.megapass_rounds / self.megapass_dispatches
+                if self.megapass_dispatches else 0.0)
+
+    # -- client side --------------------------------------------------------
+    def submit(self, method: str, input: Any = None):
+        """Publish one op; returns a future for its answer."""
+        from concurrent.futures import Future
+
+        f: "Future" = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("combiner is closed")
+            self._ops.append((method, input, f))
+            self._cond.notify()
+        return f
+
+    def execute(self, method: str, input: Any = None) -> Any:
+        """Blocking :meth:`submit` (the sync-engine ``apply`` twin)."""
+        return self.submit(method, input).result()
+
+    def close(self) -> None:
+        """Drain every published op, then stop the combiner thread."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "MegapassCombiner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- combiner side ------------------------------------------------------
+    def _collect(self):
+        """Pack the backlog head into ≤ rounds_cap alternating same-kind
+        rounds of ≤ c_max ops each (called under the condition lock)."""
+        c_max = int(getattr(self.ds, "c_max", 64))
+        rounds: List[Tuple[str, List[str], List[Any]]] = []
+        futs: List[List[Any]] = []
+        while self._ops:
+            m, i, f = self._ops[0]
+            kind = "read" if m in self.ds.read_only else "update"
+            if rounds and rounds[-1][0] == kind \
+                    and len(rounds[-1][1]) < c_max:
+                self._ops.popleft()
+                rounds[-1][1].append(m)
+                rounds[-1][2].append(i)
+                futs[-1].append(f)
+            elif len(rounds) < self.rounds_cap:
+                self._ops.popleft()
+                rounds.append((kind, [m], [i]))
+                futs.append([f])
+            else:
+                break                  # budget spent: leftover stays queued
+        return rounds, futs
+
+    def _dispatch(self, rounds, futs) -> None:
+        if self.use_megapass:
+            handles = self.ds.mixed_rounds(rounds)
+            self.megapass_dispatches += 1
+        else:
+            # alternating ablation twin: one device program per round
+            handles = substrate.BatchedStructure.mixed_rounds(
+                self.ds, rounds)
+            self.megapass_dispatches += len(rounds)
+        self.megapass_rounds += len(rounds)
+        for h, fs in zip(handles, futs):
+            for f, v in zip(fs, h.result()):
+                if not f.done():
+                    f.set_result(v)
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._closed and not self._ops:
+                    self._cond.wait()
+                if self._closed and not self._ops:
+                    return
+                rounds, futs = self._collect()
+            try:
+                self._dispatch(rounds, futs)
+            except BaseException as exc:
+                for fs in futs:
+                    for f in fs:
+                        if not f.done():
+                            f.set_exception(exc)
 
 
 # ---------------------------------------------------------------------------

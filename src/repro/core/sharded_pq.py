@@ -315,6 +315,80 @@ sharded_apply_rounds_undonated = jax.jit(_sharded_rounds_impl,
 
 
 # ---------------------------------------------------------------------------
+# Fused mixed update+read megapass (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+MEGA_UPDATE, MEGA_READ = 0, 1
+
+
+def _peek_min_impl(state: ShardedHeapState, n_extract: jax.Array,
+                   *, c_max: int, n_shards: int,
+                   use_pallas: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Read-only twin of :func:`_sharded_apply_batch` steps 1–2: the
+    per-shard frontier candidates and the global merge, WITHOUT the
+    extraction phases — so a ``peek_min`` round can ride the mixed scan
+    with zero state mutation.  Returns ``(merged (c_max,) ascending
+    +inf-padded, k_eff)``: the ``n_extract`` globally smallest keys."""
+    a, size = state
+    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
+    if use_pallas:
+        from repro.kernels.heap_kmin import k_smallest_sharded as _kmin_k
+        _ids, cand_vals = _kmin_k(a, size, n_extract, c_max=c_max)
+    else:
+        _ids, cand_vals = jax.vmap(
+            lambda ak, sk: _k_smallest(ak, sk, n_extract, c_max)
+        )(a, size)                                       # (K, c_max)
+    flat = jnp.sort(cand_vals.reshape(-1))[:c_max]
+    merged = jnp.where(jnp.arange(c_max) < n_extract, flat, INF)
+    k_eff = jnp.minimum(n_extract, jnp.sum(size))
+    return merged, k_eff
+
+
+def _sharded_mixed_impl(
+    state: ShardedHeapState, tags: jax.Array, n_extracts: jax.Array,
+    insert_rows: jax.Array, n_inserts: jax.Array,
+    *, c_max: int, n_shards: int,
+    key_range: Optional[Tuple[float, float]] = None,
+    use_pallas: bool = False,
+) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
+    """R heterogeneous combining rounds as ONE donated scan program.
+
+    ``tags`` (R,) int32 selects per row between the full combined batch
+    (``MEGA_UPDATE``: the :func:`_sharded_apply_batch` trace) and the
+    read-only frontier merge (``MEGA_READ``: :func:`_peek_min_impl`,
+    ``n_extracts`` doubling as the peek width) inside a ``lax.cond`` —
+    interleaved update and peek rounds cost one dispatch instead of one
+    each.  Returns ``(state, outs (R, c_max), k_effs (R,))``."""
+
+    def body(st, rnd):
+        tag, ne, vals, ni = rnd
+
+        def upd(s):
+            s2, out, k_eff = _sharded_apply_batch(
+                s, ne, vals, ni, c_max=c_max, n_shards=n_shards,
+                key_range=key_range, use_pallas=use_pallas)
+            return s2, (out, k_eff)
+
+        def rd(s):
+            out, k_eff = _peek_min_impl(s, ne, c_max=c_max,
+                                        n_shards=n_shards,
+                                        use_pallas=use_pallas)
+            return s, (out, k_eff)
+
+        st, out = jax.lax.cond(tag == MEGA_READ, rd, upd, st)
+        return st, out
+
+    state, (outs, k_effs) = jax.lax.scan(
+        body, state, (tags, n_extracts, insert_rows, n_inserts))
+    return state, outs, k_effs
+
+
+sharded_mixed_rounds = jax.jit(_sharded_mixed_impl, static_argnames=_STATIC,
+                               donate_argnums=(0,))
+sharded_mixed_rounds_undonated = jax.jit(_sharded_mixed_impl,
+                                         static_argnames=_STATIC)
+
+
+# ---------------------------------------------------------------------------
 # Host-facing wrapper (same interface as BatchedPriorityQueue)
 # ---------------------------------------------------------------------------
 class _PQBatchHandle:
@@ -339,6 +413,25 @@ class _PQBatchHandle:
             else:
                 out.append(None)
         return out
+
+
+class _PQPeekRound:
+    """Handle for one ``peek_min`` read round of a megapass: every op in
+    the round observes the same linearization point, so each answers THE
+    global minimum at that point (None when empty).  Resolution shares
+    the dispatch's one :class:`_RoundsFetch` transfer."""
+
+    def __init__(self, shared: Optional[_RoundsFetch], row_id: int,
+                 n_ops: int):
+        self._shared = shared
+        self._row = row_id
+        self._n = n_ops
+
+    def result(self) -> List[Any]:
+        if not self._n:
+            return []
+        v = float(self._shared.rows()[self._row][0])
+        return [v if np.isfinite(v) else None] * self._n
 
 
 class ShardedBatchedPQ(substrate.BatchedStructure):
@@ -377,7 +470,8 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
     """
 
     structure = "pq"
-    read_only: Set[str] = {"values"}
+    read_only: Set[str] = {"values", "peek_min"}
+    supports_megapass = True
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 4,
                  values=None, key_range: Optional[Tuple[float, float]] = None,
@@ -567,6 +661,113 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
         """Blocking :meth:`apply_rounds_async`: per-round answer lists."""
         return [h.result() for h in self.apply_rounds_async(rounds)]
 
+    # -- fused mixed update+read megapass (DESIGN.md §17) --------------------
+    def mixed_rounds(self, rounds):
+        """R heterogeneous update/``peek_min`` rounds as ONE donated scan
+        program.  Update rounds lower onto :func:`expand_rounds` rows
+        (tag ``MEGA_UPDATE``), each ``peek_min`` round becomes one
+        read-only frontier-merge row (tag ``MEGA_READ``), and every
+        returned handle shares the dispatch's one blocking fetch.  Read
+        rounds containing ``values`` fall back to the base per-round
+        dispatch — a whole-heap dump cannot ride a (R, c_max) result
+        slot."""
+        rounds = [(k, list(m), list(i)) for k, m, i in rounds]
+        for kind, methods, _ in rounds:
+            if kind not in ("update", "read"):
+                raise ValueError(f"unknown round kind {kind!r} "
+                                 f"(want 'update' or 'read')")
+            if kind == "read" and any(m != "peek_min" for m in methods):
+                return substrate.BatchedStructure.mixed_rounds(self, rounds)
+
+        specs: List[Tuple[int, int, np.ndarray, int]] = []
+        plans: List[Tuple] = []
+        pad_buf = np.full((self.c_max,), np.inf, np.float32)
+        for kind, methods, inputs in rounds:
+            if kind == "update":
+                ne = 0
+                ins: List[float] = []
+                for m, i in zip(methods, inputs):
+                    if m == "insert":
+                        ins.append(float(i))
+                    elif m == "extract_min":
+                        ne += 1
+                    else:
+                        raise ValueError(f"unknown update method {m!r}")
+                sub, layout = expand_rounds([(ne, ins)], self.c_max)
+                # strip expand_rounds' per-call pow2 padding (trailing
+                # no-op rows) — the megapass pads the GLOBAL row count
+                while sub and sub[-1][0] == 0 and sub[-1][2] == 0:
+                    sub.pop()
+                row_lo = len(specs)
+                (slice_ne, row_ids), = layout
+                specs.extend((MEGA_UPDATE, ne_r, buf, ni)
+                             for ne_r, buf, ni in sub)
+                plans.append(("update", slice_ne,
+                              [row_lo + r for r in row_ids], methods))
+            else:
+                if methods:
+                    plans.append(("read", len(specs), len(methods)))
+                    specs.append((MEGA_READ, 1, pad_buf, 0))
+                else:
+                    plans.append(("read", None, 0))
+        if not specs:
+            return [self._empty_round_handle(p) for p in plans]
+        # pow2-pad the global row count with no-op PEEK rows (ne=0 reads
+        # are pure — padding can never perturb the serial schedule)
+        target = 1 << (len(specs) - 1).bit_length()
+        while len(specs) < target:
+            specs.append((MEGA_READ, 0, pad_buf, 0))
+
+        def commit():
+            # guard every update row before dispatching anything (atomic
+            # refusal); peek rows never touch the occupancy mirror
+            for tag, ne, buf, ni in specs:
+                if tag == MEGA_UPDATE:
+                    self._guard_and_account(ne, buf, ni)
+            tags = jnp.asarray(np.array([s[0] for s in specs], np.int32))
+            ne_arr = jnp.asarray(np.array([s[1] for s in specs], np.int32))
+            bufs = jnp.asarray(np.stack([s[2] for s in specs]))
+            ni_arr = jnp.asarray(np.array([s[3] for s in specs], np.int32))
+            fn = sharded_mixed_rounds if self.donate \
+                else sharded_mixed_rounds_undonated
+            self.state, outs, _k = fn(
+                self.state, tags, ne_arr, bufs, ni_arr, c_max=self.c_max,
+                n_shards=self.n_shards, key_range=self.key_range,
+                use_pallas=self.use_pallas)
+            return outs
+
+        if self._guard is not None:
+            outs = self._guard.run(commit, self._snapshot, self._restore,
+                                   site="pq.mixed_rounds")
+        else:
+            saved = (self._sizes_ub.copy(), self._total)
+            try:
+                outs = commit()
+            except ValueError:
+                self._sizes_ub, self._total = saved
+                raise
+        shared = _RoundsFetch(outs, extra=lambda: self.state.size + 0,
+                              on_fetch=self._refresh_sizes)
+        handles: List[Any] = []
+        for plan in plans:
+            if plan[0] == "update":
+                _, slice_ne, row_ids, methods = plan
+                rr = RoundResult(slice_ne, row_ids,
+                                 shared if row_ids else None)
+                handles.append(_PQBatchHandle(rr, methods))
+            else:
+                _, row, n_ops = plan
+                handles.append(_PQPeekRound(shared if n_ops else None,
+                                            row if row is not None else 0,
+                                            n_ops))
+        return handles
+
+    @staticmethod
+    def _empty_round_handle(plan):
+        if plan[0] == "update":
+            return _PQBatchHandle(None, plan[3])
+        return _PQPeekRound(None, 0, 0)
+
     def values(self) -> list:
         a = np.asarray(self.state.a)
         sizes = np.asarray(self.state.size)
@@ -599,11 +800,11 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
 
     def read_batch(self, methods: Sequence[str],
                    inputs: Sequence[Any]) -> List[Any]:
-        """Answer ``values`` reads with ONE blocking fetch (late-bound
-        through ``batched_pq._host_fetch`` so sync-counting tests see
-        it), which also re-tightens the occupancy mirror."""
+        """Answer ``values`` / ``peek_min`` reads with ONE blocking fetch
+        (late-bound through ``batched_pq._host_fetch`` so sync-counting
+        tests see it), which also re-tightens the occupancy mirror."""
         for m in methods:
-            if m != "values":
+            if m not in ("values", "peek_min"):
                 raise ValueError(f"unknown read method {m!r}")
         if not methods:
             return []
@@ -616,7 +817,8 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
         for k in range(self.n_shards):
             vals.extend(a[k, 1 : int(sizes[k]) + 1].tolist())
         vals.sort()
-        return [list(vals) for _ in methods]
+        return [list(vals) if m == "values"
+                else (vals[0] if vals else None) for m in methods]
 
     def apply_op(self, method: str, input: Any = None) -> Any:
         """Generic single-op entry (the protocol's ``apply`` under a
@@ -639,7 +841,7 @@ class SequentialBatchedPQ:
     with per-slice None padding past the live size; inserts return None.
     ``c_max=None`` means one unbounded slice (the pre-batch rule)."""
 
-    read_only: Set[str] = {"values"}
+    read_only: Set[str] = {"values", "peek_min"}
 
     def __init__(self, values=None, c_max: Optional[int] = None):
         self._v: List[float] = sorted(
@@ -683,12 +885,13 @@ class SequentialBatchedPQ:
     def read_batch(self, methods: Sequence[str],
                    inputs: Sequence[Any]) -> List[Any]:
         for m in methods:
-            if m != "values":
+            if m not in ("values", "peek_min"):
                 raise ValueError(f"unknown read method {m!r}")
-        return [list(self._v) for _ in methods]
+        return [list(self._v) if m == "values"
+                else (self._v[0] if self._v else None) for m in methods]
 
     def apply(self, method: str, input: Any = None) -> Any:
-        if method == "values":
+        if method in self.read_only:
             return self.read_batch([method], [input])[0]
         return self.update_batch([method], [input])[0]
 
@@ -769,8 +972,13 @@ substrate.register(substrate.StructureSpec(
     # the PQ's documented contract is one fetch per CONSUMED apply
     # (AsyncBatchResult), not read-resolves-updates
     reads_resolve_updates=False,
+    megapass=True,
     bench="benchmarks.bench_pq",
     bench_smoke=("--size", "20000", "--threads", "1", "2", "4",
                  "--ops", "150"),
-    extras={"serve_kw": dict(capacity=4096, c_max=16, n_shards=4)},
+    extras={"serve_kw": dict(capacity=4096, c_max=16, n_shards=4),
+            # reads the megapass conformance stage drives: peek_min can
+            # ride the fused scan ("values" dumps the whole heap stack)
+            "megapass_read": lambda rng, k, ctx: (["peek_min"] * k,
+                                                  [None] * k)},
 ))

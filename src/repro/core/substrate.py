@@ -58,6 +58,10 @@ class BatchedStructure:
 
     structure: str = ""                       # registry name
     read_only: Set[str] = frozenset()
+    # True on structures whose mixed_rounds() fuses the whole round list
+    # into ONE donated scan program (DESIGN.md §17); the base fallback
+    # below dispatches one program per round instead.
+    supports_megapass: bool = False
 
     # -- required ------------------------------------------------------------
     def update_batch_async(self, methods: Sequence[str],
@@ -103,6 +107,48 @@ class BatchedStructure:
     @classmethod
     def is_read(cls, method: str) -> bool:
         return method in cls.read_only
+
+    def mixed_rounds(self, rounds: Sequence[Tuple[str, Sequence[str],
+                                                  Sequence[Any]]]):
+        """Dispatch R heterogeneous combining rounds (DESIGN.md §17).
+
+        ``rounds`` is a list of ``(kind, methods, inputs)`` triples with
+        ``kind in {"update", "read"}``.  Returns one handle per round,
+        in round order; ``handle.result()`` yields the per-op results of
+        that round (same shapes ``update_batch`` / ``read_batch`` would
+        return).  Round r+1 observes ALL of round r's effects — the
+        rounds are a serial schedule, only the *dispatch* is fused.
+
+        This base implementation is the alternating-dispatch fallback:
+        one device program per round (an ``update_batch_async`` or an
+        eager ``read_batch``), so every structure supports the API.
+        Fused structures set ``supports_megapass = True`` and override
+        with a tagged-scan lowering: ONE donated program for the whole
+        round list and one shared blocking fetch for every handle.
+        """
+        handles = []
+        for kind, methods, inputs in rounds:
+            if kind == "update":
+                handles.append(self.update_batch_async(list(methods),
+                                                       list(inputs)))
+            elif kind == "read":
+                handles.append(_DoneReads(self.read_batch(list(methods),
+                                                          list(inputs))))
+            else:
+                raise ValueError(f"unknown round kind {kind!r} "
+                                 f"(want 'update' or 'read')")
+        return handles
+
+
+class _DoneReads:
+    """Handle wrapper for an already-answered read round, so the base
+    ``mixed_rounds`` fallback returns a uniform handle-per-round list."""
+
+    def __init__(self, results: List[Any]):
+        self._results = results
+
+    def result(self) -> List[Any]:
+        return self._results
 
 
 def conforms(obj: Any) -> bool:
@@ -155,6 +201,10 @@ class StructureSpec:
     # (map/graph/sketch/union-find); the PQ's documented contract is one
     # fetch per consumed apply instead
     reads_resolve_updates: bool = True
+    # True when mixed_rounds() fuses the round list into one donated
+    # scan program (DESIGN.md §17); the conformance kit then also
+    # asserts the one-fetch + donation-aliasing contract on it
+    megapass: bool = False
     # serving + bench enrollment
     serve: bool = True                        # expose as a serve.py workload
     bench: Optional[str] = None               # "benchmarks.bench_<name>"

@@ -87,13 +87,20 @@ class StructureExecutor:
     result masks left on device), then ALL reads are answered with one
     vectorized read program whose single fetch also resolves the update
     handles — the §3.3 read-optimized transform with the scheduler's
-    combiner loop playing the combiner.
+    combiner loop playing the combiner.  ``megapass=True``
+    (DESIGN.md §17) fuses the two into ONE ``mixed_rounds`` dispatch —
+    an update round followed by a read round in the same donated scan
+    program, all handles sharing one fetch.
     """
 
-    def __init__(self, spec: substrate.StructureSpec, **make_kw):
+    def __init__(self, spec: substrate.StructureSpec, *,
+                 megapass: bool = False, **make_kw):
         self.spec = spec
         self.ds = spec.make(**make_kw)
+        self.megapass = bool(megapass) and hasattr(self.ds, "mixed_rounds")
         self.device_steps = 0
+        self.megapass_dispatches = 0
+        self.megapass_rounds = 0
 
     def __call__(self, reqs: List[Dict[str, Any]]) -> List[Any]:
         methods = [r["method"] for r in reqs]
@@ -102,6 +109,22 @@ class StructureExecutor:
         upd = [i for i, m in enumerate(methods) if m not in ro]
         reads = [i for i, m in enumerate(methods) if m in ro]
         out: List[Any] = [None] * len(reqs)
+        if self.megapass and upd:
+            rounds = [("update", [methods[i] for i in upd],
+                       [inputs[i] for i in upd])]
+            if reads:
+                rounds.append(("read", [methods[i] for i in reads],
+                               [inputs[i] for i in reads]))
+            handles = self.ds.mixed_rounds(rounds)
+            self.device_steps += 1
+            self.megapass_dispatches += 1
+            self.megapass_rounds += len(rounds)
+            if reads:
+                for i, r in zip(reads, handles[1].result()):
+                    out[i] = r
+            for i, r in zip(upd, handles[0].result()):
+                out[i] = r
+            return out
         handle = None
         if upd:
             handle = self.ds.update_batch_async(
@@ -151,6 +174,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 graph_use_pallas: bool = False,
                 rounds_cap: int = 4,
                 tier: str = "eliminate",
+                megapass: bool = False,
                 fault_plan: Optional[FaultPlan] = None) -> Dict[str, Any]:
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
@@ -182,6 +206,11 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     routes each ordering pass; decisions land in the returned
     ``tier_decisions``).
 
+    ``megapass``: fuse each structure pass's update and read rounds into
+    ONE ``mixed_rounds`` dispatch (DESIGN.md §17) instead of the
+    alternating update/read dispatch pair (structure workloads only;
+    the decode workload ignores it).
+
     ``fault_plan``: optional deterministic :class:`FaultPlan`
     (DESIGN.md §15) shared between the workload structure (transactional
     guarded dispatch in the graph/map executors) and the PC scheduler
@@ -202,7 +231,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         use_pallas = scheduler == "pc-pallas" or (
             workload == "graph" and graph_use_pallas)
         ex: Any = StructureExecutor(
-            spec, use_pallas=use_pallas,
+            spec, megapass=megapass, use_pallas=use_pallas,
             donate=scheduler != "pc-nodonate", fault_plan=fault_plan,
             **serve_kw)
         reqs_tab = _structure_requests(spec, rng, sessions,
@@ -269,6 +298,10 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         if scheduler != "serial" else 1.0,
         "tier_decisions": dict(getattr(sch, "tier_decisions", {})),
     }
+    if getattr(ex, "megapass_dispatches", 0):
+        stats["megapass_dispatches"] = ex.megapass_dispatches
+        stats["rounds_per_dispatch"] = round(
+            ex.megapass_rounds / ex.megapass_dispatches, 2)
     if fault_plan is not None:
         # robustness counters (DESIGN.md §15): the plan is shared between
         # the structure's dispatch guard and the scheduler, so one
@@ -316,6 +349,9 @@ def main():
     ap.add_argument("--rounds-cap", type=int, default=4,
                     help="cap R on the scheduler's adaptive multi-round "
                          "fused PQ dispatch (DESIGN.md §12)")
+    ap.add_argument("--megapass", action="store_true",
+                    help="fuse each structure pass's update+read rounds "
+                         "into one mixed_rounds dispatch (DESIGN.md §17)")
     ap.add_argument("--tier",
                     choices=["auto", "host", "device", "eliminate"],
                     default="eliminate",
@@ -344,6 +380,7 @@ def main():
                         scheduler=args.scheduler, workload=args.workload,
                         read_pct=args.read_pct,
                         rounds_cap=args.rounds_cap, tier=args.tier,
+                        megapass=args.megapass,
                         fault_plan=build_fault_plan(args))
     print("[serve]", stats)
 

@@ -217,6 +217,7 @@ class PCScheduler:
         self.passes = 0
         self.eliminated = 0            # requests served without PQ work
         self.pq_dispatches = 0         # fused PQ programs dispatched
+        self.pq_rounds = 0             # combining rounds those carried
 
         self._handoff: "queue.Queue[Any]" = queue.Queue(maxsize=1)
         self._combiner = threading.Thread(
@@ -233,6 +234,13 @@ class PCScheduler:
                 target=self._supervisor_loop, name="pc-supervisor",
                 daemon=True)
             self._supervisor.start()
+
+    @property
+    def rounds_per_dispatch(self) -> float:
+        """Mean combining rounds per fused PQ dispatch (DESIGN.md §17
+        amortization factor; 0.0 before the first dispatch)."""
+        return (self.pq_rounds / self.pq_dispatches
+                if self.pq_dispatches else 0.0)
 
     # -- public API ----------------------------------------------------------
     def submit_async(self, inputs: Any, deadline: float = 0.0) -> Future:
@@ -556,6 +564,7 @@ class PCScheduler:
                 return [chosen[i : i + self.max_batch]
                         for i in range(0, len(chosen), self.max_batch)]
             self.pq_dispatches += 1
+            self.pq_rounds += len(rounds)
             lost = False
             for h in handles[n_ins_rounds:]:
                 for k in h.result():    # first consume pays the one fetch

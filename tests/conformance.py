@@ -26,6 +26,11 @@ kit instantiates, for any spec:
   ``lax.scan`` rounds program) must leave the same state as applying the
   same ops as a sequence of ≤ ``c_max`` single-pass batches, and both
   must match the oracle throughout.
+* :func:`check_megapass_vs_sequential` — R mixed update/read rounds
+  through ONE ``mixed_rounds`` dispatch vs the SAME rounds as separate
+  alternating dispatches, element-wise and vs the oracle; fused
+  structures also honor sync-free dispatch, one shared fetch, and
+  donation aliasing (DESIGN.md §17).
 * :func:`check_fault_exactly_once` — the differential loop under an
   injected dispatch-failure plan (DESIGN.md §15): the transactional
   guard must make every injected failure invisible — zero lost ops,
@@ -300,6 +305,91 @@ def check_rounds_equiv(spec: StructureSpec, *, seed: int = 29,
             [np.asarray(jax.device_get(x)).tolist()
              for x in jax.tree_util.tree_leaves(ds_b.state)],
             err_msg=f"{spec.name}: rounds diverged from chunked passes")
+
+
+# ---------------------------------------------------------------------------
+# Megapass ≡ sequential alternation (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+def check_megapass_vs_sequential(spec: StructureSpec, *, seed: int = 37,
+                                 n_rounds: int = 5,
+                                 make: Optional[Callable[[], Any]] = None
+                                 ) -> None:
+    """R mixed update/read rounds through ONE ``mixed_rounds`` call must
+    equal the SAME rounds applied as separate alternating dispatches
+    (the base-class fallback), element-wise, and both must match the
+    host oracle — a read round must observe every earlier round's
+    updates.  Fused structures (``spec.megapass``) additionally honor
+    the dispatch contract: zero fetches at dispatch, ONE shared fetch
+    resolving every handle, and the donated scan consuming the old
+    state buffers.  ``extras['megapass_read']`` overrides the read
+    generator for structures whose fused read set is narrower than
+    ``gen_read`` (the PQ's ``peek_min``)."""
+    from repro.core import substrate as _substrate
+
+    rng = np.random.default_rng(seed)
+    ds_m = (make or spec.make)()
+    ds_s = (make or spec.make)()
+    # oracle seeded from the SEQUENTIAL twin: fetching ds_m's state here
+    # would pin a host view of its initial buffers (jax caches the
+    # zero-copy numpy image on the Array) and silently defeat the
+    # donation the fused path is asserted to perform below
+    oracle = spec.make_host(ds_s)
+    ctx = spec.new_ctx()
+    gen_read = spec.extras.get("megapass_read", spec.gen_read)
+    c_max = int(getattr(ds_m, "c_max", 8))
+    rounds = []
+    for r in range(n_rounds):
+        k = int(rng.integers(1, 2 * c_max + 2))   # force multi-row rounds
+        if r % 2 == 0:
+            m, i = spec.gen_update(rng, k, ctx)
+            rounds.append(("update", list(m), list(i)))
+        else:
+            m, i = gen_read(rng, k, ctx)
+            rounds.append(("read", list(m), list(i)))
+    rounds.append(("update", [], []))             # empty-round edges
+    rounds.append(("read", [], []))
+
+    if spec.megapass:
+        old = jax.tree_util.tree_leaves(ds_m.state)
+        with count_fetches(spec) as c:
+            hs_m = ds_m.mixed_rounds(rounds)
+            assert c["n"] == 0, \
+                f"{spec.name}: megapass dispatch must be sync-free"
+            got = [h.result() for h in hs_m]
+            assert c["n"] == 1, (f"{spec.name}: every megapass handle "
+                                 f"must share ONE fetch, saw {c['n']}")
+        new = jax.tree_util.tree_leaves(ds_m.state)
+        assert any(o is not nn for o, nn in zip(old, new)), \
+            f"{spec.name}: the megapass never dispatched"
+        assert any(o.is_deleted() for o in old), \
+            f"{spec.name}: the megapass scan must donate the state"
+    else:
+        hs_m = ds_m.mixed_rounds(rounds)
+        got = [h.result() for h in hs_m]
+
+    # sequential twin: one dispatch per round via the base fallback
+    hs_s = _substrate.BatchedStructure.mixed_rounds(ds_s, rounds)
+    want = [h.result() for h in hs_s]
+
+    # host oracle replay (round order = serial schedule)
+    oracle_res = []
+    for kind, m, i in rounds:
+        if kind == "update":
+            oracle_res.append(_oracle_update(oracle, m, i))
+        else:
+            oracle_res.append([oracle.apply(mm, ii)
+                               for mm, ii in zip(m, i)])
+
+    for (kind, m, i), g_r, w_r, o_r in zip(rounds, got, want, oracle_res):
+        assert len(g_r) == len(w_r) == len(m), (spec.name, "megapass", kind)
+        for mm, g, w, o in zip(m, g_r, w_r, o_r):
+            assert spec.result_ok(mm, g, w), \
+                (spec.name, "megapass vs sequential", mm, g, w)
+            assert spec.result_ok(mm, g, o), \
+                (spec.name, "megapass vs oracle", mm, g, o)
+    if spec.dump_compare is not None:
+        spec.dump_compare(ds_m, oracle)
+        spec.dump_compare(ds_s, oracle)
 
 
 # ---------------------------------------------------------------------------

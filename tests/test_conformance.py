@@ -5,7 +5,8 @@ their spec (factory + oracle + op generators):
 
 * differential fuzz (plain + no-donate ablation) — tier-1
 * one-sync fetch counting, donation aliasing, atomic refusal
-  bit-identity, rounds ≡ chunked single passes — tier-1
+  bit-identity, rounds ≡ chunked single passes, megapass ≡
+  sequential alternation — tier-1
 * fault-plan exactly-once recovery — ``faults`` job
 * hypothesis state machines — ``slow``/``fuzz`` job
   (tests/test_differential.py)
@@ -19,8 +20,9 @@ import pytest
 
 from conformance import (check_atomic_refusal, check_differential,
                          check_donation, check_fault_exactly_once,
-                         check_one_sync, check_rounds_equiv,
-                         count_fetches, run_differential)
+                         check_megapass_vs_sequential, check_one_sync,
+                         check_rounds_equiv, count_fetches,
+                         run_differential)
 
 from repro.core import substrate
 
@@ -66,6 +68,10 @@ def test_atomic_refusal(spec):
 
 def test_rounds_equiv(spec):
     check_rounds_equiv(spec)
+
+
+def test_megapass_vs_sequential(spec):
+    check_megapass_vs_sequential(spec)
 
 
 @pytest.mark.faults
@@ -174,6 +180,34 @@ def test_battery_catches_stale_mirror():
     with pytest.raises(ValueError, match="capacity"):
         check_differential(spec, seed=3, iters=200,
                            make=_StaleMirrorMap())
+
+
+class _ReadFirstMap:
+    """Toy defect: the fused lowering dispatches every READ round before
+    any UPDATE round — the serial-schedule contract (round r+1 observes
+    round r) is silently broken for mixed megapasses."""
+
+    def __call__(self):
+        from repro.core.batched_map import ShardedMap
+
+        class Broken(ShardedMap):
+            def mixed_rounds(self, rounds):
+                order = sorted(range(len(rounds)),
+                               key=lambda j: rounds[j][0] != "read")
+                hs = super().mixed_rounds([rounds[j] for j in order])
+                out = [None] * len(rounds)
+                for pos, j in enumerate(order):
+                    out[j] = hs[pos]
+                return out
+
+        return Broken(2048, c_max=16, n_shards=4,
+                      key_range=(0.0, 1000.0))
+
+
+def test_battery_catches_read_ordering_defect():
+    spec = substrate.get("map")
+    with pytest.raises(AssertionError, match="megapass"):
+        check_megapass_vs_sequential(spec, make=_ReadFirstMap())
 
 
 def test_count_fetches_is_restored():

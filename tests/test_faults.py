@@ -2,9 +2,12 @@
 
 Covers the deterministic fault harness itself (plan determinism, the
 breaker state machine, the transactional dispatch guard), bit-identical
-snapshot/restore on all three device structures, combiner lease takeover,
-the scheduler supervisor's exactly-once recovery, and the close()
-vs in-flight-device-step race (regression: slow fake step_fn).
+snapshot/restore on all three device structures — including the fused
+``mixed_rounds`` megapass, where one failed dispatch must rewind BOTH
+the update state and the pending read results (ISSUE 9) — combiner
+lease takeover, the scheduler supervisor's exactly-once recovery, and
+the close() vs in-flight-device-step race (regression: slow fake
+step_fn).
 
 The whole module is marked ``faults`` so the dedicated CI fault-injection
 job selects it with ``-m faults``; it stays in tier-1 too (not slow).
@@ -233,6 +236,59 @@ def test_graph_restore_bit_identical():
     # the state: reads and replays behave as if the fault never happened
     assert g.connected(0, 2) and not g.connected(0, 3)
     assert g.insert(2, 3) and g.connected(0, 3)
+
+def test_map_megapass_restore_bit_identical():
+    """ISSUE 9: a failed MEGAPASS dispatch — R update+read rounds fused
+    into ONE scan — restores the update state AND the pending read
+    results bit-identically; after the plan heals, the SAME megapass
+    replays cleanly and the reads observe their whole epoch."""
+    plan, guard = _flaky_guard()
+    m = ShardedMap(64, c_max=4, n_shards=2, key_range=(0.0, 100.0),
+                   guard=guard)
+    m.update_batch(["insert"] * 2, [(10.0, 1.0), (20.0, 2.0)])
+    keys0 = np.asarray(m.state.keys).copy()
+    vals0 = np.asarray(m.state.vals).copy()
+    items0 = m.items()
+    rounds = [("update", ["insert", "delete"], [(30.0, 3.0), 10.0]),
+              ("read", ["lookup", "lookup", "lookup"],
+               [30.0, 10.0, 20.0])]
+    plan.dispatch_fail_rate = 1.0
+    with pytest.raises(InjectedDispatchError):
+        m.mixed_rounds(rounds)
+    np.testing.assert_array_equal(np.asarray(m.state.keys), keys0)
+    np.testing.assert_array_equal(np.asarray(m.state.vals), vals0)
+    assert m.items() == items0
+    plan.dispatch_fail_rate = 0.0      # mirrors intact: replay is clean
+    hs = m.mixed_rounds(rounds)
+    assert hs[0].result() == [True, True]
+    assert hs[1].result() == [3.0, None, 2.0]
+    assert m.items() == [(20.0, 2.0), (30.0, 3.0)]
+
+
+def test_pq_megapass_restore_bit_identical():
+    plan, guard = _flaky_guard()
+    pq = ShardedBatchedPQ(64, c_max=4, n_shards=2, guard=guard)
+    pq.update_batch(["insert"] * 3, [5.0, 1.0, 9.0])
+    a0 = np.asarray(pq.state.a).copy()
+    s0 = np.asarray(pq.state.size).copy()
+    v0 = pq.values()
+    rounds = [("update", ["insert", "extract_min"], [0.5, None]),
+              ("read", ["peek_min", "peek_min"], [None, None])]
+    plan.dispatch_fail_rate = 1.0
+    with pytest.raises(InjectedDispatchError):
+        pq.mixed_rounds(rounds)
+    np.testing.assert_array_equal(np.asarray(pq.state.a), a0)
+    np.testing.assert_array_equal(np.asarray(pq.state.size), s0)
+    assert pq.values() == v0
+    plan.dispatch_fail_rate = 0.0
+    hs = pq.mixed_rounds(rounds)
+    # structure-level in-round contract: extracts before inserts (host
+    # elimination is an ENGINE concern), so the extract takes 1.0 and
+    # the later peek round observes the freshly inserted 0.5
+    assert hs[0].result()[1] == 1.0
+    assert hs[1].result() == [0.5, 0.5]
+    assert pq.values() == [0.5, 5.0, 9.0]
+
 
 def test_graph_guarded_read_pass_restores():
     plan, guard = _flaky_guard()

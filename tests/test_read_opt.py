@@ -3,7 +3,11 @@
 graph): every read must observe the latest preceding update in its batch
 epoch, for both the plain ``apply`` path and the device-tier
 ``update_batch_async`` path, under deterministic epochs and
-hypothesis-generated interleavings."""
+hypothesis-generated interleavings.  The megapass section (ISSUE 9,
+DESIGN.md §17) pins the SAME epoch boundary when updates and reads ride
+one fused ``mixed_rounds`` dispatch: a read collected in epoch E
+observes ALL of epoch E's updates, including the deferred
+``update_batch_async`` result masks."""
 import threading
 
 import pytest
@@ -189,6 +193,107 @@ else:                            # surface the gap instead of hiding it
     @needs_hypothesis
     def test_threaded_interleavings_monotone_and_bounded():
         raise AssertionError("unreachable")
+
+
+class _DoneHandle:
+    def __init__(self, res):
+        self._res = res
+
+    def result(self):
+        return self._res
+
+
+class MegapassVersionedDS(AsyncVersionedDS):
+    """Megapass-capable twin: ``mixed_rounds`` applies the tagged rounds
+    as ONE fused dispatch — the serial schedule (round r+1 observes all
+    of round r) is preserved, only the dispatch is fused."""
+
+    def __init__(self):
+        super().__init__()
+        self.mixed_calls = 0
+        self.rounds_seen = 0
+
+    def mixed_rounds(self, rounds):
+        self.mixed_calls += 1
+        self.rounds_seen += len(rounds)
+        handles = []
+        for kind, methods, inputs in rounds:
+            if kind == "update":
+                handles.append(_DoneHandle(
+                    [self.apply(m, i) for m, i in zip(methods, inputs)]))
+            else:
+                handles.append(_DoneHandle(
+                    self.read_batch(list(methods), list(inputs))))
+        return handles
+
+
+def _pass_ops(engine, ops):
+    """Like :func:`_pass` but with per-request inputs."""
+    reqs = [Request(method=m, input=i, status=Status.PUSHED)
+            for m, i in ops]
+    engine.combiner_code(engine, reqs)
+    return reqs
+
+
+def test_megapass_reads_observe_their_whole_epoch():
+    """DESIGN.md §17 epoch boundary: when epoch E's updates and reads
+    ride ONE megapass, the read round is a LATER scan step than the
+    update round — every read observes ALL of epoch E's updates."""
+    ds = MegapassVersionedDS()
+    engine = batched_read_optimized(ds, use_megapass=True)
+    reqs = _pass(engine, ["inc", "get", "inc", "get"])
+    assert all(r.status == Status.FINISHED for r in reqs)
+    assert [r.res for r in reqs] == [1, 2, 2, 2]
+    assert ds.mixed_calls == 1 and ds.rounds_seen == 2
+    assert ds.async_batches == 0          # fused, not alternating
+    assert engine.megapass_dispatches == 1
+    assert engine.megapass_rounds == 2
+    assert engine.rounds_per_dispatch == 2.0
+    # a read-only pass has nothing to fuse: plain read path, no megapass
+    reqs = _pass(engine, ["get", "get"])
+    assert [r.res for r in reqs] == [2, 2]
+    assert ds.mixed_calls == 1
+    # an update-only pass still fuses (a one-round megapass)
+    reqs = _pass(engine, ["inc"])
+    assert reqs[0].res == 3
+    assert ds.mixed_calls == 2 and engine.megapass_rounds == 3
+
+
+def test_megapass_flag_off_keeps_alternating_dispatches():
+    """``use_megapass`` defaults OFF: a capable structure still goes
+    through the separate update/read dispatches unless opted in."""
+    ds = MegapassVersionedDS()
+    engine = batched_read_optimized(ds)
+    reqs = _pass(engine, ["inc", "get"])
+    assert [r.res for r in reqs] == [1, 1]
+    assert ds.mixed_calls == 0 and ds.async_batches == 1
+    assert engine.megapass_dispatches == 0
+    assert engine.rounds_per_dispatch == 0.0
+
+
+def test_megapass_end_to_end_sharded_map():
+    """A real device-tier structure: same-epoch inserts + lookups ride
+    one megapass.  The lookup round observes every epoch-E insert
+    (including an in-epoch overwrite), and the deferred insert result
+    masks — the ``update_batch_async`` path inside ``mixed_rounds`` —
+    stay exact under the arrival-order chain rule."""
+    from repro.core.batched_map import ShardedMap
+
+    ds = ShardedMap(256, c_max=8, n_shards=2, key_range=(0.0, 100.0))
+    engine = batched_read_optimized(ds, use_megapass=True)
+    ops = [("insert", (5.0, 50.0)), ("lookup", 5.0),
+           ("insert", (7.0, 70.0)), ("lookup", 7.0),
+           ("assign", (5.0, 51.0)), ("lookup", 9.0)]
+    reqs = _pass_ops(engine, ops)
+    assert all(r.status == Status.FINISHED for r in reqs)
+    # masks under the chain rule: 5 new, 7 new, assign finds 5 present
+    assert [reqs[0].res, reqs[2].res, reqs[4].res] == [True, True, True]
+    # reads observe the WHOLE epoch: 5 carries its assigned value
+    assert reqs[1].res == 51.0
+    assert reqs[3].res == 70.0
+    assert reqs[5].res is None
+    assert engine.megapass_dispatches == 1
+    assert engine.rounds_per_dispatch == 2.0
 
 
 class FailingReadDS(AsyncVersionedDS):
