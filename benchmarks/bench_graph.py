@@ -16,6 +16,10 @@ Implementations:
 * ``PC-K4 nodonate`` / ``PC-K4 pallas`` — ablation twins (EXPERIMENTS
   §Ablations): copy-per-pass dispatch, and label rebuilds through the
   ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
+* ``PC-K{K} mesh`` — the DESIGN.md §18 placement twin (opt-in via
+  ``--impls``): the connectivity rebuild's scatter-min fixpoint runs
+  with the edge list partitioned across the combining mesh, label
+  merges via ``lax.pmin``; rows carry ``device_count``.
 * ``PC-K4 guarded`` — the fault-free transactional-guard twin
   (DESIGN.md §15; EXPERIMENTS §Robustness): snapshot per pass, no plan.
 * ``PC-K4 megapass`` / ``PC-K4 alternating`` — the §17 fused megapass
@@ -67,10 +71,11 @@ def _random_tree(rng, n):
 
 
 def _device_graph(n_vertices, edge_capacity, *, n_shards, use_pallas=False,
-                  donate=True, guard=None):
+                  donate=True, guard=None, placement=None):
     return DeviceGraph(n_vertices, edge_capacity=edge_capacity,
                        c_max=C_MAX, n_shards=n_shards,
-                       use_pallas=use_pallas, donate=donate, guard=guard)
+                       use_pallas=use_pallas, donate=donate, guard=guard,
+                       placement=placement)
 
 
 def _make_impl(name, n_vertices, edge_capacity):
@@ -100,9 +105,19 @@ def _make_impl(name, n_vertices, edge_capacity):
                               n_shards=K)
             return g, MegapassCombiner(g, rounds_cap=ROUNDS_CAP,
                                        use_megapass=flavor == "megapass")
+        placement = None
+        if flavor == "mesh":
+            # DESIGN.md §18: the connectivity rebuild's scatter-min
+            # fixpoint runs with the edge list partitioned across the
+            # combining mesh, per-iteration label merge via lax.pmin
+            from repro.core.placement import MeshPlacement
+            from repro.launch.mesh import make_combining_mesh
+
+            placement = MeshPlacement(make_combining_mesh(K))
         g = _device_graph(n_vertices, edge_capacity, n_shards=K,
                           use_pallas=flavor == "pallas",
                           donate=flavor != "nodonate",
+                          placement=placement,
                           # fault-free guarded twin (DESIGN.md §15):
                           # snapshot per pass, no fault plan attached
                           guard=True if flavor == "guarded" else None)
@@ -202,6 +217,12 @@ def bench_graph(n_vertices=1000, workloads=("tree", "forest"),
                     row = measure(P, ops, body, repeats=repeats)
                     row.update({"workload": wl, "read_pct": c,
                                 "threads": P, "impl": name})
+                    if name.endswith(" mesh"):
+                        from repro.launch.mesh import make_combining_mesh
+
+                        k = int(name.split()[0][len("PC-K"):])
+                        row["device_count"] = int(
+                            make_combining_mesh(k).shape["shard"])
                     if td is not None:
                         row["tier_decisions"] = dict(td)
                     extra = ""

@@ -23,6 +23,11 @@ Implementations:
   ``grid=(K,)`` Pallas kernel (interpret mode off-TPU).
 * ``PC-K4 guarded`` — the fault-free transactional-guard twin
   (DESIGN.md §15; EXPERIMENTS §Robustness): snapshot per pass, no plan.
+* ``PC-K{4,8} mesh`` — the DESIGN.md §18 placement twins: same
+  per-shard capacity as the stacked ``PC-K{K}`` row, the K shards
+  placed across D real devices (``make_combining_mesh``) with fused
+  passes under shard_map; rows carry ``device_count`` and are
+  auto-appended only when jax sees >1 device.
 * ``PC-K4 megapass`` / ``PC-K4 alternating`` — the §17 fused megapass
   pair (ISSUE 9): async-session clients publish their op stream to a
   ``MegapassCombiner`` and drain futures at the end of the run; the
@@ -117,12 +122,22 @@ def _make_impl(name, items, capacity):
                 n_shards=K, key_range=KEY_RANGE, items=items,
                 rounds_cap=ROUNDS_CAP,
                 use_megapass=flavor == "megapass")
+        placement = None
+        if flavor == "mesh":
+            # DESIGN.md §18 placement twin: SAME per-shard capacity as
+            # the stacked PC-K{K} row (equal total capacity), K shards
+            # across D devices, fused passes under shard_map
+            from repro.core.placement import MeshPlacement
+            from repro.launch.mesh import make_combining_mesh
+
+            placement = MeshPlacement(make_combining_mesh(K))
         # key-range routing of near-uniform keys is i.i.d. per shard, so
         # the binomial-tail sizing of bench_pq.shard_capacity applies
         m = ShardedMap(shard_capacity(capacity, K, c_max=C_MAX),
                        c_max=C_MAX, n_shards=K, key_range=KEY_RANGE,
                        items=items, use_pallas=flavor == "pallas",
                        donate=flavor != "nodonate",
+                       placement=placement,
                        # fault-free guarded twin (DESIGN.md §15): every
                        # pass pays the snapshot, no fault plan attached
                        guard=True if flavor == "guarded" else None)
@@ -132,10 +147,23 @@ def _make_impl(name, items, capacity):
 
 def bench_map(n_keys=2000, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
               ops=200, seed=0, impls=DEFAULT_IMPLS, repeats=5):
+    import jax
+
     results = []
     rng = np.random.default_rng(seed)
     items = _items(rng, n_keys)
     known = np.asarray([k for k, _ in items], np.float32)
+    # mesh twins only differ from stacked when the combining mesh lands
+    # on >1 device — auto-append so single-device smoke runs keep the
+    # exact historical row set (pass "PC-K{K} mesh" in impls to force)
+    if impls == DEFAULT_IMPLS and jax.device_count() > 1:
+        impls = tuple(impls) + ("PC-K4 mesh", "PC-K8 mesh")
+
+    def _mesh_devices(name):
+        from repro.launch.mesh import make_combining_mesh
+
+        k = int(name.split()[0][len("PC-K"):])
+        return int(make_combining_mesh(k).shape["shard"])
 
     def warmup(ex):
         """Exercise every op path (fused update pass, every read kind,
@@ -184,6 +212,10 @@ def bench_map(n_keys=2000, read_pcts=(50, 90, 100), threads=(1, 2, 4, 8),
                 row = measure(P, ops, body, repeats=repeats)
                 row.update({"read_pct": c, "threads": P, "impl": name,
                             "n_keys": n_keys})
+                if name.endswith(" mesh"):
+                    # only mesh rows carry the field: every pre-existing
+                    # row keeps its exact check_regression key
+                    row["device_count"] = _mesh_devices(name)
                 if td is not None:
                     row["tier_decisions"] = dict(td)
                 rpd = getattr(eng, "rounds_per_dispatch", None)

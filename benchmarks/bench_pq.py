@@ -27,6 +27,13 @@ Ablation rows (EXPERIMENTS §Ablations; DESIGN.md §10, §12):
               around every combining pass with NO fault plan attached:
               the fault-free snapshot overhead (EXPERIMENTS §Robustness,
               acceptance ≤10% vs the ungated PC-K4 row)
+  PC-K{K} mesh     — the DESIGN.md §18 placement twin: SAME per-shard
+              capacity (equal total capacity vs PC-K{K}), the K shards
+              placed across D real devices via ``make_combining_mesh``,
+              fused passes under shard_map with collective merges.
+              Rows carry ``device_count`` (= D) and appear by default
+              only when jax sees >1 device (``XLA_FLAGS=--xla_force_
+              host_platform_device_count=N``); force with --ablate-mesh
   PC-K4 megapass / PC-K4 alternating — the §17 fused update+read
               megapass pair (ISSUE 9) on a MIXED workload (25% insert,
               25% extract_min, 50% peek_min): async-session clients
@@ -99,11 +106,19 @@ def shard_capacity(n_keys: int, n_shards: int, c_max: int = C_MAX,
 def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
              value_range=2 ** 31 - 1, seed=0, shard_counts=(1, 4, 8),
              ablate_donation=True, ablate_pallas=None, ablate_rounds=True,
-             ablate_megapass=True, rounds_cap=4, repeats=5):
+             ablate_megapass=True, ablate_mesh=None, rounds_cap=4,
+             repeats=5):
+    import jax
+
     if ablate_pallas is None:
-        import jax
         ablate_pallas = jax.default_backend() == "tpu"
+    if ablate_mesh is None:
+        # the mesh twin only differs from stacked when the combining
+        # mesh lands on >1 device — auto-off on single-device hosts so
+        # the tier-1 smoke rows stay byte-comparable across PRs
+        ablate_mesh = jax.device_count() > 1
     results = []
+    mesh_d = {}    # mesh row impl name -> its mesh's device count D
     for S in sizes:
         rng = np.random.default_rng(seed)
         init = rng.uniform(0, value_range, S).astype(np.float32)
@@ -155,6 +170,19 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
                     impls["PC-K4 guarded"] = pc_sharded_priority_queue(
                         cap_k, c_max=C_MAX, n_shards=4, values=init,
                         guard=True).execute
+                if ablate_mesh:
+                    # mesh-placed twin (DESIGN.md §18): SAME per-shard
+                    # capacity (equal total capacity vs the stacked
+                    # PC-K{K} row), K shards over D real devices,
+                    # collective merges via shard_map
+                    from repro.core.placement import MeshPlacement
+                    from repro.launch.mesh import make_combining_mesh
+
+                    pl = MeshPlacement(make_combining_mesh(K))
+                    impls[f"PC-K{K} mesh"] = pc_sharded_priority_queue(
+                        cap_k, c_max=C_MAX, n_shards=K, values=init,
+                        placement=pl).execute
+                    mesh_d[f"PC-K{K} mesh"] = pl.n_devices
                 if ablate_rounds:
                     # §12 fused multi-round path: async clients, up to
                     # rounds_cap combining rounds per donated dispatch
@@ -207,6 +235,10 @@ def bench_pq(sizes=(100_000,), threads=(1, 2, 4, 8), ops=300,
 
                 row = measure(P, ops, body, repeats=repeats)
                 row.update({"impl": name, "size": S, "threads": P})
+                if name in mesh_d:
+                    # only mesh rows carry the field: every pre-existing
+                    # row keeps its exact check_regression key
+                    row["device_count"] = mesh_d[name]
                 if eng is not None:
                     row["tier_decisions"] = dict(eng.tier_decisions)
                 results.append(row)
@@ -317,6 +349,12 @@ def main(argv=None):
     ap.add_argument("--no-ablate-megapass", action="store_true",
                     help="skip the 'PC-K4 megapass/alternating' mixed "
                          "update+read rows")
+    ap.add_argument("--ablate-mesh", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="force the 'PC-K{K} mesh' device-mesh rows "
+                         "on/off (default: on only when jax sees >1 "
+                         "device — e.g. under XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=4)")
     ap.add_argument("--rounds-cap", type=int, default=4,
                     help="R cap for the fused multi-round rows")
     ap.add_argument("--repeats", type=int, default=5,
@@ -328,6 +366,7 @@ def main(argv=None):
              ablate_pallas=a.ablate_pallas,
              ablate_rounds=not a.no_ablate_rounds,
              ablate_megapass=not a.no_ablate_megapass,
+             ablate_mesh=a.ablate_mesh,
              rounds_cap=a.rounds_cap, repeats=a.repeats)
 
 

@@ -13,7 +13,10 @@ CPU, not this repo's hot path.  The ISSUE-9 megapass rows
 ``rounds_per_dispatch``) ride the same identity keys: on their first
 recorded run they surface as "new row (no baseline)" — informational,
 the PR-5 convention — and gate like any PC row once a trajectory entry
-records them.  Rows whose recorded baseline IQR reaches
+records them.  The ISSUE-10 mesh rows (``PC-K{K} mesh``, carrying
+``device_count``) follow the same convention: informational on their
+first run, then gated per (impl, ..., device_count) so a D=4 row is
+never compared against a D=8 one.  Rows whose recorded baseline IQR reaches
 their median are reported as ``UNSTABLE`` (with the comparison they
 would have made) and excluded from gating, plus a summary count — the
 gate would only measure container noise there, but the exclusion must be
@@ -33,11 +36,15 @@ import sys
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
-# row-identity fields per benchmark (ops_per_s is the compared value)
+# row-identity fields per benchmark (ops_per_s is the compared value).
+# pq/map carry "device_count" so the ISSUE-10 mesh rows ("PC-K4 mesh"
+# etc., measured under forced multi-device worlds) key separately per
+# world size; pre-mesh rows never set the field, so every historical
+# key stays (..., None) on both sides and keeps gating unchanged.
 KEYS = {
-    "pq": ("impl", "size", "threads"),
+    "pq": ("impl", "size", "threads", "device_count"),
     "graph": ("impl", "workload", "read_pct", "threads"),
-    "map": ("impl", "read_pct", "threads"),
+    "map": ("impl", "read_pct", "threads", "device_count"),
     "sketch": ("impl", "read_pct", "threads"),
     "unionfind": ("impl", "read_pct", "threads"),
 }

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import placement as _placement
 from . import substrate
 from repro.kernels.sorted_merge import (merge_compact_sharded,
                                         merge_compact_xla)
@@ -190,13 +191,21 @@ def _prep_one(keys1, vals1, size1, k1, v1, code1, nb1, *, c_max: int):
 def _apply_impl(state: MapState, op_keys: jax.Array, op_vals: jax.Array,
                 op_code: jax.Array, nb: jax.Array, *,
                 key_range: Optional[Tuple[float, float]] = None,
-                use_pallas: bool = False) -> Tuple[MapState, jax.Array]:
+                use_pallas: bool = False,
+                placement=None) -> Tuple[MapState, jax.Array]:
     """Apply ≤ c_max MIXED insert/delete/assign ops as ONE fused pass.
 
     ``op_keys``/``op_vals``: (c,) f32; ``op_code``: (c,) int32
     (0=insert, 1=delete, 2=assign); ``nb``: () int32 live lane count.
     Returns ``(state, ok)`` with per-lane arrival-order results — the
-    results stay on device until fetched (``AsyncMapUpdate``)."""
+    results stay on device until fetched (``AsyncMapUpdate``).
+
+    ``placement`` (static): ``None`` traces the single-device program
+    below; a ``MeshPlacement`` dispatches to the shard_map twin
+    (DESIGN.md §18)."""
+    if placement is not None and placement.is_mesh:
+        return _mesh_apply(state, op_keys, op_vals, op_code, nb,
+                           key_range=key_range, placement=placement)
     keys, vals, size = state
     K = keys.shape[0]
     cap = keys.shape[1] - 1
@@ -253,11 +262,16 @@ def _apply_impl(state: MapState, op_keys: jax.Array, op_vals: jax.Array,
 def _rounds_impl(state: MapState, op_keys: jax.Array, op_vals: jax.Array,
                  op_code: jax.Array, nb: jax.Array, *,
                  key_range: Optional[Tuple[float, float]] = None,
-                 use_pallas: bool = False) -> Tuple[MapState, jax.Array]:
+                 use_pallas: bool = False,
+                 placement=None) -> Tuple[MapState, jax.Array]:
     """R sequential ≤ c_max slices as ONE ``lax.scan`` program
     (DESIGN.md §12): ``op_keys``/``op_vals`` (R, c), ``op_code`` (R, c),
     ``nb`` (R,).  Each scan step is the full fused mixed-op pass, so a
-    batch spanning R slices costs one dispatch.  Returns (state, oks)."""
+    batch spanning R slices costs one dispatch.  Returns (state, oks).
+    Under a ``MeshPlacement`` the scan moves inside one shard_map body."""
+    if placement is not None and placement.is_mesh:
+        return _mesh_rounds(state, op_keys, op_vals, op_code, nb,
+                            key_range=key_range, placement=placement)
 
     def body(st, rnd):
         st, ok = _apply_impl(st, rnd[0], rnd[1], rnd[2], rnd[3],
@@ -268,7 +282,7 @@ def _rounds_impl(state: MapState, op_keys: jax.Array, op_vals: jax.Array,
     return state, oks
 
 
-_STATIC = ("key_range", "use_pallas")
+_STATIC = ("key_range", "use_pallas", "placement")
 # ``state`` is DONATED on every apply pass — the sorted arrays update in
 # place (DESIGN.md §10/§13); the ``*_undonated`` twins are the
 # copy-per-pass ablation (EXPERIMENTS §Ablations).
@@ -284,7 +298,8 @@ apply_rounds_undonated = jax.jit(_rounds_impl, static_argnames=_STATIC)
 # Fused vectorized read pass (never donated — reads copy nothing)
 # ---------------------------------------------------------------------------
 def _read_impl(state: MapState, qa: jax.Array, qb: jax.Array,
-               qkind: jax.Array) -> Tuple[jax.Array, jax.Array]:
+               qkind: jax.Array,
+               *, placement=None) -> Tuple[jax.Array, jax.Array]:
     """Answer a mixed read batch with ONE program.
 
     ``qa``/``qb``: (q,) f32 — the key (lookup), [lo, hi] bounds
@@ -292,6 +307,8 @@ def _read_impl(state: MapState, qa: jax.Array, qb: jax.Array,
     ``qkind``: (q,) int32.  Returns ``(res (q,) f32, ok (q,) bool)`` —
     ``ok`` is the found/in-range flag for lookup and kth_smallest.
     """
+    if placement is not None and placement.is_mesh:
+        return _mesh_read(state, qa, qb, qkind, placement=placement)
     keys, vals, size = state
     K = keys.shape[0]
     cap = keys.shape[1] - 1
@@ -342,7 +359,7 @@ def _read_impl(state: MapState, qa: jax.Array, qb: jax.Array,
     return res, ok
 
 
-read_pass = jax.jit(_read_impl)
+read_pass = jax.jit(_read_impl, static_argnames=("placement",))
 
 
 # ---------------------------------------------------------------------------
@@ -354,7 +371,7 @@ MEGA_UPDATE, MEGA_READ = 0, 1
 def _mixed_impl(state: MapState, tags: jax.Array, op_a: jax.Array,
                 op_b: jax.Array, op_code: jax.Array, nb: jax.Array, *,
                 key_range: Optional[Tuple[float, float]] = None,
-                use_pallas: bool = False
+                use_pallas: bool = False, placement=None,
                 ) -> Tuple[MapState, jax.Array, jax.Array]:
     """R heterogeneous combining rounds as ONE donated scan program.
 
@@ -369,6 +386,9 @@ def _mixed_impl(state: MapState, tags: jax.Array, op_a: jax.Array,
     with per-round (R, c) result slots: update rows fill ``res`` with
     the +inf sentinel and ``ok`` with the arrival-order masks; read rows
     leave the state untouched and fill both."""
+    if placement is not None and placement.is_mesh:
+        return _mesh_mixed(state, tags, op_a, op_b, op_code, nb,
+                           key_range=key_range, placement=placement)
 
     def body(st, rnd):
         tag, ra, rb, rc, rnb = rnd
@@ -393,6 +413,248 @@ def _mixed_impl(state: MapState, tags: jax.Array, op_a: jax.Array,
 mixed_pass = jax.jit(_mixed_impl, static_argnames=_STATIC,
                      donate_argnums=(0,))
 mixed_pass_undonated = jax.jit(_mixed_impl, static_argnames=_STATIC)
+
+
+# ---------------------------------------------------------------------------
+# Mesh placement (DESIGN.md §18): the K shard rows live on D devices
+# ---------------------------------------------------------------------------
+# Same shape as the PQ's mesh twin: routing (O(K·c), tiny) is computed
+# replicated on every device against GLOBAL shard ids, each device runs
+# the net-effect prep + merge-compact on its K/D local shard rows only
+# (the O(c² + capacity) work scale-out parallelizes), and the arrival-
+# order result gather / global read reductions become collectives.
+# all_gather's device-major stacking makes global shard k = d·K/D + j —
+# exactly the stacked row order — so every gathered reduction reuses the
+# stacked reduction code on an identical (K, ·) array, which keeps the
+# float sums bit-identical.  merge_compact_sharded (the Pallas kernel)
+# assumes the whole stack in one address space: use_pallas composes with
+# StackedPlacement only (the wrapper refuses the combination).
+from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as _P
+
+
+def _mesh_apply_body(keys, vals, size, op_keys, op_vals, op_code, nb,
+                     *, n_shards: int, key_range, axis: str):
+    """One fused mixed-op pass on the LOCAL K/D shard rows."""
+    K = n_shards
+    K_local = keys.shape[0]
+    cap = keys.shape[1] - 1
+    c = op_keys.shape[0]
+    lane = jnp.arange(c, dtype=jnp.int32)
+    k = _flush_subnormals(op_keys.astype(jnp.float32))
+    v = op_vals.astype(jnp.float32)
+    active = lane < nb
+    base = jax.lax.axis_index(axis) * K_local
+
+    # global routing, replicated (every device must agree on the lane →
+    # shard assignment to gather results back in arrival order)
+    shard_of = jnp.where(active, _route(k, K, key_range), 0)
+    one_hot_g = ((shard_of[None, :] == jnp.arange(K)[:, None])
+                 & active[None, :])                        # (K, c)
+    rank_g = jnp.cumsum(one_hot_g, axis=1) - 1             # (K, c)
+    one_hot = jax.lax.dynamic_slice_in_dim(one_hot_g, base, K_local, 0)
+    rank = jax.lax.dynamic_slice_in_dim(rank_g, base, K_local, 0)
+    counts = jnp.sum(one_hot, axis=1).astype(jnp.int32)
+
+    def scatter_row(dest, payload, fill):
+        row = jnp.full((c + 1,), fill, payload.dtype)
+        return row.at[dest].set(payload)[:c]
+
+    dest = jnp.where(one_hot, rank, c)                     # scratch col c
+    rows_k = jax.vmap(scatter_row, in_axes=(0, 0, None))(
+        dest, jnp.where(one_hot, k[None, :], INF), INF)
+    rows_v = jax.vmap(scatter_row, in_axes=(0, 0, None))(
+        dest, jnp.where(one_hot, v[None, :], jnp.float32(0)),
+        jnp.float32(0))
+    rows_c = jax.vmap(scatter_row, in_axes=(0, 0, None))(
+        dest, jnp.where(one_hot, op_code[None, :], 0), 0)
+
+    keys2, vals2, keep, b_keys, b_vals, b_count, new_size, ok_rows = \
+        jax.vmap(lambda a, b, s, rk, rv, rc, n: _prep_one(
+            a, b, s, rk, rv, rc, n, c_max=c))(
+            keys, vals, size, rows_k, rows_v, rows_c, counts)
+    mk, mv = jax.vmap(merge_compact_xla)(
+        keys2[:, :cap], vals2[:, :cap], keep, b_keys, b_vals, b_count)
+    pad = jnp.full((K_local, 1), INF, jnp.float32)
+    new_keys = jnp.concatenate([mk, pad], axis=1)
+    new_vals = jnp.concatenate([mv, pad], axis=1)
+
+    # collective arrival-order gather: every device needs every shard's
+    # per-lane results to answer its (replicated) copy of the batch
+    ok_g = jax.lax.all_gather(ok_rows, axis).reshape(K, c)
+    ok = active & ok_g[shard_of, jnp.clip(rank_g[shard_of, lane],
+                                          0, c - 1)]
+    return new_keys, new_vals, new_size, ok
+
+
+def _mesh_read_body(keys, vals, size, qa, qb, qkind,
+                    *, n_shards: int, axis: str):
+    """Collective twin of :func:`_read_impl`: per-shard probes run on
+    the local rows, the cross-shard reductions run on the gathered
+    (K, q) stats — the same reduction code on the same array values as
+    the stacked trace, so sums are bit-identical.  The k-th owner-shard
+    key is fetched with a ``pmin`` (only the owner contributes a finite
+    value)."""
+    K = n_shards
+    K_local = keys.shape[0]
+    cap = keys.shape[1] - 1
+    qa = _flush_subnormals(qa.astype(jnp.float32))
+    qb = _flush_subnormals(qb.astype(jnp.float32))
+    base = jax.lax.axis_index(axis) * K_local
+
+    def per_shard(bk, bv, sz):
+        body = bk[:cap]
+        pos = jnp.searchsorted(body, qa, side="left").astype(jnp.int32)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        found = (pos < sz) & (body[pos_c] == qa)
+        lval = jnp.where(found, bv[pos_c], INF)
+        lo = jnp.minimum(jnp.searchsorted(body, qa, side="left"), sz)
+        hi = jnp.minimum(jnp.searchsorted(body, qb, side="right"), sz)
+        cnt = jnp.maximum(hi - lo, 0).astype(jnp.int32)
+        live = jnp.where(jnp.arange(cap) < sz, bv[:cap], 0.0)
+        ps = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                              jnp.cumsum(live)])
+        rsum = jnp.where(hi > lo, ps[hi] - ps[lo], 0.0)
+        return found, lval, cnt, rsum
+
+    found_l, lval_l, cnt_l, rsum_l = jax.vmap(per_shard)(keys, vals, size)
+    q = qa.shape[0]
+    found = jax.lax.all_gather(found_l, axis).reshape(K, q)
+    lval = jax.lax.all_gather(lval_l, axis).reshape(K, q)
+    cnt = jax.lax.all_gather(cnt_l, axis).reshape(K, q)
+    rsum = jax.lax.all_gather(rsum_l, axis).reshape(K, q)
+    size_g = jax.lax.all_gather(size, axis).reshape(K)
+
+    any_found = jnp.any(found, axis=0)
+    look_val = jnp.min(jnp.where(found, lval, INF), axis=0)
+    total_cnt = jnp.sum(cnt, axis=0).astype(jnp.float32)
+    total_sum = jnp.sum(rsum, axis=0)
+
+    ccum = jnp.cumsum(size_g)
+    kq = qa.astype(jnp.int32)
+    sh = jnp.sum((ccum[:, None] < kq[None, :]).astype(jnp.int32), axis=0)
+    sh_c = jnp.clip(sh, 0, K - 1)
+    prior = jnp.where(sh > 0, ccum[jnp.clip(sh - 1, 0, K - 1)], 0)
+    loc = kq - prior
+    kth_ok = (kq >= 1) & (kq <= ccum[K - 1])
+    mine = (sh_c >= base) & (sh_c < base + K_local)
+    kv = jnp.where(
+        mine,
+        keys[jnp.clip(sh_c - base, 0, K_local - 1),
+             jnp.clip(loc - 1, 0, cap - 1)],
+        INF)
+    kth_val = jax.lax.pmin(kv, axis)
+
+    res = jnp.select(
+        [qkind == RD_LOOKUP, qkind == RD_COUNT, qkind == RD_SUM],
+        [look_val, total_cnt, total_sum], kth_val)
+    ok = jnp.select([qkind == RD_LOOKUP, qkind == RD_KTH],
+                    [any_found, kth_ok], jnp.bool_(True))
+    return res, ok
+
+
+def _map_mesh_specs(placement):
+    ax = placement.axis
+    return ax, (_P(ax, None), _P(ax, None), _P(ax))
+
+
+def _mesh_apply(state, op_keys, op_vals, op_code, nb,
+                *, key_range, placement):
+    K = state.keys.shape[0]
+    ax, st_specs = _map_mesh_specs(placement)
+
+    def body(keys, vals, size, rk, rv, rc, rnb):
+        return _mesh_apply_body(keys, vals, size, rk, rv, rc, rnb,
+                                n_shards=K, key_range=key_range, axis=ax)
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P(), _P()),
+                    out_specs=st_specs + (_P(),),
+                    check_rep=False)
+    keys, vals, size, ok = fn(state.keys, state.vals, state.size,
+                              op_keys, op_vals, op_code, nb)
+    return MapState(keys, vals, size), ok
+
+
+def _mesh_rounds(state, op_keys, op_vals, op_code, nb,
+                 *, key_range, placement):
+    K = state.keys.shape[0]
+    ax, st_specs = _map_mesh_specs(placement)
+
+    def body(keys, vals, size, rks, rvs, rcs, rnbs):
+        def step(carry, rnd):
+            keys, vals, size = carry
+            rk, rv, rc, rnb = rnd
+            keys, vals, size, ok = _mesh_apply_body(
+                keys, vals, size, rk, rv, rc, rnb,
+                n_shards=K, key_range=key_range, axis=ax)
+            return (keys, vals, size), ok
+
+        (keys, vals, size), oks = jax.lax.scan(
+            step, (keys, vals, size), (rks, rvs, rcs, rnbs))
+        return keys, vals, size, oks
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P(), _P()),
+                    out_specs=st_specs + (_P(),),
+                    check_rep=False)
+    keys, vals, size, oks = fn(state.keys, state.vals, state.size,
+                               op_keys, op_vals, op_code, nb)
+    return MapState(keys, vals, size), oks
+
+
+def _mesh_read(state, qa, qb, qkind, *, placement):
+    K = state.keys.shape[0]
+    ax, st_specs = _map_mesh_specs(placement)
+
+    def body(keys, vals, size, qa, qb, qkind):
+        return _mesh_read_body(keys, vals, size, qa, qb, qkind,
+                               n_shards=K, axis=ax)
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P()),
+                    out_specs=(_P(), _P()),
+                    check_rep=False)
+    return fn(state.keys, state.vals, state.size, qa, qb, qkind)
+
+
+def _mesh_mixed(state, tags, op_a, op_b, op_code, nb,
+                *, key_range, placement):
+    K = state.keys.shape[0]
+    ax, st_specs = _map_mesh_specs(placement)
+
+    def body(keys, vals, size, tags, ras, rbs, rcs, rnbs):
+        def step(carry, rnd):
+            keys, vals, size = carry
+            tag, ra, rb, rc, rnb = rnd
+
+            def upd(st):
+                keys, vals, size, ok = _mesh_apply_body(
+                    st[0], st[1], st[2], ra, rb, rc, rnb,
+                    n_shards=K, key_range=key_range, axis=ax)
+                return (keys, vals, size,
+                        jnp.full(ra.shape, INF, jnp.float32), ok)
+
+            def rd(st):
+                res, ok = _mesh_read_body(st[0], st[1], st[2], ra, rb, rc,
+                                          n_shards=K, axis=ax)
+                return st[0], st[1], st[2], res, ok
+
+            keys, vals, size, res, ok = jax.lax.cond(
+                tag == MEGA_READ, rd, upd, (keys, vals, size))
+            return (keys, vals, size), (res, ok)
+
+        (keys, vals, size), (res, ok) = jax.lax.scan(
+            step, (keys, vals, size), (tags, ras, rbs, rcs, rnbs))
+        return keys, vals, size, res, ok
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P(), _P(), _P()),
+                    out_specs=st_specs + (_P(), _P()),
+                    check_rep=False)
+    keys, vals, size, res, ok = fn(state.keys, state.vals, state.size,
+                                   tags, op_a, op_b, op_code, nb)
+    return MapState(keys, vals, size), res, ok
 
 
 def _encode_update_ops(methods: Sequence[str], inputs: Sequence[Any]):
@@ -574,6 +836,11 @@ class ShardedMap(substrate.BatchedStructure):
         kernel (``kernels/sorted_merge``) instead of the XLA twin.
       donate: zero-copy (donated) apply passes (default); ``False`` is
         the copy-per-pass ablation twin.
+      placement: shard layout (DESIGN.md §18) — ``None``/
+        ``StackedPlacement`` keeps all K rows on one device (the
+        original trace); ``MeshPlacement`` splits them across a 1-D
+        mesh and runs the fused passes under shard_map.  Requires
+        ``K % D == 0``; not combinable with ``use_pallas``.
 
     Sync-free occupancy guard (DESIGN.md §10): the wrapper mirrors the
     device's key-range routing on the host (``route_range_host``, bit
@@ -588,11 +855,13 @@ class ShardedMap(substrate.BatchedStructure):
     read_only: Set[str] = {"lookup", "range_count", "range_sum",
                            "kth_smallest"}
     supports_megapass = True
+    supports_placement = True
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 1,
                  key_range: Optional[Tuple[float, float]] = None,
                  items=None, use_pallas: bool = False,
-                 donate: bool = True, fault_plan=None, guard=None):
+                 donate: bool = True, fault_plan=None, guard=None,
+                 placement=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if c_max < 1:
@@ -608,11 +877,19 @@ class ShardedMap(substrate.BatchedStructure):
         self.n_shards = int(n_shards)
         self.use_pallas = bool(use_pallas)
         self.donate = bool(donate)
+        self.placement = _placement.resolve_placement(placement)
+        self.placement.validate(self.n_shards)
+        self._pstatic = _placement.as_static(self.placement)
+        if self._pstatic is not None and self.use_pallas:
+            raise ValueError(
+                "use_pallas is not supported under MeshPlacement: the "
+                "grid=(K,) merge-compact kernel assumes the whole shard "
+                "stack in one device's address space (DESIGN.md §18)")
         self.key_range = ((float(key_range[0]), float(key_range[1]))
                           if key_range is not None else None)
         self.fault_plan = fault_plan
         self._guard = make_guard(fault_plan, guard)
-        self.state = self._init_state(items)
+        self.state = self.placement.put(self._init_state(items))
         self._unresolved: List[AsyncMapUpdate] = []
 
     # -- transactional dispatch (DESIGN.md §15) -------------------------------
@@ -721,14 +998,16 @@ class ShardedMap(substrate.BatchedStructure):
                                     jnp.asarray(vs[0]), jnp.asarray(cs[0]),
                                     jnp.int32(nb[0]),
                                     key_range=self.key_range,
-                                    use_pallas=self.use_pallas)
+                                    use_pallas=self.use_pallas,
+                                    placement=self._pstatic)
                 return [ok]
             fn = apply_rounds if self.donate else apply_rounds_undonated
             self.state, oks = fn(self.state, jnp.asarray(ks),
                                  jnp.asarray(vs), jnp.asarray(cs),
                                  jnp.asarray(nb),
                                  key_range=self.key_range,
-                                 use_pallas=self.use_pallas)
+                                 use_pallas=self.use_pallas,
+                                 placement=self._pstatic)
             return [oks]
 
         if self._guard is None:
@@ -787,7 +1066,7 @@ class ShardedMap(substrate.BatchedStructure):
         kind = np.full((_pow2(nq),), RD_COUNT, np.int32)  # pad: count 0
         qa[:nq], qb[:nq], kind[:nq] = qa0, qb0, kind0
         res, ok = read_pass(self.state, jnp.asarray(qa), jnp.asarray(qb),
-                            jnp.asarray(kind))
+                            jnp.asarray(kind), placement=self._pstatic)
         got = self._resolve_through(None, extra=(res, ok))
         res_h, ok_h = np.asarray(got[0]), np.asarray(got[1])
         return _convert_read_results(methods, res_h, ok_h)
@@ -885,7 +1164,8 @@ class ShardedMap(substrate.BatchedStructure):
             self.state, res_rows, ok_rows = fn(
                 self.state, jnp.asarray(tags_a), jnp.asarray(ra_a),
                 jnp.asarray(rb_a), jnp.asarray(rc_a), jnp.asarray(nb_a),
-                key_range=self.key_range, use_pallas=self.use_pallas)
+                key_range=self.key_range, use_pallas=self.use_pallas,
+                placement=self._pstatic)
             return res_rows, ok_rows
 
         if self._guard is None:
@@ -931,10 +1211,11 @@ class BatchedMap(ShardedMap):
 
     def __init__(self, capacity: int, c_max: int, items=None,
                  use_pallas: bool = False, donate: bool = True,
-                 fault_plan=None, guard=None):
+                 fault_plan=None, guard=None, placement=None):
         super().__init__(capacity, c_max=c_max, n_shards=1, items=items,
                          use_pallas=use_pallas, donate=donate,
-                         fault_plan=fault_plan, guard=guard)
+                         fault_plan=fault_plan, guard=guard,
+                         placement=placement)
 
 
 # ---------------------------------------------------------------------------
@@ -1056,5 +1337,9 @@ substrate.register(substrate.StructureSpec(
                  "--threads", "1", "4", "--ops", "60",
                  "--impls", "FC host", "PC-K1", "PC-K4",
                  "PC-K4 megapass", "PC-K4 alternating"),
-    extras={"serve_kw": dict(capacity=512, c_max=64, n_shards=4)},
+    extras={"serve_kw": dict(capacity=512, c_max=64, n_shards=4),
+            # ctor accepts placement= (DESIGN.md §18); serve.py keys
+            # --mesh-shards eligibility off this marker, and the
+            # placement tests pin it to the class attribute
+            "placement": True},
 ))

@@ -289,6 +289,13 @@ class ShardedSketch(substrate.BatchedStructure):
 
     structure = "sketch"
     read_only: Set[str] = {"count", "total", "distinct", "topk"}
+    # No fused megapass lowering: mixed_rounds rides the base fallback
+    # (``substrate.BatchedStructure.mixed_rounds`` — one device program
+    # per round).  Declared explicitly so the registry's ``megapass``
+    # flag and the conformance kit's flag-vs-behavior assertion have a
+    # ground truth to check against (ISSUE-10 satellite; the PR-9
+    # carry-over left this implicit).
+    supports_megapass = False
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 1,
                  topk_max: int = 8, items=None, use_pallas: bool = False,

@@ -196,6 +196,13 @@ class BatchedUnionFind(substrate.BatchedStructure):
 
     structure = "unionfind"
     read_only: Set[str] = {"find", "connected", "components"}
+    # No fused megapass lowering: mixed_rounds rides the base fallback
+    # (``substrate.BatchedStructure.mixed_rounds`` — one device program
+    # per round).  Declared explicitly so the registry's ``megapass``
+    # flag and the conformance kit's flag-vs-behavior assertion have a
+    # ground truth to check against (ISSUE-10 satellite; the PR-9
+    # carry-over left this implicit).
+    supports_megapass = False
 
     def __init__(self, n: int, c_max: int = 8, n_shards: int = 1,
                  use_pallas: bool = False, donate: bool = True,

@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.kernels.label_prop import connected_components, merge_labels
 
+from . import placement as _placement
 from . import substrate
 from .faults import make_guard
 
@@ -159,7 +160,7 @@ def _update_impl(state: GraphState, buv: jax.Array, is_ins: jax.Array,
 
 
 def _read_impl(state: GraphState, uv: jax.Array, *, n: int, e_bound: int,
-               n_shards: int, use_pallas: bool
+               n_shards: int, use_pallas: bool, placement=None
                ) -> Tuple[GraphState, jax.Array]:
     """Fused refresh + gather/compare: ONE program per read batch.
 
@@ -168,7 +169,14 @@ def _read_impl(state: GraphState, uv: jax.Array, *, n: int, e_bound: int,
     live count — padding repeats slot 0, an invalid-slot self-loop or a
     duplicate edge, both no-ops for scatter-min), the contracted-graph
     merge when only pending inserts exist, identity otherwise.  The
-    rebuild counter increments exactly on the full branch."""
+    rebuild counter increments exactly on the full branch.
+
+    ``placement`` (static): a ``MeshPlacement`` runs the full rebuild as
+    the edge-partitioned collective fixpoint (DESIGN.md §18 — D devices
+    scatter-min disjoint edge blocks, ``pmin`` merges the tables).  The
+    contracted-graph fast path and the update passes stay replicated:
+    ``GraphState`` has no K axis to split, and ``merge_labels`` touches
+    b ≤ 2·c_max edges — there is nothing to scale out there."""
     eu, ev, valid, labels, pend, n_pend, dirty_full, n_full = state
     pend_w = pend.shape[1]                 # pend_cap + 1 (scratch included;
     #                                        sanitized by the n_pend mask)
@@ -179,7 +187,8 @@ def _read_impl(state: GraphState, uv: jax.Array, *, n: int, e_bound: int,
         seu = jnp.where(okslot, eu[idx], 0)
         sev = jnp.where(okslot, ev[idx], 0)
         return connected_components(seu, sev, n=n, n_shards=n_shards,
-                                    use_pallas=use_pallas)
+                                    use_pallas=use_pallas,
+                                    placement=placement)
 
     def fast(labels):
         lane = jnp.arange(pend_w, dtype=jnp.int32)
@@ -222,7 +231,7 @@ def _update_rounds_impl(state: GraphState, buv: jax.Array, is_ins: jax.Array,
 
 update_rounds = jax.jit(_update_rounds_impl, donate_argnums=(0,))
 update_rounds_undonated = jax.jit(_update_rounds_impl)
-_READ_STATIC = ("n", "e_bound", "n_shards", "use_pallas")
+_READ_STATIC = ("n", "e_bound", "n_shards", "use_pallas", "placement")
 read_pass = jax.jit(_read_impl, static_argnames=_READ_STATIC,
                     donate_argnums=(0,))
 read_pass_undonated = jax.jit(_read_impl, static_argnames=_READ_STATIC)
@@ -233,8 +242,8 @@ MEGA_UPDATE, MEGA_READ = 0, 1
 
 def _mixed_rounds_impl(state: GraphState, tags: jax.Array, buv: jax.Array,
                        flags: jax.Array, nb: jax.Array, *, n: int,
-                       e_bound: int, n_shards: int, use_pallas: bool
-                       ) -> Tuple[GraphState, jax.Array]:
+                       e_bound: int, n_shards: int, use_pallas: bool,
+                       placement=None) -> Tuple[GraphState, jax.Array]:
     """R heterogeneous update/read rounds as ONE ``lax.scan`` program
     (DESIGN.md §17): per row, a ``lax.cond`` on the round tag picks the
     fused mixed-op update pass or the fused refresh+gather read pass.
@@ -254,7 +263,8 @@ def _mixed_rounds_impl(state: GraphState, tags: jax.Array, buv: jax.Array,
 
         def rd(s):
             return _read_impl(s, ruv, n=n, e_bound=e_bound,
-                              n_shards=n_shards, use_pallas=use_pallas)
+                              n_shards=n_shards, use_pallas=use_pallas,
+                              placement=placement)
 
         st, ok = jax.lax.cond(tag == MEGA_READ, rd, upd, st)
         return st, ok
@@ -439,6 +449,13 @@ class DeviceGraph(substrate.BatchedStructure):
         Pallas kernel (DESIGN.md §11) instead of the XLA twin.
       donate: zero-copy (donated) passes (default); False is the
         copy-per-pass ablation twin.
+      placement: shard layout for the full label rebuild (DESIGN.md
+        §18) — a ``MeshPlacement`` partitions the compacted edge list
+        across D devices and min-merges the label tables with ``pmin``
+        (bit-exact per iteration, min being associative/commutative).
+        Updates and the contracted-graph fast path stay replicated
+        (``GraphState`` is flat — there is no K axis to place).  Not
+        combinable with ``use_pallas``.
 
     Interface-compatible with ``DynamicGraph`` (``insert``/``delete``/
     ``connected``/``read_batch``/``apply``) plus the batched entry points
@@ -451,11 +468,12 @@ class DeviceGraph(substrate.BatchedStructure):
     structure = "graph"
     read_only: Set[str] = {"connected"}
     supports_megapass = True
+    supports_placement = True
 
     def __init__(self, n_vertices: int, *, edge_capacity: int = 4096,
                  c_max: int = 64, n_shards: int = 1,
                  use_pallas: bool = False, donate: bool = True,
-                 fault_plan=None, guard=None):
+                 fault_plan=None, guard=None, placement=None):
         if n_vertices < 1:
             raise ValueError("n_vertices must be >= 1")
         if c_max < 1:
@@ -468,6 +486,13 @@ class DeviceGraph(substrate.BatchedStructure):
         self.n_shards = int(n_shards)
         self.use_pallas = bool(use_pallas)
         self.donate = bool(donate)
+        self.placement = _placement.resolve_placement(placement)
+        self._pstatic = _placement.as_static(self.placement)
+        if self._pstatic is not None and self.use_pallas:
+            raise ValueError(
+                "use_pallas is not supported under MeshPlacement: the "
+                "grid=(K,) label kernel assumes the whole vertex "
+                "partition in one device's address space (DESIGN.md §18)")
         pend_cap = 2 * self.c_max
         # +1: the scratch slot for predicated scatters (see GraphState)
         self.state = GraphState(
@@ -698,7 +723,8 @@ class DeviceGraph(substrate.BatchedStructure):
             self.state, ans = fn(self.state, jnp.asarray(uv), n=self.n,
                                  e_bound=self._rebuild_bound(),
                                  n_shards=self.n_shards,
-                                 use_pallas=self.use_pallas)
+                                 use_pallas=self.use_pallas,
+                                 placement=self._pstatic)
             return ans
 
         if self._guard is None:
@@ -848,7 +874,8 @@ class DeviceGraph(substrate.BatchedStructure):
                 jnp.asarray(np.stack(row_flags)),
                 jnp.asarray(row_nb, jnp.int32),
                 n=self.n, e_bound=self._e_bound,
-                n_shards=self.n_shards, use_pallas=self.use_pallas)
+                n_shards=self.n_shards, use_pallas=self.use_pallas,
+                placement=self._pstatic)
             return oks
 
         if self._guard is None:
@@ -966,5 +993,9 @@ substrate.register(substrate.StructureSpec(
     bench="benchmarks.bench_graph",
     bench_smoke=("--vertices", "300", "--reads", "50", "100",
                  "--threads", "1", "4", "--ops", "60"),
-    extras={"serve_kw": dict(c_max=64, n_shards=4)},
+    extras={"serve_kw": dict(c_max=64, n_shards=4),
+            # ctor accepts placement= (DESIGN.md §18); serve.py keys
+            # --mesh-shards eligibility off this marker, and the
+            # placement tests pin it to the class attribute
+            "placement": True},
 ))

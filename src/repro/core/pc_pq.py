@@ -499,7 +499,7 @@ def pc_adaptive_priority_queue(pq: AnyBatchedPQ, *, tier: str = "auto",
 def pc_sharded_priority_queue(capacity: int, c_max: int,
                               n_shards: int = 4, values=None,
                               use_pallas: bool = False, donate: bool = True,
-                              fault_plan=None, guard=None,
+                              fault_plan=None, guard=None, placement=None,
                               **kw) -> ParallelCombiner:
     """Parallel combining over the K-sharded batched heap (DESIGN.md §9).
 
@@ -510,7 +510,10 @@ def pc_sharded_priority_queue(capacity: int, c_max: int,
     (DESIGN.md §10; ``donate=False`` is the copy-per-pass ablation).
     ``fault_plan``/``guard`` thread the DESIGN.md §15 fault-tolerance
     layer through both the queue (transactional dispatch) and the
-    combining engine (lease takeover, injected kills).
+    combining engine (lease takeover, injected kills).  ``placement``
+    selects the shard layout (DESIGN.md §18): None/stacked keeps the
+    leading-axis-K default, a ``MeshPlacement`` puts the K shards on
+    real devices with shard_map collective passes.
     """
     if fault_plan is not None:
         kw.setdefault("fault_plan", fault_plan)
@@ -518,7 +521,7 @@ def pc_sharded_priority_queue(capacity: int, c_max: int,
         ShardedBatchedPQ(capacity, c_max=c_max, n_shards=n_shards,
                          values=values, use_pallas=use_pallas,
                          donate=donate, fault_plan=fault_plan,
-                         guard=guard), **kw)
+                         guard=guard, placement=placement), **kw)
 
 
 def pc_megapass_priority_queue(capacity: int, c_max: int,

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import batched_pq as _bpq
+from . import placement as _placement
 from . import substrate
 from .faults import make_guard
 from .batched_pq import (
@@ -172,13 +173,21 @@ def _sharded_apply_batch(
     insert_vals: jax.Array, n_insert: jax.Array,
     *, c_max: int, n_shards: int,
     key_range: Optional[Tuple[float, float]] = None,
-    use_pallas: bool = False,
+    use_pallas: bool = False, placement=None,
 ) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
     """Apply one combined batch of ≤ c_max extracts + ≤ c_max inserts.
 
     Returns (new_state, extracted (c_max,) ascending +inf-padded, k_eff)
     where k_eff = min(n_extract, Σ size_k).
+
+    ``placement`` (static): ``None`` traces the single-device program
+    below; a ``MeshPlacement`` dispatches to the shard_map twin whose
+    K-way merges are collectives (DESIGN.md §18).
     """
+    if placement is not None and placement.is_mesh:
+        return _mesh_apply_batch(
+            state, n_extract, insert_vals, n_insert, c_max=c_max,
+            n_shards=n_shards, key_range=key_range, placement=placement)
     K = n_shards
     a, size = state
     cap = a.shape[1]
@@ -268,7 +277,7 @@ def _sharded_apply_batch(
     return ShardedHeapState(new_a, new_size), merged, k_eff
 
 
-_STATIC = ("c_max", "n_shards", "key_range", "use_pallas")
+_STATIC = ("c_max", "n_shards", "key_range", "use_pallas", "placement")
 # ``state`` is DONATED — the (K, capacity) heap stack updates in place
 # (DESIGN.md §10); callers must not reuse a state after passing it in.
 sharded_apply_batch = jax.jit(_sharded_apply_batch, static_argnames=_STATIC,
@@ -286,15 +295,21 @@ def _sharded_rounds_impl(
     insert_rows: jax.Array, n_inserts: jax.Array,
     *, c_max: int, n_shards: int,
     key_range: Optional[Tuple[float, float]] = None,
-    use_pallas: bool = False,
+    use_pallas: bool = False, placement=None,
 ) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
     """R sequential K-shard combined batches as ONE ``lax.scan`` program.
 
     Each scan step is the full :func:`_sharded_apply_batch` trace (route →
     frontier merge → phases 1–4 on all K shards → answer merge); the
     shard-grid Pallas kernels compose under the scan unchanged.  Returns
-    ``(state, outs (R, c_max), k_effs (R,))``.
+    ``(state, outs (R, c_max), k_effs (R,))``.  Under a ``MeshPlacement``
+    the scan moves INSIDE one shard_map body — R rounds stay one
+    dispatch AND one collective program (DESIGN.md §18).
     """
+    if placement is not None and placement.is_mesh:
+        return _mesh_rounds(
+            state, n_extracts, insert_rows, n_inserts, c_max=c_max,
+            n_shards=n_shards, key_range=key_range, placement=placement)
 
     def body(st, rnd):
         ne, vals, ni = rnd
@@ -348,7 +363,7 @@ def _sharded_mixed_impl(
     insert_rows: jax.Array, n_inserts: jax.Array,
     *, c_max: int, n_shards: int,
     key_range: Optional[Tuple[float, float]] = None,
-    use_pallas: bool = False,
+    use_pallas: bool = False, placement=None,
 ) -> Tuple[ShardedHeapState, jax.Array, jax.Array]:
     """R heterogeneous combining rounds as ONE donated scan program.
 
@@ -358,6 +373,10 @@ def _sharded_mixed_impl(
     ``n_extracts`` doubling as the peek width) inside a ``lax.cond`` —
     interleaved update and peek rounds cost one dispatch instead of one
     each.  Returns ``(state, outs (R, c_max), k_effs (R,))``."""
+    if placement is not None and placement.is_mesh:
+        return _mesh_mixed(
+            state, tags, n_extracts, insert_rows, n_inserts, c_max=c_max,
+            n_shards=n_shards, key_range=key_range, placement=placement)
 
     def body(st, rnd):
         tag, ne, vals, ni = rnd
@@ -386,6 +405,192 @@ sharded_mixed_rounds = jax.jit(_sharded_mixed_impl, static_argnames=_STATIC,
                                donate_argnums=(0,))
 sharded_mixed_rounds_undonated = jax.jit(_sharded_mixed_impl,
                                          static_argnames=_STATIC)
+
+
+# ---------------------------------------------------------------------------
+# Mesh placement (DESIGN.md §18): the K shard rows live on D devices
+# ---------------------------------------------------------------------------
+# Under a MeshPlacement each device holds K_local = K/D whole shard rows
+# of the (K, capacity) heap stack, and the combined batch runs as a
+# shard_map body: routing and the global candidate merge are computed
+# REPLICATED on every device (they are O(K·c_max), tiny), the per-shard
+# phases 1–4 run on the local rows only (the actual O(c log c + log n)
+# work — this is what scale-out parallelizes), and the two K-way merges
+# become collectives:
+#
+#   * frontier merge  — all_gather of the (K_local, c_max) candidate
+#     lists; device-major × row-major gather order makes global shard k
+#     = d·K_local + j, exactly the stacked flat order, so the merge
+#     sort, `chosen` mask and per-shard extract counts are bit-identical
+#     to the stacked trace;
+#   * answer merge    — all_gather of the per-shard extract rows + the
+#     same global sort;  k_eff's Σ size_k is a psum.
+#
+# Every device computes the same routing/e_counts from the same
+# replicated inputs, so no device ever disagrees on who extracts what —
+# the explicit-synchronization claim of the paper, now on real devices.
+# The Pallas shard-grid kernels assume the whole (K, capacity) stack in
+# one address space, so use_pallas composes with StackedPlacement only
+# (the wrapper refuses the combination at construction).
+from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as _P
+
+
+def _mesh_batch_body(a, size, n_extract, insert_vals, n_insert,
+                     *, c_max: int, n_shards: int, key_range, axis: str):
+    """One combined batch on the LOCAL K/D shard rows + collectives."""
+    K = n_shards
+    K_local, cap = a.shape
+    max_depth = int(np.ceil(np.log2(cap))) + 1
+    lane = jnp.arange(c_max, dtype=jnp.int32)
+    base = jax.lax.axis_index(axis) * K_local
+
+    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
+    n_insert = jnp.minimum(jnp.int32(n_insert), c_max)
+    insert_vals = _flush_subnormals(insert_vals.astype(jnp.float32))
+    ins_valid = lane < n_insert
+
+    # -- 1. route against GLOBAL shard ids; keep only the local rows
+    shard_of = jnp.where(ins_valid, _route(insert_vals, K, key_range), 0)
+    local_ids = base + jnp.arange(K_local, dtype=jnp.int32)
+    one_hot = (shard_of[None, :] == local_ids[:, None]) & ins_valid[None, :]
+    ins_rows = jnp.sort(jnp.where(one_hot, insert_vals[None, :], INF), axis=1)
+    ins_counts = jnp.sum(one_hot, axis=1).astype(jnp.int32)
+
+    # -- 2. local frontier candidates; global merge over the gathered
+    # lists (device-major order == stacked shard order, see above)
+    cand_ids, cand_vals = jax.vmap(
+        lambda ak, sk: _k_smallest(ak, sk, n_extract, c_max))(a, size)
+    flat_vals = jax.lax.all_gather(cand_vals, axis).reshape(-1)  # (K*c_max,)
+    flat_shard = jnp.repeat(jnp.arange(K, dtype=jnp.int32), c_max)
+    order = jnp.argsort(flat_vals)
+    chosen = (jnp.arange(K * c_max) < n_extract) & jnp.isfinite(
+        flat_vals[order])
+    e_counts = jax.ops.segment_sum(
+        chosen.astype(jnp.int32), flat_shard[order], num_segments=K)
+    e_local = jax.lax.dynamic_slice(e_counts, (base,), (K_local,))
+
+    # -- 3. phases 1–4 on the local shard rows (the vmapped XLA helpers,
+    # unchanged — the same per-shard trace the stacked program vmaps)
+    def prep(ak, sk, ek, row, ik, ids_k, vals_k):
+        lane_k = jnp.arange(c_max, dtype=jnp.int32)
+        p1 = (jnp.where(lane_k < ek, ids_k, 0),
+              jnp.where(lane_k < ek, vals_k, INF))
+        return _phases12(ak, sk, ek, row, ik, c_max=c_max, phase1=p1)
+
+    a2, size2, out_rows, _k_eff_k, starts, active, rem, m_left = jax.vmap(
+        prep)(a, size, e_local, ins_rows, ins_counts, cand_ids, cand_vals)
+    a3 = jax.vmap(_sift_wavefront)(a2, size2, starts, active)
+    new_a, new_size = jax.vmap(
+        lambda ak, sk, rk, mk: _phase4_xla(
+            ak, sk, rk, mk, c_max=c_max, max_depth=max_depth)
+    )(a3, size2, rem, m_left)
+
+    # -- 4. collective answer merge + global size total
+    merged = jnp.sort(jax.lax.all_gather(out_rows, axis).reshape(-1))[:c_max]
+    k_eff = jnp.minimum(n_extract, jax.lax.psum(jnp.sum(size), axis))
+    return new_a, new_size, merged, k_eff
+
+
+def _mesh_peek_body(a, size, n_extract, *, c_max: int, axis: str):
+    """Collective twin of :func:`_peek_min_impl`: local frontier
+    candidates, gathered and merge-sorted on every device."""
+    n_extract = jnp.minimum(jnp.int32(n_extract), c_max)
+    _ids, cand_vals = jax.vmap(
+        lambda ak, sk: _k_smallest(ak, sk, n_extract, c_max))(a, size)
+    flat = jnp.sort(jax.lax.all_gather(cand_vals, axis).reshape(-1))[:c_max]
+    merged = jnp.where(jnp.arange(c_max) < n_extract, flat, INF)
+    k_eff = jnp.minimum(n_extract, jax.lax.psum(jnp.sum(size), axis))
+    return merged, k_eff
+
+
+def _mesh_specs(placement):
+    ax = placement.axis
+    state_in = (_P(ax, None), _P(ax))
+    return ax, state_in
+
+
+def _mesh_apply_batch(state, n_extract, insert_vals, n_insert,
+                      *, c_max: int, n_shards: int, key_range, placement):
+    ax, st_specs = _mesh_specs(placement)
+
+    def body(a, size, ne, vals, ni):
+        return _mesh_batch_body(a, size, ne, vals, ni, c_max=c_max,
+                                n_shards=n_shards, key_range=key_range,
+                                axis=ax)
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P()),
+                    out_specs=st_specs + (_P(), _P()),
+                    check_rep=False)
+    new_a, new_size, merged, k_eff = fn(
+        state.a, state.size, n_extract, insert_vals, n_insert)
+    return ShardedHeapState(new_a, new_size), merged, k_eff
+
+
+def _mesh_rounds(state, n_extracts, insert_rows, n_inserts,
+                 *, c_max: int, n_shards: int, key_range, placement):
+    ax, st_specs = _mesh_specs(placement)
+
+    def body(a, size, ne_arr, bufs, ni_arr):
+        def step(carry, rnd):
+            a, size = carry
+            ne, vals, ni = rnd
+            a, size, merged, k_eff = _mesh_batch_body(
+                a, size, ne, vals, ni, c_max=c_max, n_shards=n_shards,
+                key_range=key_range, axis=ax)
+            return (a, size), (merged, k_eff)
+
+        (a, size), (outs, k_effs) = jax.lax.scan(
+            step, (a, size), (ne_arr, bufs, ni_arr))
+        return a, size, outs, k_effs
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P()),
+                    out_specs=st_specs + (_P(), _P()),
+                    check_rep=False)
+    a, size, outs, k_effs = fn(
+        state.a, state.size, n_extracts, insert_rows, n_inserts)
+    return ShardedHeapState(a, size), outs, k_effs
+
+
+def _mesh_mixed(state, tags, n_extracts, insert_rows, n_inserts,
+                *, c_max: int, n_shards: int, key_range, placement):
+    """Mixed megapass under the mesh: the tag cond nests inside the
+    shard_map scan — tags are replicated, so every device takes the same
+    branch and the branch collectives line up across the mesh."""
+    ax, st_specs = _mesh_specs(placement)
+
+    def body(a, size, tags, ne_arr, bufs, ni_arr):
+        def step(carry, rnd):
+            a, size = carry
+            tag, ne, vals, ni = rnd
+
+            def upd(ops):
+                return _mesh_batch_body(
+                    ops[0], ops[1], ne, vals, ni, c_max=c_max,
+                    n_shards=n_shards, key_range=key_range, axis=ax)
+
+            def rd(ops):
+                merged, k_eff = _mesh_peek_body(
+                    ops[0], ops[1], ne, c_max=c_max, axis=ax)
+                return ops[0], ops[1], merged, k_eff
+
+            a, size, merged, k_eff = jax.lax.cond(
+                tag == MEGA_READ, rd, upd, (a, size))
+            return (a, size), (merged, k_eff)
+
+        (a, size), (outs, k_effs) = jax.lax.scan(
+            step, (a, size), (tags, ne_arr, bufs, ni_arr))
+        return a, size, outs, k_effs
+
+    fn = _shard_map(body, mesh=placement.mesh,
+                    in_specs=st_specs + (_P(), _P(), _P(), _P()),
+                    out_specs=st_specs + (_P(), _P()),
+                    check_rep=False)
+    a, size, outs, k_effs = fn(
+        state.a, state.size, tags, n_extracts, insert_rows, n_inserts)
+    return ShardedHeapState(a, size), outs, k_effs
 
 
 # ---------------------------------------------------------------------------
@@ -454,6 +659,15 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
         overhead row), or ``None`` (guard exactly when a plan is given).
         Guarded dispatches snapshot the heap stack + occupancy mirror,
         restore bit-identically on failure and retry with backoff.
+      placement: shard layout (DESIGN.md §18) — ``None``/
+        ``StackedPlacement`` keeps all K rows on one device (the
+        original trace, bit-exact); ``MeshPlacement`` splits them
+        across a 1-D mesh and runs the fused passes under shard_map.
+        Requires ``K % D == 0`` and composes with everything above —
+        the occupancy guard's per-shard bounds ARE per-device bounds,
+        snapshots ``.copy()`` preserve the sharding, donation reuses
+        the per-device buffers in place — but not with ``use_pallas``
+        (the shard-grid kernels assume a single address space).
 
     Sync-free occupancy guard (DESIGN.md §10): the wrapper mirrors the
     device's insert routing on the host (bit-exact numpy twins) and keeps
@@ -472,11 +686,12 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
     structure = "pq"
     read_only: Set[str] = {"values", "peek_min"}
     supports_megapass = True
+    supports_placement = True
 
     def __init__(self, capacity: int, c_max: int, n_shards: int = 4,
                  values=None, key_range: Optional[Tuple[float, float]] = None,
                  use_pallas: bool = False, donate: bool = True,
-                 fault_plan=None, guard=None):
+                 fault_plan=None, guard=None, placement=None):
         if c_max < 1:
             raise ValueError("c_max must be >= 1")
         if n_shards < 1:
@@ -486,12 +701,20 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
         self.n_shards = int(n_shards)
         self.use_pallas = bool(use_pallas)
         self.donate = bool(donate)
+        self.placement = _placement.resolve_placement(placement)
+        self.placement.validate(self.n_shards)
+        self._pstatic = _placement.as_static(self.placement)
+        if self._pstatic is not None and self.use_pallas:
+            raise ValueError(
+                "use_pallas is not supported under MeshPlacement: the "
+                "shard-grid kernels assume the whole (K, capacity) stack "
+                "in one device's address space (DESIGN.md §18)")
         self.key_range = (
             (float(key_range[0]), float(key_range[1]))
             if key_range is not None else None)
         self.fault_plan = fault_plan
         self._guard = make_guard(fault_plan, guard)
-        self.state = self._init_state(values)
+        self.state = self.placement.put(self._init_state(values))
 
     def _init_state(self, values) -> ShardedHeapState:
         K, cap = self.n_shards, self.capacity
@@ -570,7 +793,8 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
             self.state, vals, k_eff = fn(
                 self.state, jnp.int32(ne), jnp.asarray(buf), jnp.int32(ni),
                 c_max=self.c_max, n_shards=self.n_shards,
-                key_range=self.key_range, use_pallas=self.use_pallas)
+                key_range=self.key_range, use_pallas=self.use_pallas,
+                placement=self._pstatic)
             return vals, k_eff
 
         if self._guard is None:
@@ -640,7 +864,7 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
             self.state, outs, _k = fn(
                 self.state, ne_arr, bufs, ni_arr, c_max=self.c_max,
                 n_shards=self.n_shards, key_range=self.key_range,
-                use_pallas=self.use_pallas)
+                use_pallas=self.use_pallas, placement=self._pstatic)
             return outs
 
         if self._guard is not None:
@@ -733,7 +957,7 @@ class ShardedBatchedPQ(substrate.BatchedStructure):
             self.state, outs, _k = fn(
                 self.state, tags, ne_arr, bufs, ni_arr, c_max=self.c_max,
                 n_shards=self.n_shards, key_range=self.key_range,
-                use_pallas=self.use_pallas)
+                use_pallas=self.use_pallas, placement=self._pstatic)
             return outs
 
         if self._guard is not None:
@@ -977,6 +1201,10 @@ substrate.register(substrate.StructureSpec(
     bench_smoke=("--size", "20000", "--threads", "1", "2", "4",
                  "--ops", "150"),
     extras={"serve_kw": dict(capacity=4096, c_max=16, n_shards=4),
+            # ctor accepts placement= (DESIGN.md §18); serve.py keys
+            # --mesh-shards eligibility off this marker, and the
+            # placement tests pin it to the class attribute
+            "placement": True,
             # reads the megapass conformance stage drives: peek_min can
             # ride the fused scan ("values" dumps the whole heap stack)
             "megapass_read": lambda rng, k, ctx: (["peek_min"] * k,

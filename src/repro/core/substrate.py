@@ -60,8 +60,16 @@ class BatchedStructure:
     read_only: Set[str] = frozenset()
     # True on structures whose mixed_rounds() fuses the whole round list
     # into ONE donated scan program (DESIGN.md §17); the base fallback
-    # below dispatches one program per round instead.
+    # below dispatches one program per round instead.  Every structure
+    # MUST declare its value explicitly (the conformance kit asserts the
+    # registry's megapass flag matches this attribute AND the observed
+    # dispatch behavior — a spec cannot lie silently).
     supports_megapass: bool = False
+    # True on structures whose constructor accepts ``placement=`` (the
+    # DESIGN.md §18 shard-layout knob: StackedPlacement / MeshPlacement)
+    # and whose fused passes have a shard_map twin.  The conformance
+    # kit's placement-parity stage runs exactly on these.
+    supports_placement: bool = False
 
     # -- required ------------------------------------------------------------
     def update_batch_async(self, methods: Sequence[str],
@@ -167,7 +175,8 @@ class StructureSpec:
     """Everything downstream layers need to know about one workload.
 
     ``make(**kw)`` accepts the uniform knob set (``donate``,
-    ``use_pallas``, ``fault_plan``, ``guard``, plus per-structure sizing
+    ``use_pallas``, ``fault_plan``, ``guard``, ``placement`` on
+    structures with ``supports_placement``, plus per-structure sizing
     overrides) and returns a fresh :class:`BatchedStructure`;
     ``make_host(ds)`` returns a state-equal host oracle/mirror for the
     adaptive tier (DESIGN.md §14) and the differential batteries.

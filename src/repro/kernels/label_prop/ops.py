@@ -93,18 +93,64 @@ def _fixpoint(step_fn, labels0: jax.Array) -> jax.Array:
     return l
 
 
+def _cc_collective(eu: jax.Array, ev: jax.Array, *, n: int, placement):
+    """Mesh-parallel fixpoint (DESIGN.md §18): EDGES split across the D
+    devices, one full label table per device.
+
+    Each iteration every device scatter-mins its edge block into its
+    label copy, a ``pmin`` merges the D partial tables, and the pointer
+    jump runs replicated.  Per-iteration this equals
+    :func:`label_step_xla` element-wise — min is associative and
+    commutative, so min-reducing per-block scatters then pmin-reducing
+    across blocks is the same table as one global scatter-min — hence
+    the fixpoint (and its iteration count) is bit-identical to the
+    stacked trace.  The whole while_loop lives INSIDE one shard_map
+    body: D devices, one program, no per-iteration re-dispatch.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    ax = placement.axis
+    d = placement.n_devices
+    (e,) = eu.shape
+    e_pad = _ceil_to(max(e, 1), d)
+    # pad with (0, 0) self-loops — the sanitized-edge no-op
+    eu_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(eu.astype(jnp.int32))
+    ev_p = jnp.zeros((e_pad,), jnp.int32).at[:e].set(ev.astype(jnp.int32))
+
+    def body(eu_blk, ev_blk):
+        def step(l):
+            m = jnp.minimum(l[eu_blk], l[ev_blk])
+            s = l.at[eu_blk].min(m).at[ev_blk].min(m)
+            s = jax.lax.pmin(s, ax)
+            return jnp.minimum(s, l[s])
+
+        return _fixpoint(step, jnp.arange(n, dtype=jnp.int32))
+
+    fn = shard_map(body, mesh=placement.mesh,
+                   in_specs=(P(ax), P(ax)), out_specs=P(),
+                   check_rep=False)
+    return fn(eu_p, ev_p)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n", "n_shards", "use_pallas",
-                                    "interpret"))
+                                    "interpret", "placement"))
 def connected_components(eu: jax.Array, ev: jax.Array, *, n: int,
                          n_shards: int = 1, use_pallas: bool = False,
-                         interpret: Optional[bool] = None) -> jax.Array:
+                         interpret: Optional[bool] = None,
+                         placement=None) -> jax.Array:
     """Component-min labels of the graph on [0, n) with the given edges.
 
     eu/ev: (E,) i32 endpoints, invalid slots sanitized to (0, 0).
     ``use_pallas`` iterates the shard-grid kernel; otherwise the XLA twin.
     Both paths are bit-exact per iteration, hence at the fixpoint.
+    ``placement`` (static): a ``MeshPlacement`` runs the edge-partitioned
+    collective fixpoint (:func:`_cc_collective`) instead; ``None``/
+    stacked keeps the single-device trace.
     """
+    if placement is not None and placement.is_mesh:
+        return _cc_collective(eu, ev, n=n, placement=placement)
     labels0 = jnp.arange(n, dtype=jnp.int32)
     if use_pallas:
         step = functools.partial(label_step, eu=eu, ev=ev,

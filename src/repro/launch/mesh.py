@@ -38,6 +38,29 @@ def make_mesh_for_world(n_devices: int, *, model_parallel: int = 1,
     return jax.make_mesh((data, model_parallel), ("data", "model"))
 
 
+def make_combining_mesh(n_shards: int, devices=None):
+    """1-D ``("shard",)`` mesh for the combining tier (DESIGN.md §18).
+
+    Places the K shard rows of a sharded structure across ``D`` devices,
+    where ``D`` is the LARGEST divisor of ``n_shards`` that fits the
+    current world size — the shard_map bodies need ``K % D == 0`` (every
+    device holds K/D whole shard rows), and a divisor always exists
+    (D=1 degenerates to a one-device mesh whose collective twin is still
+    exercised, the tier-1 parity anchor).  A function, not a constant,
+    for the same reason as ``make_production_mesh``: importing this
+    module must never touch jax device state.
+    """
+    import numpy as np
+
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    devices = list(devices) if devices is not None else jax.devices()
+    world = len(devices)
+    d = max(g for g in range(1, min(world, n_shards) + 1)
+            if n_shards % g == 0)
+    return jax.sharding.Mesh(np.asarray(devices[:d]), ("shard",))
+
+
 def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str, Optional[str]]:
     """(dp_axes, tensor_axis, pod_axis-or-None) for a production mesh."""
     names = mesh.axis_names

@@ -175,6 +175,7 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
                 rounds_cap: int = 4,
                 tier: str = "eliminate",
                 megapass: bool = False,
+                mesh_shards: Optional[int] = None,
                 fault_plan: Optional[FaultPlan] = None) -> Dict[str, Any]:
     """Drive ``sessions`` concurrent client sessions through a scheduler.
 
@@ -211,6 +212,16 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     alternating update/read dispatch pair (structure workloads only;
     the decode workload ignores it).
 
+    ``mesh_shards``: place the workload's K shards across a real device
+    mesh (DESIGN.md §18).  Sets K to this value, builds the 1-D
+    ``("shard",)`` combining mesh from the current world size
+    (``make_combining_mesh`` — D = largest divisor of K that fits, so a
+    1-device world degenerates gracefully), and threads the resulting
+    ``MeshPlacement`` into BOTH the workload structure (structure
+    workloads advertising placement support — refused loudly otherwise)
+    and the PC scheduler's deadline PQ.  Incompatible with the
+    "pc-pallas" scheduler (the kernels assume the stacked layout).
+
     ``fault_plan``: optional deterministic :class:`FaultPlan`
     (DESIGN.md §15) shared between the workload structure (transactional
     guarded dispatch in the graph/map executors) and the PC scheduler
@@ -219,6 +230,14 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
     state land in the returned ``faults`` stats entry.
     """
     rng = np.random.default_rng(seed)
+    mesh_pl = None
+    if mesh_shards is not None:
+        from repro.core import placement as _placement
+        from repro.launch.mesh import make_combining_mesh
+
+        if mesh_shards < 1:
+            raise ValueError("--mesh-shards must be >= 1")
+        mesh_pl = _placement.MeshPlacement(make_combining_mesh(mesh_shards))
     if workload != "decode" and substrate.try_get(workload) is not None:
         spec = substrate.get(workload)
         if not spec.serve:
@@ -230,6 +249,13 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
             serve_kw.setdefault("edge_capacity", 16 * n_vertices)
         use_pallas = scheduler == "pc-pallas" or (
             workload == "graph" and graph_use_pallas)
+        if mesh_pl is not None:
+            if not spec.extras.get("placement"):
+                raise ValueError(
+                    f"workload {workload!r} does not support --mesh-shards "
+                    "(no placement= constructor knob)")
+            serve_kw["n_shards"] = mesh_shards
+            serve_kw["placement"] = mesh_pl
         ex: Any = StructureExecutor(
             spec, megapass=megapass, use_pallas=use_pallas,
             donate=scheduler != "pc-nodonate", fault_plan=fault_plan,
@@ -251,11 +277,17 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         raise ValueError(f"unknown workload {workload!r}")
 
     if scheduler in ("pc", "pc-async", "pc-nodonate", "pc-pallas"):
+        sch_kw: Dict[str, Any] = {}
+        if mesh_pl is not None:
+            # the deadline PQ rides the same mesh: its K must match the
+            # mesh the placement was built from (K % D == 0 by
+            # construction of make_combining_mesh)
+            sch_kw = dict(n_shards=mesh_shards, pq_placement=mesh_pl)
         sch = PCScheduler(ex, max_batch=max_batch, use_pq=True,
                           pq_donate=scheduler != "pc-nodonate",
                           pq_use_pallas=scheduler == "pc-pallas",
                           rounds_cap=rounds_cap, tier=tier,
-                          fault_plan=fault_plan)
+                          fault_plan=fault_plan, **sch_kw)
     elif scheduler == "serial":
         sch = SerialScheduler(ex)
     else:
@@ -298,6 +330,9 @@ def run_serving(arch_id: str = "qwen2_0_5b", *, sessions: int = 8,
         if scheduler != "serial" else 1.0,
         "tier_decisions": dict(getattr(sch, "tier_decisions", {})),
     }
+    if mesh_pl is not None:
+        stats["placement"] = mesh_pl.describe()
+        stats["mesh_devices"] = mesh_pl.n_devices
     if getattr(ex, "megapass_dispatches", 0):
         stats["megapass_dispatches"] = ex.megapass_dispatches
         stats["rounds_per_dispatch"] = round(
@@ -352,6 +387,14 @@ def main():
     ap.add_argument("--megapass", action="store_true",
                     help="fuse each structure pass's update+read rounds "
                          "into one mixed_rounds dispatch (DESIGN.md §17)")
+    ap.add_argument("--mesh-shards", type=int, default=None, metavar="K",
+                    help="place K shards across a real device mesh "
+                         "(DESIGN.md §18): builds the 1-D combining mesh "
+                         "from the current world size and threads the "
+                         "MeshPlacement into the workload structure and "
+                         "the scheduler's deadline PQ; run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to fake an N-device host")
     ap.add_argument("--tier",
                     choices=["auto", "host", "device", "eliminate"],
                     default="eliminate",
@@ -381,6 +424,7 @@ def main():
                         read_pct=args.read_pct,
                         rounds_cap=args.rounds_cap, tier=args.tier,
                         megapass=args.megapass,
+                        mesh_shards=args.mesh_shards,
                         fault_plan=build_fault_plan(args))
     print("[serve]", stats)
 

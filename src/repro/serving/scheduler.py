@@ -130,6 +130,12 @@ class PCScheduler:
         shard-grid Pallas kernels (DESIGN.md §10).
       pq_donate: zero-copy (donated) PQ dispatch (default); False is the
         copy-per-pass ablation twin (EXPERIMENTS §Ablations).
+      pq_placement: shard layout for the deadline PQ (DESIGN.md §18).
+        None keeps the stacked leading-axis-K default; a
+        ``MeshPlacement`` places the K shards across its device mesh and
+        routes the fused passes through the shard_map collective twins
+        (``serve.py --mesh-shards``).  Mutually exclusive with
+        ``pq_use_pallas`` (the kernels assume the stacked layout).
       rounds_cap: cap R on the adaptive multi-round fused dispatch
         (DESIGN.md §12) — one ordering pass may choose up to
         ``rounds_cap · max_batch`` requests (eliminated + extracted) and
@@ -159,7 +165,8 @@ class PCScheduler:
                  max_batch: int = 16, use_pq: bool = True,
                  pq_capacity: int = 1 << 16, n_shards: int = 4,
                  pipeline: bool = True, pq_use_pallas: bool = False,
-                 pq_donate: bool = True, rounds_cap: int = 4,
+                 pq_donate: bool = True, pq_placement=None,
+                 rounds_cap: int = 4,
                  tier: str = "eliminate",
                  router: Optional[TierRouter] = None,
                  fault_plan: Optional[FaultPlan] = None,
@@ -191,6 +198,7 @@ class PCScheduler:
                                  n_shards=n_shards,
                                  use_pallas=pq_use_pallas,
                                  donate=pq_donate,
+                                 placement=pq_placement,
                                  guard=pq_guard)
             self._pq = ShardedBatchedPQ(**self._pq_ctor)
             # persistent key→request table: a key is inserted into the

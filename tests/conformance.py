@@ -329,6 +329,23 @@ def check_megapass_vs_sequential(spec: StructureSpec, *, seed: int = 37,
     rng = np.random.default_rng(seed)
     ds_m = (make or spec.make)()
     ds_s = (make or spec.make)()
+    # the registry flag, the class attribute, and the observed dispatch
+    # shape must agree — a spec cannot lie about fusion (satellite of
+    # ISSUE-10; previously an undeclared attribute defaulted silently)
+    declared = bool(getattr(type(ds_m), "supports_megapass", False))
+    assert spec.megapass == declared, \
+        (f"{spec.name}: registry megapass={spec.megapass} but the class "
+         f"declares supports_megapass={declared}")
+    if not declared:
+        assert type(ds_m).mixed_rounds \
+            is _substrate.BatchedStructure.mixed_rounds, \
+            (f"{spec.name}: declares supports_megapass=False yet "
+             "overrides mixed_rounds — flag contradicts behavior")
+    else:
+        assert type(ds_m).mixed_rounds \
+            is not _substrate.BatchedStructure.mixed_rounds, \
+            (f"{spec.name}: declares supports_megapass=True but rides "
+             "the base per-round fallback — flag contradicts behavior")
     # oracle seeded from the SEQUENTIAL twin: fetching ds_m's state here
     # would pin a host view of its initial buffers (jax caches the
     # zero-copy numpy image on the Array) and silently defeat the
@@ -390,6 +407,111 @@ def check_megapass_vs_sequential(spec: StructureSpec, *, seed: int = 37,
     if spec.dump_compare is not None:
         spec.dump_compare(ds_m, oracle)
         spec.dump_compare(ds_s, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Placement parity: MeshPlacement ≡ StackedPlacement (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+def check_placement_parity(spec: StructureSpec, *, seed: int = 53,
+                           iters: int = 12) -> bool:
+    """Structures advertising ``supports_placement`` must be bit-exact
+    twins across shard layouts: the SAME seeded update/read traffic
+    through a ``MeshPlacement`` built from the CURRENT world (a 1-device
+    world still compiles and runs every collective — degenerate mesh)
+    and through the stacked default must return identical results and
+    land every device state leaf element-wise identical, refusals
+    included (atomic on both sides), the fused megapass included, and
+    fault-injected snapshot/restore included (the PR-7 guard must roll
+    sharded state back exactly).  Returns False (no-op) for structures
+    without the flag so callers can skip visibly."""
+    from repro.core import placement as _placement
+    from repro.launch.mesh import make_combining_mesh
+
+    ds_s = spec.make()
+    if not getattr(ds_s, "supports_placement", False):
+        return False
+    n_shards = int(getattr(ds_s, "n_shards", 1))
+    pl = _placement.MeshPlacement(make_combining_mesh(n_shards))
+    ds_m = spec.make(placement=pl)
+    rng = np.random.default_rng(seed)
+    ctx = spec.new_ctx()
+
+    def _states_agree(tag):
+        for idx, (a, b) in enumerate(zip(
+                jax.tree_util.tree_leaves(ds_s.state),
+                jax.tree_util.tree_leaves(ds_m.state))):
+            np.testing.assert_array_equal(
+                np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b)),
+                err_msg=(f"{spec.name}: placement twins diverged "
+                         f"({tag}, leaf {idx}, {pl.describe()})"))
+
+    # identical batches fed to BOTH twins (one rng, one ctx — generate
+    # once, apply twice)
+    for it in range(iters):
+        k = int(rng.integers(0, 12))
+        if rng.random() < 0.6:
+            m, i = spec.gen_update(rng, k, ctx)
+            got_s = ds_s.update_batch(list(m), list(i))
+            got_m = ds_m.update_batch(list(m), list(i))
+        else:
+            m, i = spec.gen_read(rng, k, ctx)
+            got_s = ds_s.read_batch(list(m), list(i))
+            got_m = ds_m.read_batch(list(m), list(i))
+        assert len(got_s) == len(got_m) == len(m)
+        for mm, a, b in zip(m, got_s, got_m):
+            assert spec.result_ok(mm, a, b), \
+                (spec.name, "placement parity", it, mm, a, b)
+        _states_agree(f"iter {it}")
+
+    # refusal parity: both twins refuse the SAME probe atomically
+    if spec.refusal_batch is not None:
+        bm, bi = spec.refusal_batch(ds_m)
+        before = _fingerprint(ds_m)
+        for twin in (ds_s, ds_m):
+            raised = False
+            try:
+                twin.update_batch(list(bm), list(bi))
+            except ValueError:
+                raised = True
+            assert raised, \
+                f"{spec.name}: refusal probe accepted under placement"
+        after = _fingerprint(ds_m)
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(
+                b, a,
+                err_msg=f"{spec.name}: mesh refusal was not atomic")
+        _states_agree("post-refusal")
+
+    # megapass parity: one fused dispatch each, same tagged round list
+    gen_read = spec.extras.get("megapass_read", spec.gen_read)
+    c_max = int(getattr(ds_s, "c_max", 8))
+    rounds = []
+    for r in range(4):
+        k = int(rng.integers(1, c_max + 3))
+        m, i = (spec.gen_update if r % 2 == 0 else gen_read)(rng, k, ctx)
+        rounds.append(("update" if r % 2 == 0 else "read",
+                       list(m), list(i)))
+    got_s = [h.result() for h in ds_s.mixed_rounds(rounds)]
+    got_m = [h.result() for h in ds_m.mixed_rounds(rounds)]
+    for (kind, m, _), r_s, r_m in zip(rounds, got_s, got_m):
+        for mm, a, b in zip(m, r_s, r_m):
+            assert spec.result_ok(mm, a, b), \
+                (spec.name, "placement megapass parity", kind, mm, a, b)
+    _states_agree("post-megapass")
+
+    # restore parity: injected dispatch failures on the SHARDED twin
+    # must roll back sharded buffers exactly (the PR-7 snapshot is a
+    # placement-preserving ``.copy()``) — the oracle sees exactly-once
+    plan = FaultPlan(seed=seed, dispatch_fail_rate=0.2)
+    ds_f = spec.make(placement=pl, fault_plan=plan)
+    oracle = spec.make_host(ds_f)
+    run_differential(ds_f, oracle, spec, np.random.default_rng(seed + 1),
+                     25)
+    assert plan.counters.faults_injected > 0, \
+        f"{spec.name}: placement fault probe never fired — vacuous"
+    assert plan.counters.snapshot()["restores"] > 0, \
+        f"{spec.name}: mesh-placed failures were never rolled back"
+    return True
 
 
 # ---------------------------------------------------------------------------

@@ -21,8 +21,8 @@ import pytest
 from conformance import (check_atomic_refusal, check_differential,
                          check_donation, check_fault_exactly_once,
                          check_megapass_vs_sequential, check_one_sync,
-                         check_rounds_equiv, count_fetches,
-                         run_differential)
+                         check_placement_parity, check_rounds_equiv,
+                         count_fetches, run_differential)
 
 from repro.core import substrate
 
@@ -72,6 +72,17 @@ def test_rounds_equiv(spec):
 
 def test_megapass_vs_sequential(spec):
     check_megapass_vs_sequential(spec)
+
+
+def test_placement_parity(spec):
+    """Mesh-placed twin ≡ stacked twin (DESIGN.md §18) on every
+    structure advertising ``supports_placement``.  On a 1-device world
+    the mesh is degenerate but every collective still compiles and
+    runs — the tier-1 anchor; CI's ``mesh`` job re-runs the battery
+    under a forced 4-device host platform."""
+    ran = check_placement_parity(spec)
+    if not ran:
+        pytest.skip(f"{spec.name} does not support placement")
 
 
 @pytest.mark.faults

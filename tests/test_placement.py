@@ -1,0 +1,264 @@
+"""Placement-layer tests (DESIGN.md §18): ``StackedPlacement`` vs
+``MeshPlacement`` twins must be element-wise identical.
+
+The mesh twin routes every fused pass through ``shard_map`` with K-way
+merges as collectives (``all_gather``/``psum``/``pmin``).  Bit-exactness
+holds because the global shapes stay (K, cap) under both layouts and the
+gathered reductions replay the IDENTICAL stacked reduction code on
+identical arrays — so these tests assert exact equality, not tolerance.
+
+On a 1-device world (tier-1 containers) ``make_combining_mesh`` returns
+the degenerate D=1 mesh: every collective still compiles and runs, which
+anchors the parity contract.  The CI ``mesh`` job re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to put D=2 and
+D=4 placements on genuinely distinct devices; the D>1-only cases skip on
+smaller worlds.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import placement, substrate
+from repro.launch.mesh import make_combining_mesh
+
+substrate.load_builtins()
+
+WORLD = jax.device_count()
+mesh4 = pytest.mark.skipif(
+    WORLD < 4,
+    reason="needs a 4-device world "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+# the structures whose constructors take placement= (ISSUE-10 tentpole);
+# test_placed_set_matches_registry pins this list to reality
+PLACED = ["pq", "map", "graph"]
+
+
+# ---------------------------------------------------------------------------
+# The placement layer itself
+# ---------------------------------------------------------------------------
+def test_resolve_placement_default():
+    pl = placement.resolve_placement(None)
+    assert isinstance(pl, placement.StackedPlacement)
+    assert not pl.is_mesh and pl.n_devices == 1
+    assert placement.as_static(pl) is None          # stacked jit caches
+    pl.validate(7)                                  # any K is fine
+    tree = {"a": np.arange(4)}
+    assert pl.put(tree) is tree                     # identity, no copies
+    assert pl.describe() == "stacked"
+
+
+def test_resolve_placement_rejects_junk():
+    with pytest.raises(TypeError):
+        placement.resolve_placement("mesh")
+
+
+def test_mesh_placement_axis_validation():
+    mesh = make_combining_mesh(4)
+    with pytest.raises(ValueError, match="axes"):
+        placement.MeshPlacement(mesh, axis="nope")
+    pl = placement.MeshPlacement(mesh)
+    assert pl.is_mesh and pl.axis == "shard"
+    assert pl.n_devices == mesh.shape["shard"]
+    assert placement.as_static(pl) is pl            # mesh IS the static key
+    hash(pl)                                        # usable as a jit static
+
+
+def test_mesh_placement_divisibility():
+    pl = placement.MeshPlacement(make_combining_mesh(4))
+    d = pl.n_devices
+    pl.validate(4 * d)                              # multiples pass
+    if d > 1:
+        with pytest.raises(ValueError, match="divisible|divide"):
+            pl.validate(d + 1)
+
+
+def test_make_combining_mesh_divisor_rule():
+    """D = largest divisor of n_shards that fits the world; 1-D axis."""
+    for k in (1, 2, 3, 4, 6, 8):
+        mesh = make_combining_mesh(k)
+        assert mesh.axis_names == ("shard",)
+        d = mesh.shape["shard"]
+        assert k % d == 0
+        # no larger admissible divisor exists
+        assert not any(k % g == 0 for g in range(d + 1, min(WORLD, k) + 1))
+    with pytest.raises(ValueError):
+        make_combining_mesh(0)
+
+
+def test_make_combining_mesh_explicit_devices():
+    """The largest-divisor rule against explicit device lists."""
+    devs = jax.devices()
+    for world, k, want in ((1, 6, 1), (len(devs), 1, 1)):
+        mesh = make_combining_mesh(k, devices=devs[:world])
+        assert mesh.shape["shard"] == want
+    if WORLD >= 4:
+        assert make_combining_mesh(6, devices=devs[:4]).shape["shard"] == 3
+        assert make_combining_mesh(8, devices=devs[:4]).shape["shard"] == 4
+        assert make_combining_mesh(4, devices=devs[:3]).shape["shard"] == 2
+
+
+def test_placed_set_matches_registry():
+    """The class attribute, the registry extras marker serve.py keys
+    --mesh-shards off, and this file's PLACED list must all agree."""
+    for name in sorted(substrate.names()):
+        spec = substrate.get(name)
+        ds = spec.make()
+        assert getattr(ds, "supports_placement", False) == (name in PLACED), \
+            name
+        assert bool(spec.extras.get("placement")) == (name in PLACED), name
+
+
+# ---------------------------------------------------------------------------
+# Constructor contracts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", PLACED)
+def test_pallas_refuses_mesh(name):
+    """use_pallas kernels assume the stacked single-device layout — the
+    combination must be refused loudly at construction."""
+    pl = placement.MeshPlacement(make_combining_mesh(4))
+    with pytest.raises(ValueError, match="[Pp]allas"):
+        substrate.get(name).make(n_shards=4, placement=pl, use_pallas=True)
+
+
+@mesh4
+@pytest.mark.parametrize("name", ["pq", "map"])
+def test_ctor_rejects_indivisible_k(name):
+    """K=6 over a hand-built 4-device mesh: no whole-rows-per-device
+    layout exists, the constructor must refuse."""
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:4]), ("shard",))
+    pl = placement.MeshPlacement(mesh)
+    with pytest.raises(ValueError, match="divisible|divide"):
+        substrate.get(name).make(n_shards=6, placement=pl)
+
+
+# ---------------------------------------------------------------------------
+# Parity: identical traffic through both twins, exact equality
+# ---------------------------------------------------------------------------
+def _drive_twins(name, *, k_shards, iters=12, seed=404):
+    spec = substrate.get(name)
+    pl = placement.MeshPlacement(make_combining_mesh(k_shards))
+    ds_s = spec.make(n_shards=k_shards)
+    ds_m = spec.make(n_shards=k_shards, placement=pl)
+    rng = np.random.default_rng(seed)
+    ctx = spec.new_ctx()
+    for it in range(iters):
+        k = int(rng.integers(0, 11))
+        if rng.random() < 0.6:
+            m, i = spec.gen_update(rng, k, ctx)
+            got_s = ds_s.update_batch(list(m), list(i))
+            got_m = ds_m.update_batch(list(m), list(i))
+        else:
+            m, i = spec.gen_read(rng, k, ctx)
+            got_s = ds_s.read_batch(list(m), list(i))
+            got_m = ds_m.read_batch(list(m), list(i))
+        for mm, a, b in zip(m, got_s, got_m):
+            assert spec.result_ok(mm, a, b), (name, it, mm, a, b)
+        for idx, (a, b) in enumerate(zip(
+                jax.tree_util.tree_leaves(ds_s.state),
+                jax.tree_util.tree_leaves(ds_m.state))):
+            np.testing.assert_array_equal(
+                np.asarray(jax.device_get(a)),
+                np.asarray(jax.device_get(b)),
+                err_msg=f"{name}: leaf {idx} diverged at iter {it}")
+    return spec, ds_s, ds_m, rng, ctx
+
+
+@pytest.mark.parametrize("name", PLACED)
+def test_parity_current_world(name):
+    """K=4 parity at whatever D the current world admits (D=1 on tier-1
+    containers, D=4 under the CI mesh job) — plus refusal atomicity and
+    megapass agreement on the same twins."""
+    spec, ds_s, ds_m, rng, ctx = _drive_twins(name, k_shards=4)
+
+    # refusal parity: both twins refuse, mesh state stays bit-identical
+    if spec.refusal_batch is not None:
+        bm, bi = spec.refusal_batch(ds_m)
+        before = [np.asarray(jax.device_get(x))
+                  for x in jax.tree_util.tree_leaves(ds_m.state)]
+        for twin in (ds_s, ds_m):
+            with pytest.raises(ValueError):
+                twin.update_batch(list(bm), list(bi))
+        after = [np.asarray(jax.device_get(x))
+                 for x in jax.tree_util.tree_leaves(ds_m.state)]
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(
+                b, a, err_msg=f"{name}: mesh refusal was not atomic")
+
+    # megapass parity: one fused dispatch each over the same rounds
+    gen_read = spec.extras.get("megapass_read", spec.gen_read)
+    rounds = []
+    for r in range(4):
+        kk = int(rng.integers(1, 10))
+        m, i = (spec.gen_update if r % 2 == 0 else gen_read)(rng, kk, ctx)
+        rounds.append(("update" if r % 2 == 0 else "read",
+                       list(m), list(i)))
+    got_s = [h.result() for h in ds_s.mixed_rounds(rounds)]
+    got_m = [h.result() for h in ds_m.mixed_rounds(rounds)]
+    for (kind, m, _), r_s, r_m in zip(rounds, got_s, got_m):
+        for mm, a, b in zip(m, r_s, r_m):
+            assert spec.result_ok(mm, a, b), (name, "megapass", kind, mm)
+    for a, b in zip(jax.tree_util.tree_leaves(ds_s.state),
+                    jax.tree_util.tree_leaves(ds_m.state)):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b)),
+            err_msg=f"{name}: megapass diverged across placements")
+
+
+@mesh4
+@pytest.mark.parametrize("name", PLACED)
+def test_parity_k8_d4(name):
+    """Two whole shard rows per device (K=8, D=4): the K_local>1 slab
+    paths — local vmap over rows, base-offset global ids — on real
+    distinct devices."""
+    _drive_twins(name, k_shards=8, iters=8, seed=808)
+
+
+@mesh4
+def test_mesh_state_actually_sharded_and_survives_donation():
+    """The placement must be real: leading-K leaves carry a
+    ``NamedSharding`` over the shard axis, and the donated fused passes
+    preserve it (donation reuses the sharded buffers in place)."""
+    spec = substrate.get("map")
+    pl = placement.MeshPlacement(make_combining_mesh(4))
+    ds = spec.make(n_shards=4, placement=pl)
+    rng = np.random.default_rng(11)
+    ctx = spec.new_ctx()
+    for _ in range(3):
+        m, i = spec.gen_update(rng, 7, ctx)
+        ds.update_batch(list(m), list(i))
+    for leaf in jax.tree_util.tree_leaves(ds.state):
+        sh = leaf.sharding
+        assert isinstance(sh, NamedSharding), leaf.shape
+        assert sh.spec[0] == "shard", (leaf.shape, sh.spec)
+        assert len(sh.mesh.devices.ravel()) == 4
+
+
+@mesh4
+def test_restore_preserves_mesh_placement():
+    """PR-7 snapshot/restore on a mesh-placed structure: after an
+    injected dispatch failure is rolled back, the state must still be
+    device-placed (not silently gathered to host/stacked)."""
+    from repro.core.faults import FaultPlan
+
+    spec = substrate.get("map")
+    pl = placement.MeshPlacement(make_combining_mesh(4))
+    plan = FaultPlan(seed=5, dispatch_fail_rate=0.5)
+    ds = spec.make(n_shards=4, placement=pl, fault_plan=plan)
+    oracle = spec.make_host(ds)
+    rng = np.random.default_rng(5)
+    ctx = spec.new_ctx()
+    for _ in range(10):
+        m, i = spec.gen_update(rng, 6, ctx)
+        got = ds.update_batch(list(m), list(i))
+        want = (oracle.update_batch(list(m), list(i))
+                if hasattr(oracle, "update_batch")
+                else [oracle.apply(mm, ii) for mm, ii in zip(m, i)])
+        for mm, g, w in zip(m, got, want):
+            assert spec.result_ok(mm, g, w), (mm, g, w)
+    assert plan.counters.snapshot()["restores"] > 0, \
+        "fault plan never rolled back — probe is vacuous"
+    for leaf in jax.tree_util.tree_leaves(ds.state):
+        assert isinstance(leaf.sharding, NamedSharding)
+        assert leaf.sharding.spec[0] == "shard"
